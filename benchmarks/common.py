@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timed runs + CSV emission.
+
+Output convention (benchmarks/run.py): ``name,us_per_call,derived`` lines,
+where ``derived`` carries the figure-specific quantity (storage GB, speedup
+factor, ...).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, repeat: int = 5, drop_extremes: bool = True, **kw):
+    """Paper §5.1 protocol: repeat, drop min/max, average the rest."""
+    times = []
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    if drop_extremes and len(times) >= 4:
+        times = sorted(times)[1:-1]
+    return float(np.mean(times)), out
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

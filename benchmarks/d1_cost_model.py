@@ -1,0 +1,47 @@
+"""Paper Appendix D.1: the checkout cost model — checkout time is LINEAR in
+|R_k| (the record count of the version's partition).
+
+TPU analogue: the gather kernel's bytes-touched is linear in the tile count;
+on the host path we measure wall time vs |R_k| and report the linear fit R².
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import emit
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    d = 64
+    sizes = [1 << k for k in range(10, 17)]          # 1k .. 64k rows
+    rlist_frac = 0.5
+    xs, ts = [], []
+    for r in sizes:
+        block = rng.integers(0, 127, size=(r, d), dtype=np.int32)
+        n = int(r * rlist_frac)
+        rids = np.sort(rng.choice(r, size=n, replace=False))
+        # warm
+        ops.checkout_gather(block, rids[:8])
+        t0 = time.perf_counter()
+        out = ops.checkout_gather(block, rids, use_kernel=False)
+        np.asarray(out)
+        t = time.perf_counter() - t0
+        xs.append(r)
+        ts.append(t)
+        emit(f"d1_gather_R{r}", t * 1e6, f"rlist={n}")
+    # linear fit quality
+    A = np.vstack([xs, np.ones(len(xs))]).T
+    coef, res, *_ = np.linalg.lstsq(A, np.asarray(ts), rcond=None)
+    pred = A @ coef
+    ss_tot = np.sum((ts - np.mean(ts)) ** 2)
+    r2 = 1 - (np.sum((ts - pred) ** 2) / max(ss_tot, 1e-18))
+    emit("d1_linear_fit", 0.0, f"R2={r2:.4f};slope_us_per_row={coef[0]*1e6:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Figures 10-11: partitioning-algorithm running time for Problem 1
+(binary search to a γ=2|R| budget): LYRESPLIT vs AGGLO vs KMEANS.
+
+The paper's claim at Postgres scale: 10^3x vs AGGLO, >10^5x vs KMEANS.  At
+CPU-test scale the gap is smaller but must be orders of magnitude; we emit
+the speedup factors as the derived quantity.
+"""
+from __future__ import annotations
+
+from repro.core import generate, lyresplit_for_budget, to_tree
+from repro.core.baselines import agglo_for_budget, kmeans_for_budget
+
+from .common import emit
+
+SCALES = [("SCI", 100, 50), ("SCI", 200, 100), ("CUR", 100, 50)]
+
+
+def main() -> None:
+    for kind, nv, ins in SCALES:
+        w = generate(kind, n_versions=nv, inserts=ins, n_branches=10,
+                     n_attrs=4, seed=3)
+        gamma = 2.0 * w.n_records
+        tree, _ = to_tree(w.graph, w.vgraph)
+
+        ours = lyresplit_for_budget(tree, gamma)
+        agg = agglo_for_budget(w.graph, int(gamma), max_iters=6,
+                               time_budget_s=120)
+        km = kmeans_for_budget(w.graph, int(gamma), max_iters=4,
+                               time_budget_s=240)
+
+        tag = f"fig10_{kind}_{nv}v"
+        emit(tag + "_lyresplit", ours.wall_s * 1e6,
+             f"iters={ours.iters};per_iter_us={1e6*sum(ours.per_iter_s)/max(len(ours.per_iter_s),1):.0f}")
+        emit(tag + "_agglo", agg.wall_s * 1e6,
+             f"speedup_vs_lyresplit={agg.wall_s/max(ours.wall_s,1e-9):.0f}x")
+        emit(tag + "_kmeans", km.wall_s * 1e6,
+             f"speedup_vs_lyresplit={km.wall_s/max(ours.wall_s,1e-9):.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Figures 12-13: checkout time with vs without partitioning at
+γ ∈ {1.5|R|, 2|R|} — the paper's headline 3-21x reduction.
+
+Measured two ways: host checkout wall time, and bytes-touched under the
+App. D.1 sequential-scan model (what the TPU gather kernel streams).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (generate, lyresplit_for_budget, single_partition,
+                        to_tree, PartitionedCVD)
+
+from .common import emit
+
+
+def avg_checkout_wall(pc, vids) -> float:
+    t0 = time.perf_counter()
+    for v in vids:
+        pc.checkout(int(v))
+    return (time.perf_counter() - t0) / len(vids)
+
+
+def main() -> None:
+    for kind, seed in (("SCI", 5), ("CUR", 6)):
+        w = generate(kind, n_versions=150, inserts=150, n_branches=15,
+                     n_attrs=20, seed=seed)
+        tree, _ = to_tree(w.graph, w.vgraph)
+        rng = np.random.default_rng(0)
+        vids = rng.choice(w.n_versions, size=50, replace=False)
+
+        base = single_partition(w.graph, w.data)
+        t_base = avg_checkout_wall(base, vids)
+        bytes_base = np.mean([base.checkout_bytes_touched(int(v)) for v in vids])
+        emit(f"fig12_{kind}_nopartition", t_base * 1e6,
+             f"storage={base.storage_cost()};bytes={bytes_base:.0f}")
+
+        for factor in (1.5, 2.0):
+            sr = lyresplit_for_budget(tree, gamma=factor * w.n_records)
+            pc = PartitionedCVD(w.graph, w.data, sr.best.assignment)
+            t = avg_checkout_wall(pc, vids)
+            byts = np.mean([pc.checkout_bytes_touched(int(v)) for v in vids])
+            emit(f"fig12_{kind}_gamma{factor}", t * 1e6,
+                 f"storage={pc.storage_cost()};bytes={byts:.0f};"
+                 f"speedup={t_base/max(t,1e-9):.1f}x;"
+                 f"bytes_reduction={bytes_base/max(byts,1):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

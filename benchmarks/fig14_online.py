@@ -1,0 +1,38 @@
+"""Paper Figures 14-15: online maintenance divergence + migration cost
+(intelligent vs naive), for μ ∈ {1.05, 1.5, 2.0} and γ ∈ {1.5|R|, 2|R|}.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import generate, replay, to_tree
+
+from .common import emit, timeit
+
+
+def main() -> None:
+    w = generate("SCI", n_versions=400, inserts=40, n_branches=30, n_attrs=4,
+                 seed=7)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    for gamma_factor in (1.5, 2.0):
+        for mu in (1.05, 1.5, 2.0):
+            wall, tr = timeit(replay, w.graph, tree,
+                              gamma_factor=gamma_factor, mu=mu, every=5,
+                              repeat=1, drop_extremes=False)
+            n_mig = len(tr.migrations)
+            if n_mig:
+                intel = sum(m.cost_intelligent for m in tr.migrations)
+                naive = sum(m.cost_naive for m in tr.migrations)
+                ratio = naive / max(intel, 1)
+            else:
+                intel = naive = 0
+                ratio = 1.0
+            div = np.mean([a / max(b, 1e-9)
+                           for a, b in zip(tr.c_avg, tr.c_star)])
+            emit(f"fig14_g{gamma_factor}_mu{mu}", wall * 1e6,
+                 f"migrations={n_mig};intell_cost={intel};naive_cost={naive};"
+                 f"naive_over_intell={ratio:.1f}x;mean_divergence={div:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Figure 3: storage / commit / checkout across the five data models.
+
+Protocol (paper §3.2): check out the latest version into T', commit T' back
+as a new version; measure storage cells, commit wall time, checkout wall
+time, per dataset scale.  CPU-scaled: SCI workloads from ~40k to ~300k
+records (the paper's 1M-8M on a workstation Postgres).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import generate
+from repro.core.datamodels import ALL_MODELS
+
+from .common import emit, timeit
+
+SCALES = [(100, 200), (100, 400), (100, 800)]   # (versions, inserts)
+
+
+def run_scale(n_versions: int, inserts: int, seed: int = 0) -> list[dict]:
+    w = generate("SCI", n_versions=n_versions, inserts=inserts,
+                 n_branches=10, n_attrs=20, seed=seed)
+    rows = []
+    for cls in ALL_MODELS:
+        m = cls(n_attrs=w.data.shape[1])
+        # replay the workload's lineage into the model
+        vids = {}
+        for v in range(w.n_versions):
+            table = w.data[w.graph.rlist(v)]
+            parents = tuple(vids[p] for p in w.vgraph.parents(v))
+            vids[v] = m.commit(table, parents=parents)
+        latest = w.n_versions - 1
+        t_checkout, tprime = timeit(m.checkout, vids[latest], repeat=5)
+        t_commit, _ = timeit(m.commit, tprime, parents=(vids[latest],),
+                             repeat=3, drop_extremes=False)
+        rows.append({"model": cls.name, "records": w.n_records,
+                     "storage_cells": m.storage_cells(),
+                     "commit_s": t_commit, "checkout_s": t_checkout})
+    return rows
+
+
+def main() -> None:
+    for nv, ins in SCALES:
+        for r in run_scale(nv, ins):
+            tag = f"fig3_{r['model']}_{r['records']//1000}k"
+            emit(tag + "_commit", r["commit_s"] * 1e6,
+                 f"storage_cells={r['storage_cells']}")
+            emit(tag + "_checkout", r["checkout_s"] * 1e6,
+                 f"records={r['records']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Figure 9: storage size vs checkout time trade-off —
+LYRESPLIT vs AGGLO vs KMEANS on SCI and CUR workloads.
+
+Each point = one partitioning (one algorithm parameter value); checkout time
+is measured (100 random versions, actual partitioned gather) and estimated
+(|R_k| cost model) — the two must agree per App. D.1.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import generate, lyresplit, to_tree, PartitionedCVD
+from repro.core.baselines import agglo, kmeans, _partition_cost
+
+from .common import emit
+
+
+def measure_checkout(w, assignment, n_samples: int = 50, seed: int = 0):
+    pc = PartitionedCVD(w.graph, w.data, assignment)
+    rng = np.random.default_rng(seed)
+    vids = rng.choice(w.n_versions, size=min(n_samples, w.n_versions),
+                      replace=False)
+    t0 = time.perf_counter()
+    for v in vids:
+        pc.checkout(int(v))
+    wall = (time.perf_counter() - t0) / len(vids)
+    return wall, pc.storage_cost(), pc.avg_checkout_cost()
+
+
+def run(kind: str, seed: int = 0) -> None:
+    w = generate(kind, n_versions=150, inserts=100, n_branches=15,
+                 n_attrs=10, seed=seed)
+    tree, _ = to_tree(w.graph, w.vgraph)
+
+    for delta in (0.05, 0.1, 0.2, 0.4, 0.7, 0.95):
+        res = lyresplit(tree, delta)
+        wall, s, c = measure_checkout(w, res.assignment)
+        emit(f"fig9_{kind}_lyresplit_d{delta}", wall * 1e6,
+             f"storage={s};est_checkout={c:.0f};parts={res.n_partitions}")
+
+    for bc_factor in (0.2, 0.4, 0.8):
+        bc = max(int(bc_factor * w.n_records), 1)
+        a = agglo(w.graph, bc)
+        wall, s, c = measure_checkout(w, a)
+        emit(f"fig9_{kind}_agglo_bc{bc_factor}", wall * 1e6,
+             f"storage={s};est_checkout={c:.0f};parts={len(np.unique(a))}")
+
+    for k in (4, 10, 25):
+        a = kmeans(w.graph, k, iters=5)
+        wall, s, c = measure_checkout(w, a)
+        emit(f"fig9_{kind}_kmeans_k{k}", wall * 1e6,
+             f"storage={s};est_checkout={c:.0f};parts={len(np.unique(a))}")
+
+
+def main() -> None:
+    run("SCI", seed=0)
+    run("CUR", seed=1)
+
+
+if __name__ == "__main__":
+    main()

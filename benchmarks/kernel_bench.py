@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: checkout gather (row vs tiled), membership scan,
+version aggregate.  On CPU the Pallas kernels run in interpret mode, so the
+meaningful derived quantities are BYTES MOVED and DMA counts (the TPU cost),
+not wall time; both are emitted.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.checkout_gather import plan_tiles
+
+from .common import emit, timeit
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    r, d = 1 << 15, 128
+    data = rng.integers(0, 127, size=(r, d), dtype=np.int32)
+
+    # dense run (post-LYRESPLIT locality) vs random rlist
+    for tag, rids in (
+            ("dense", np.arange(r // 4, r // 4 + 8192)),
+            ("random", np.sort(rng.choice(r, size=8192, replace=False)))):
+        tiles, perm, waste = plan_tiles(rids, block_n=8)
+        n_dmas_row = len(rids)
+        n_dmas_tiled = len(tiles)
+        bytes_row = len(rids) * d * 4
+        bytes_tiled = len(tiles) * 8 * d * 4
+        wall, _ = timeit(lambda: np.asarray(
+            ops.checkout_gather(data, rids, use_kernel=False)), repeat=3)
+        emit(f"kernel_gather_{tag}", wall * 1e6,
+             f"dmas_row={n_dmas_row};dmas_tiled={n_dmas_tiled};"
+             f"bytes_row={bytes_row};bytes_tiled={bytes_tiled};"
+             f"waste={waste:.3f}")
+
+    # membership bitset scan: bytes vs full-table scan
+    n_versions = 512
+    rlists = [np.sort(rng.choice(r, size=2048, replace=False))
+              for _ in range(n_versions)]
+    bm = ops.build_bitmap(rlists, r)
+    wall, _ = timeit(lambda: np.asarray(
+        ops.membership_scan(bm, vid=17)[0]), repeat=3)
+    emit("kernel_membership", wall * 1e6,
+         f"bitmap_bytes={bm.nbytes};table_bytes={data.nbytes};"
+         f"scan_reduction={data.nbytes/bm.nbytes:.1f}x")
+
+    vals = rng.standard_normal(r).astype(np.float32)
+    wall, _ = timeit(lambda: np.asarray(
+        ops.version_aggregate(bm, vals)), repeat=3)
+    emit("kernel_version_agg", wall * 1e6,
+         f"versions={n_versions};bytes={bm.nbytes + vals.nbytes}")
+
+
+if __name__ == "__main__":
+    main()

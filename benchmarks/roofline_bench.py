@@ -1,0 +1,47 @@
+"""Roofline summary bench — reads the dry-run grid (EXPERIMENTS.md §Roofline)
+and prints per-cell roofline fractions + the grid means, so the perf score
+is reproducible from the bench harness:
+
+    PYTHONPATH=src python -m benchmarks.run roofline
+
+Requires experiments/dryrun_final (regenerate with
+``python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun_final``).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+GRID_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun_final")
+PEAK_FLOPS = 197e12
+
+
+def main() -> None:
+    files = sorted(glob.glob(os.path.join(GRID_DIR, "*.json")))
+    if not files:
+        print(f"roofline_skip,0,no grid at {GRID_DIR} (run the dry-run first)")
+        return
+    fracs = {"single": [], "multi": []}
+    for f in files:
+        r = json.load(open(f))
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        bound = max(rf["compute_s"], rf.get("memory_s_flash", rf["memory_s"]),
+                    rf["collective_s"])
+        ideal = r["model_flops"] / (r["chips"] * PEAK_FLOPS)
+        frac = ideal / max(bound, 1e-12)
+        tag = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        print(f"{tag},{bound * 1e6:.1f},fraction={frac:.4f};"
+              f"dom={rf['dominant']}")
+        if r["kind"] in ("train", "prefill"):
+            fracs[r["mesh"]].append(frac)
+    for mesh, xs in fracs.items():
+        if xs:
+            print(f"roofline_mean_{mesh},0,"
+                  f"mean_fraction={sum(xs) / len(xs):.4f};cells={len(xs)}")
+
+
+if __name__ == "__main__":
+    main()

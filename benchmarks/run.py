@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figures covered:
+  fig3  — data-model comparison (storage / commit / checkout)     §3.2
+  fig9  — storage vs checkout trade-off, 3 partitioners           §5.2
+  fig10 — partitioner running time (the 10^3x claim)              §5.2
+  fig12 — partitioning benefit at γ ∈ {1.5, 2}|R|                 §5.3
+  fig14 — online maintenance + migration                          §5.4
+  d1    — checkout cost model linearity                           App. D.1
+  kernel— TPU kernel data-movement microbench                     (ours)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (d1_cost_model, fig3_datamodels, fig9_tradeoff,
+                   fig10_runtime, fig12_partition_benefit, fig14_online,
+                   kernel_bench, roofline_bench)
+    mods = [fig3_datamodels, fig9_tradeoff, fig10_runtime,
+            fig12_partition_benefit, fig14_online, d1_cost_model,
+            kernel_bench, roofline_bench]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for mod in mods:
+        name = mod.__name__.split(".")[-1]
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        mod.main()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Assigned-architecture registry: ``get(name)`` -> ArchConfig,
+``smoke(name)`` -> reduced same-family config, ``input_specs(...)`` ->
+ShapeDtypeStruct stand-ins for every model input of a given shape cell.
+
+Shape cells (LM grid):
+  train_4k      seq 4096,    global_batch 256   (train_step)
+  prefill_32k   seq 32768,   global_batch 32    (serve prefill)
+  decode_32k    seq 32768,   global_batch 128   (serve_step: 1 new token)
+  long_500k     seq 524288,  global_batch 1     (sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+import importlib
+
+from ..models.transformer import ArchConfig
+
+ARCH_IDS = [
+    "seamless_m4t_medium",
+    "deepseek_v2_lite_16b",
+    "olmoe_1b_7b",
+    "phi3_medium_14b",
+    "mistral_nemo_12b",
+    "qwen15_4b",
+    "internlm2_1_8b",
+    "zamba2_2_7b",
+    "mamba2_780m",
+    "llava_next_34b",
+]
+
+# canonical shape grid
+SHAPES = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+# archs allowed to run long_500k (sub-quadratic decode state)
+SUBQUADRATIC = {"zamba2_2_7b", "mamba2_780m"}
+
+
+def canonical(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get(name: str) -> ArchConfig:
+    mod = importlib.import_module(f".{canonical(name)}", __package__)
+    return mod.CONFIG
+
+
+def smoke(name: str) -> ArchConfig:
+    mod = importlib.import_module(f".{canonical(name)}", __package__)
+    return mod.SMOKE
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    arch = canonical(arch)
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, ("full-attention arch: 500k-key dense attention decode "
+                       "is the quadratic regime the brief excludes (DESIGN.md)")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: str):
+    """ShapeDtypeStruct stand-ins for every model input (+ cache for decode).
+
+    Returns (batch_dict, kind) where kind in {train, prefill, decode}."""
+    import jax
+    import jax.numpy as jnp
+    from ..models.transformer import init_cache_abstract
+
+    info = SHAPES[shape]
+    s, b, kind = info["seq"], info["batch"], info["kind"]
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+
+    if kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), bf16)
+        return batch, kind
+
+    if kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), bf16)
+        return batch, kind
+
+    # decode: one new token against a seq-length cache
+    batch = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+             "cache": init_cache_abstract(cfg, b, s)}
+    return batch, kind

@@ -1,0 +1,21 @@
+"""OrpheusDB core: CVD storage models, LYRESPLIT partitioning, online
+maintenance, and the versioned query layer."""
+from .graph import BipartiteGraph, checkout_cost, storage_cost, union_size
+from .version_graph import VersionGraph, WeightedTree, to_tree, edge_weights
+from .datamodels import (ALL_MODELS, CombinedTable, DeltaBased, SplitByRlist,
+                         SplitByVlist, TablePerVersion)
+from .lyresplit import lyresplit, lyresplit_for_budget, SplitResult
+from .partition import PartitionedCVD, single_partition, per_version_partitions
+from .online import OnlinePartitioner, replay
+from .bench_gen import generate, Workload
+
+__all__ = [
+    "BipartiteGraph", "checkout_cost", "storage_cost", "union_size",
+    "VersionGraph", "WeightedTree", "to_tree", "edge_weights",
+    "ALL_MODELS", "CombinedTable", "DeltaBased", "SplitByRlist",
+    "SplitByVlist", "TablePerVersion",
+    "lyresplit", "lyresplit_for_budget", "SplitResult",
+    "PartitionedCVD", "single_partition", "per_version_partitions",
+    "OnlinePartitioner", "replay",
+    "generate", "Workload",
+]

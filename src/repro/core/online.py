@@ -1,0 +1,196 @@
+"""Online maintenance + migration engine (paper §4.3, Figs 14-15).
+
+Online rule, per newly committed version v with parent p in partition P_k:
+  * if w(p, v) ≤ δ*·|R|  AND  S < γ   -> create a new partition for v
+  * else                              -> append v to P_k
+where δ* is the δ of the last LYRESPLIT invocation.
+
+Divergence control: LYRESPLIT is cheap enough to run at every commit; when
+C_avg / C*_avg > μ the migration engine rebuilds toward the LYRESPLIT
+partitioning — intelligently (morph the closest existing partition, matching
+computed on the *version graph*, not the record sets) or naively (from
+scratch).  Migration cost is counted in record-row insertions + deletions,
+the unit the paper's Figs 14b/15b wall times are proportional to.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .graph import BipartiteGraph, union_size
+from .lyresplit import lyresplit_for_budget
+from .version_graph import WeightedTree
+
+
+@dataclasses.dataclass
+class MigrationEvent:
+    at_version: int
+    cost_intelligent: int     # record rows inserted+deleted (morphing)
+    cost_naive: int           # record rows written (rebuild from scratch)
+    wall_s: float
+    n_partitions_before: int
+    n_partitions_after: int
+
+
+@dataclasses.dataclass
+class OnlineTrace:
+    c_avg: list[float]                  # current cost after each commit
+    c_star: list[float]                 # LYRESPLIT-best cost after each commit
+    migrations: list[MigrationEvent]
+    s_cost: list[int]
+
+
+class OnlinePartitioner:
+    """Streams versions in; maintains an assignment + partition record sets."""
+
+    def __init__(self, gamma_factor: float = 2.0, mu: float = 1.5,
+                 run_lyresplit_every: int = 1):
+        self.gamma_factor = gamma_factor
+        self.mu = mu
+        self.every = run_lyresplit_every
+        # state
+        self.parent = np.zeros(0, np.int64)
+        self.sizes = np.zeros(0, np.int64)
+        self.edge_w = np.zeros(0, np.int64)
+        self.assignment = np.zeros(0, np.int64)
+        self.part_records: list[int] = []          # |R_k| per partition (estimate)
+        self.part_versions: list[int] = []
+        self.delta_star = 0.5
+        self.total_records = 0                     # |R|
+        self.trace = OnlineTrace([], [], [], [])
+
+    # -- helpers -------------------------------------------------------------
+    def _tree(self) -> WeightedTree:
+        return WeightedTree(parent=self.parent.copy(), n_records=self.sizes.copy(),
+                            edge_w=self.edge_w.copy())
+
+    def _storage(self) -> int:
+        return int(sum(self.part_records))
+
+    def _checkout_cost(self) -> float:
+        n = len(self.parent)
+        if n == 0:
+            return 0.0
+        tot = sum(v * r for v, r in zip(self.part_versions, self.part_records))
+        return tot / n
+
+    # -- the §4.3 protocol ------------------------------------------------------
+    def commit(self, parent: int, size: int, shared_with_parent: int) -> int:
+        """Register version; returns its vid.  ``shared_with_parent`` is
+        w(p, v); ``size`` is |R(v)|."""
+        vid = len(self.parent)
+        self.parent = np.append(self.parent, parent)
+        self.sizes = np.append(self.sizes, size)
+        self.edge_w = np.append(self.edge_w, shared_with_parent)
+        self.total_records += size - (shared_with_parent if parent >= 0 else 0)
+        gamma = self.gamma_factor * self.total_records
+
+        if parent < 0:
+            pid = len(self.part_records)
+            self.assignment = np.append(self.assignment, pid)
+            self.part_records.append(size)
+            self.part_versions.append(1)
+        else:
+            new_part = (shared_with_parent <= self.delta_star * self.total_records
+                        and self._storage() + size <= gamma)
+            if new_part:
+                pid = len(self.part_records)
+                self.assignment = np.append(self.assignment, pid)
+                self.part_records.append(size)
+                self.part_versions.append(1)
+            else:
+                pid = int(self.assignment[parent])
+                self.assignment = np.append(self.assignment, pid)
+                # new rows in this partition = records not shared with parent
+                self.part_records[pid] += size - shared_with_parent
+                self.part_versions[pid] += 1
+
+        # track divergence vs a fresh LYRESPLIT
+        if vid % self.every == 0 and vid > 0:
+            sr = lyresplit_for_budget(self._tree(), gamma, max_iters=12)
+            self.delta_star = sr.best.delta
+            c_star = sr.best.est_checkout
+            c_now = self._checkout_cost()
+            self.trace.c_avg.append(c_now)
+            self.trace.c_star.append(c_star)
+            self.trace.s_cost.append(self._storage())
+            if c_star > 0 and c_now / c_star > self.mu:
+                self._migrate(sr.best.assignment, vid)
+        return vid
+
+    # -- migration engine ---------------------------------------------------------
+    def _part_sets(self, assignment: np.ndarray) -> list[np.ndarray]:
+        return [np.flatnonzero(assignment == k) for k in np.unique(assignment)]
+
+    def _est_partition_records(self, vids: np.ndarray) -> int:
+        """|R_k| from the version graph only (no record sets): root + Σ(new)."""
+        vs = set(int(v) for v in vids)
+        tot = 0
+        for v in vids:
+            p = int(self.parent[v])
+            if p >= 0 and p in vs:
+                tot += int(self.sizes[v] - self.edge_w[v])
+            else:
+                tot += int(self.sizes[v])   # component root within the partition
+        return tot
+
+    def _common_records(self, old: np.ndarray, new: np.ndarray) -> int:
+        """Records shared between an old and a new partition, computed from the
+        COMMON VERSIONS on the version graph (paper: 'without probing R')."""
+        common = np.intersect1d(old, new)
+        if len(common) == 0:
+            return 0
+        return self._est_partition_records(common)
+
+    def _migrate(self, new_assignment: np.ndarray, at_version: int) -> None:
+        t0 = time.perf_counter()
+        old_sets = self._part_sets(self.assignment)
+        new_sets = self._part_sets(new_assignment)
+        old_R = [self._est_partition_records(s) for s in old_sets]
+        new_R = [self._est_partition_records(s) for s in new_sets]
+
+        # intelligent: greedy closest-pair (smallest modification cost)
+        pairs: list[tuple[int, int, int]] = []
+        for i, ns in enumerate(new_sets):
+            for j, os_ in enumerate(old_sets):
+                c = self._common_records(os_, ns)
+                mod = (new_R[i] - c) + (old_R[j] - c)   # inserts + deletes
+                pairs.append((mod, i, j))
+        pairs.sort()
+        used_new: set[int] = set()
+        used_old: set[int] = set()
+        cost_int = 0
+        for mod, i, j in pairs:
+            if i in used_new or j in used_old:
+                continue
+            # rebuild from scratch if morphing costs more than building
+            cost_int += min(mod, new_R[i])
+            used_new.add(i)
+            used_old.add(j)
+        for i in range(len(new_sets)):
+            if i not in used_new:
+                cost_int += new_R[i]
+        cost_naive = int(sum(new_R))
+
+        self.trace.migrations.append(MigrationEvent(
+            at_version=at_version, cost_intelligent=int(cost_int),
+            cost_naive=cost_naive, wall_s=time.perf_counter() - t0,
+            n_partitions_before=len(old_sets), n_partitions_after=len(new_sets)))
+
+        # adopt the new partitioning
+        self.assignment = new_assignment.copy()
+        self.part_records = list(new_R)
+        self.part_versions = [len(s) for s in new_sets]
+
+
+def replay(graph: BipartiteGraph, tree: WeightedTree, gamma_factor: float = 2.0,
+           mu: float = 1.5, every: int = 1) -> OnlineTrace:
+    """Stream an existing workload's versions through the online partitioner."""
+    op = OnlinePartitioner(gamma_factor=gamma_factor, mu=mu, run_lyresplit_every=every)
+    sizes = graph.version_sizes()
+    for v in range(graph.n_versions):
+        op.commit(int(tree.parent[v]), int(sizes[v]), int(tree.edge_w[v]))
+    return op.trace

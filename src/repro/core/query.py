@@ -1,0 +1,110 @@
+"""Versioned query layer (paper §2.2): the operations OrpheusDB translates to
+SQL, realized as array programs over the split-by-rlist representation.
+
+These are the "advanced querying capabilities for free" that justify the
+array-based models over deltas (paper §3.1): every query below is a single
+vectorized pass — the delta model would need to materialize every version.
+
+Device-scale variants of the hot paths live in repro/kernels (version_agg,
+vlist_membership); this module is the engine-level reference implementation
+and the host fallback.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .graph import BipartiteGraph
+
+
+def version_scan(graph: BipartiteGraph, data: np.ndarray, vid: int,
+                 predicate: Callable[[np.ndarray], np.ndarray]) -> np.ndarray:
+    """SELECT * FROM VERSION vid OF CVD WHERE predicate."""
+    rows = data[graph.rlist(vid)]
+    return rows[predicate(rows)]
+
+
+def versions_with_record(graph: BipartiteGraph, data: np.ndarray,
+                         predicate: Callable[[np.ndarray], np.ndarray]) -> np.ndarray:
+    """Which versions contain >=1 record matching the predicate.
+    (e.g. 'versions with a specific gene annotation record')."""
+    mask = predicate(data)                     # (n_records,) bool over the pool
+    hit = mask[graph.indices]                  # per (version, record) edge
+    counts = np.add.reduceat(hit, graph.indptr[:-1]) if graph.n_edges else \
+        np.zeros(graph.n_versions, bool)
+    sizes = graph.version_sizes()
+    counts = np.where(sizes > 0, counts, 0)
+    return np.flatnonzero(counts)
+
+
+def per_version_aggregate(graph: BipartiteGraph, data: np.ndarray, col: int,
+                          agg: str = "sum",
+                          predicate: Optional[Callable[[np.ndarray], np.ndarray]] = None
+                          ) -> np.ndarray:
+    """GROUP BY version: aggregate ``col`` over each version's records.
+    (e.g. 'aggregate count of tuples with confidence > 0.9, per version')."""
+    vals = data[graph.indices, col].astype(np.float64)
+    if predicate is not None:
+        keep = predicate(data)[graph.indices]
+        vals = np.where(keep, vals, 0.0 if agg in ("sum", "count") else np.nan)
+        if agg == "count":
+            vals = keep.astype(np.float64)
+    elif agg == "count":
+        vals = np.ones_like(vals)
+    out = np.zeros(graph.n_versions, np.float64)
+    seg = np.repeat(np.arange(graph.n_versions), graph.version_sizes())
+    if agg in ("sum", "count"):
+        np.add.at(out, seg, np.nan_to_num(vals))
+    elif agg == "max":
+        out[:] = -np.inf
+        np.maximum.at(out, seg, np.nan_to_num(vals, nan=-np.inf))
+    elif agg == "min":
+        out[:] = np.inf
+        np.minimum.at(out, seg, np.nan_to_num(vals, nan=np.inf))
+    elif agg == "mean":
+        np.add.at(out, seg, np.nan_to_num(vals))
+        cnt = np.maximum(graph.version_sizes(), 1)
+        out = out / cnt
+    else:
+        raise ValueError(agg)
+    return out
+
+
+def diff(graph: BipartiteGraph, data: np.ndarray, v1: int, v2: int
+         ) -> tuple[np.ndarray, np.ndarray]:
+    """Records in v1 not in v2, and vice versa (the `diff` command)."""
+    a, b = graph.rlist(v1), graph.rlist(v2)
+    only_a = np.setdiff1d(a, b, assume_unique=True)
+    only_b = np.setdiff1d(b, a, assume_unique=True)
+    return data[only_a], data[only_b]
+
+
+def versions_with_bulk_delete(graph: BipartiteGraph, parents: Sequence[Sequence[int]],
+                              threshold: int = 100) -> np.ndarray:
+    """Versions with > ``threshold`` records deleted vs any parent
+    (the intro's 'bulk delete' query)."""
+    out = []
+    for v in range(graph.n_versions):
+        rl = graph.rlist(v)
+        for p in parents[v]:
+            dropped = len(np.setdiff1d(graph.rlist(p), rl, assume_unique=True))
+            if dropped > threshold:
+                out.append(v)
+                break
+    return np.asarray(out, dtype=np.int64)
+
+
+def join_versions(graph: BipartiteGraph, data: np.ndarray, v1: int, v2: int,
+                  on: int = 0) -> np.ndarray:
+    """Inner join of two versions on attribute ``on`` — the multi-version
+    renaming query of §2.2.  Returns concatenated row pairs."""
+    a, b = data[graph.rlist(v1)], data[graph.rlist(v2)]
+    keys_b: dict[int, list[int]] = {}
+    for i, k in enumerate(b[:, on]):
+        keys_b.setdefault(int(k), []).append(i)
+    rows = []
+    for i, k in enumerate(a[:, on]):
+        for j in keys_b.get(int(k), ()):
+            rows.append(np.concatenate([a[i], b[j]]))
+    return np.stack(rows) if rows else np.zeros((0, 2 * data.shape[1]), data.dtype)

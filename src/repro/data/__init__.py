@@ -1,0 +1,3 @@
+from .pipeline import VersionedDataset
+
+__all__ = ["VersionedDataset"]

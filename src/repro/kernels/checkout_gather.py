@@ -1,0 +1,123 @@
+"""Checkout gather kernel — the TPU realization of the paper's hash-join
+probe (Table 1, split-by-rlist checkout).
+
+``checkout v`` = gather the rows named by v's rlist out of the partition's
+data block.  On Postgres this is a hash join whose cost is linear in the
+partition size (App. D.1); on TPU it is an HBM->VMEM row gather whose cost is
+linear in bytes touched — same cost model, different constant.
+
+Two kernels:
+
+* ``gather_rows``        — scalar-prefetch gather: the rlist lives in SMEM and
+                           drives the data BlockSpec's index_map, so each grid
+                           step DMAs exactly one (1, BD) row tile.  This is the
+                           canonical TPU gather (indices known before the body
+                           runs => the DMA engine can pipeline ahead).
+* ``gather_row_tiles``   — beyond-paper optimization: rlists are SORTED, so
+                           after LYRESPLIT partitioning a checkout touches
+                           long dense runs of the block.  ``plan_tiles`` RLEs
+                           the rlist into BN-row-aligned tile indices and each
+                           grid step DMAs a (BN, BD) tile — up to BN× fewer,
+                           BN× larger DMAs for the same bytes.  Checkout has
+                           SET semantics (a version is a set of records), so
+                           the packed tile output needs no reordering; the
+                           planner's ``perm`` exists for oracle comparison.
+
+Both tile the feature dimension at BD (lane-width multiple of 128) so the
+VMEM working set stays bounded regardless of table width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BD = 512   # feature-tile width (lanes); multiple of 128
+DEFAULT_BN = 8     # rows per tile for the ranged variant (sublane multiple)
+
+
+def _copy_kernel(idx_ref, x_ref, o_ref):
+    # x_ref is the row tile selected by the index_map; copy through.
+    del idx_ref
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gather_rows(data: jax.Array, rids: jax.Array, *, block_d: int = DEFAULT_BD,
+                interpret: bool = False) -> jax.Array:
+    """out[i, :] = data[rids[i], :] via scalar-prefetch row gather.
+
+    data: (R, D) — D must be a multiple of the feature tile (pad upstream).
+    rids: (N,) int32.
+    """
+    r, d = data.shape
+    n = rids.shape[0]
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    grid = (n, d // bd)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bd), lambda i, j, idx: (idx[i], j))],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j, idx: (i, j)),
+    )
+    return pl.pallas_call(
+        _copy_kernel, grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), data.dtype),
+        interpret=interpret,
+    )(rids.astype(jnp.int32), data)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def gather_row_tiles(data: jax.Array, tile_idx: jax.Array, *,
+                     block_n: int = DEFAULT_BN, block_d: int = DEFAULT_BD,
+                     interpret: bool = False) -> jax.Array:
+    """out tile t = data rows [tile_idx[t]*BN, (tile_idx[t]+1)*BN).
+
+    data: (R, D) with R a multiple of BN (pad upstream).
+    tile_idx: (T,) int32 BN-row tile indices from ``plan_tiles``.
+    Returns (T*BN, D) packed tiles.
+    """
+    r, d = data.shape
+    t = tile_idx.shape[0]
+    bd = min(block_d, d)
+    assert d % bd == 0 and r % block_n == 0, (r, d, block_n, bd)
+    grid = (t, d // bd)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, bd), lambda i, j, ti: (ti[i], j))],
+        out_specs=pl.BlockSpec((block_n, bd), lambda i, j, ti: (i, j)),
+    )
+    return pl.pallas_call(
+        _copy_kernel, grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((t * block_n, d), data.dtype),
+        interpret=interpret,
+    )(tile_idx.astype(jnp.int32), data)
+
+
+def plan_tiles(rids, block_n: int = DEFAULT_BN):
+    """Host-side planner: the set of BN-row tiles covering a sorted rlist.
+
+    Returns (tile_idx, perm, waste):
+      * tile_idx — sorted unique tiles (row // BN) the rlist touches;
+      * perm     — rlist position -> packed-output row, so
+                   packed[perm] == data[rids] (oracle comparison only;
+                   production checkout keeps set semantics);
+      * waste    — fraction of gathered rows that are not in the rlist
+                   (the price of tiling; low after LYRESPLIT because
+                   partitions hold dense rid runs).
+    """
+    rids = np.asarray(rids)
+    assert len(rids) == 0 or np.all(np.diff(rids) >= 1), "rlist must be sorted unique"
+    tiles = np.unique(rids // block_n).astype(np.int32)
+    tile_pos = {int(t): i for i, t in enumerate(tiles)}
+    perm = np.asarray([tile_pos[int(r // block_n)] * block_n + int(r % block_n)
+                       for r in rids], dtype=np.int64)
+    waste = 1.0 - len(rids) / max(len(tiles) * block_n, 1)
+    return tiles, perm, waste

@@ -1,0 +1,151 @@
+"""Flash attention (forward) — the TPU kernel behind the roofline's
+``memory_s_flash`` term (§Perf iteration A2).
+
+The materialized-softmax attention in ``models/layers._sdpa`` writes the
+(B, H, Sq, Sk) logits/probs chain through HBM: ~1/3 of train-step bytes at
+seq 4k and the dominant term at 32k.  This kernel streams K/V tiles through
+VMEM with an online-softmax accumulator, so the only HBM traffic is
+Q + K + V + O (+ one f32 row-stats vector) — exactly the ``flash_io_bytes``
+the roofline analysis charges for cells on the flash path.
+
+Design (TPU-native, not a CUDA port):
+  grid = (B·H, Sq/BQ, Sk/BK) — the LAST axis is the reduction; TPU grids
+  execute sequentially over the trailing axis, so the f32 VMEM scratch
+  (acc, row-max m, row-sum l) carries across the Sk tiles of one (bh, q)
+  block and is normalized + cast to the output dtype on the final tile.
+  BlockSpecs tile Q/O at (BQ, Dh) and K/V at (BK, Dh) — MXU-aligned
+  (multiples of 128 lanes / 8 sublanes); GQA maps query-head h to kv-head
+  h // group in the K/V index_map (no repeated-K materialization).
+  Causality: tiles with q_end < k_start are skipped via ``pl.when`` (the
+  scratch simply carries through), diagonal tiles get an iota mask.
+
+The backward pass runs the same tiling in reverse (dQ accumulation over Sk
+tiles; dK/dV over Sq tiles); on the dry-run target we account it as 2x the
+forward I/O (hlo_analysis.flash_attention_io_bytes).  ops.flash_attention
+wires the kernel under jax.custom_vjp with a blockwise-jnp backward so the
+train path is differentiable everywhere the kernel is used.
+
+Validated against ref.mha_ref in tests/test_flash_attention.py over a
+(seq, heads, dh, dtype, causal, GQA-group) sweep in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128        # query rows per tile (sublane multiple)
+DEFAULT_BK = 128        # key rows per tile
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      bq: int, bk: int, sk: int, causal: bool, scale: float):
+    """One (bh, q-tile, k-tile) grid step.
+
+    q_ref: (BQ, Dh); k_ref/v_ref: (BK, Dh); o_ref: (BQ, Dh)
+    scratch: acc (BQ, Dh) f32, m/l (BQ, 128) f32 (lane-replicated row stats).
+    """
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # causal: skip tiles strictly above the diagonal
+    run = (not causal) or (q_start + bq - 1 >= k_start)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                     # (BQ, BK)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[:, :1]                             # (BQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)         # (BQ, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # (BQ, BK)
+        corr = jnp.exp(m_prev - m_new)                    # (BQ, 1)
+        l_new = corr * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, block_q: int = DEFAULT_BQ,
+                        block_k: int = DEFAULT_BK,
+                        interpret: bool = False) -> jax.Array:
+    """out = softmax(q k^T / sqrt(dh), causal) v, never materializing SxS.
+
+    q: (B, Sq, H, Dh); k/v: (B, Sk, Hkv, Dh) with H % Hkv == 0 (GQA).
+    Sq/Sk must be multiples of the block sizes (pad upstream).
+    Returns (B, Sq, H, Dh) in q.dtype.
+    """
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    scale = dh ** -0.5
+
+    # (B, S, H, Dh) -> (B*H, S, Dh) blocked layout
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, dh)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        # query head bh -> kv head (batch-major layout)
+        return ((bh // h) * hkv + (bh % h) // group, ki, 0)
+
+    grid = (b * h, sq // bq, sk // bk)
+    kernel = functools.partial(_flash_fwd_kernel, bq=bq, bk=bk, sk=sk,
+                               causal=causal, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), q_map),
+            pl.BlockSpec((1, bk, dh), kv_map),
+            pl.BlockSpec((1, bk, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)

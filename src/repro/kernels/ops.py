@@ -1,0 +1,209 @@
+"""Jit'd public wrappers for the kernels: pick the Pallas TPU path on TPU,
+interpret=True (Python-executed kernel body) elsewhere, with pure-jnp oracles
+available for oracle comparison (ref.py).
+
+Handles padding to hardware tile multiples so callers can pass ragged CVD
+shapes straight from the store.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import checkout_gather as _cg
+from . import ref as _ref
+from . import version_agg as _va
+from . import vlist_membership as _vm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def checkout_gather(data, rids, *, block_d: int = _cg.DEFAULT_BD,
+                    use_kernel: bool | None = None) -> jax.Array:
+    """Materialize a version: rows of ``data`` named by ``rids``."""
+    data = jnp.asarray(data)
+    rids = jnp.asarray(rids)
+    if use_kernel is None:
+        use_kernel = True
+    if not use_kernel:
+        return _ref.gather_rows_ref(data, rids)
+    d = data.shape[1]
+    bd = min(block_d, max(128, d))
+    padded = _pad_axis(data, bd, axis=1)
+    out = _cg.gather_rows(padded, rids, block_d=bd, interpret=not _on_tpu())
+    return out[:, :d]
+
+
+def checkout_gather_tiled(data, rids, *, block_n: int = _cg.DEFAULT_BN,
+                          block_d: int = _cg.DEFAULT_BD):
+    """Ranged/tiled checkout (beyond-paper fast path for sorted rlists).
+
+    Returns (packed_rows, perm, waste) — packed_rows[perm] == data[rids]."""
+    data = jnp.asarray(data)
+    tiles, perm, waste = _cg.plan_tiles(np.asarray(rids), block_n=block_n)
+    d = data.shape[1]
+    bd = min(block_d, max(128, d))
+    padded = _pad_axis(_pad_axis(data, bd, axis=1), block_n, axis=0)
+    out = _cg.gather_row_tiles(padded, jnp.asarray(tiles), block_n=block_n,
+                               block_d=bd, interpret=not _on_tpu())
+    return out[:, :d], perm, waste
+
+
+def membership_scan(bitmap, vid: int, *, block_r: int = _vm.DEFAULT_BR):
+    """(mask, per-block counts) for version ``vid`` over the bitset vlists."""
+    bitmap = jnp.asarray(bitmap)
+    r = bitmap.shape[0]
+    br = min(block_r, max(8, r))
+    padded = _pad_axis(bitmap, br, axis=0)
+    mask, cnt = _vm.membership_scan(padded, vid=vid, block_r=br,
+                                    interpret=not _on_tpu())
+    return mask[:r], cnt
+
+
+def version_aggregate(bitmap, values, *, block_r: int = _va.DEFAULT_BR):
+    """Per-version sums of ``values`` over the bitset vlists; (n_versions,)
+    prefix of the (W*32,) kernel output is the meaningful part."""
+    bitmap = jnp.asarray(bitmap)
+    values = jnp.asarray(values)
+    r = bitmap.shape[0]
+    br = min(block_r, max(8, r))
+    padded_bm = _pad_axis(bitmap, br, axis=0)
+    padded_v = _pad_axis(values, br, axis=0)
+    return _va.version_aggregate(padded_bm, padded_v, block_r=br,
+                                 interpret=not _on_tpu())
+
+
+build_bitmap = _vm.build_bitmap
+plan_tiles = _cg.plan_tiles
+
+
+# ------------------------------------------------------------------------
+# flash attention: Pallas kernel forward + blockwise custom-vjp backward
+# (never materializes the SxS logits in either direction)
+# ------------------------------------------------------------------------
+from . import flash_attention as _fa          # noqa: E402
+
+
+def _expand_kv(k, group):
+    import jax.numpy as jnp
+    b, sk, hkv, dh = k.shape
+    return jnp.repeat(k, group, axis=2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = True):
+    """Differentiable flash attention.  Forward = Pallas kernel
+    (interpret=True executes the kernel body on CPU; on a TPU runtime pass
+    interpret=False for the Mosaic build).  Backward = blockwise lax.scan
+    recomputation — per-tile probabilities only, O(S·BK) live memory."""
+    return _fa.flash_attention_fwd(q, k, v, causal=causal,
+                                   interpret=interpret)
+
+
+def _flash_fwd_rule(q, k, v, causal, interpret):
+    o = _fa.flash_attention_fwd(q, k, v, causal=causal, interpret=interpret)
+    lse = _row_lse(q, k, causal)               # (B, Sq, H) f32
+    return o, (q, k, v, o, lse)
+
+
+def _blocks(s, bk):
+    bk = min(bk, s)
+    while s % bk:
+        bk //= 2
+    return max(bk, 1)
+
+
+def _row_lse(q, k, causal, block_k: int = 512):
+    """logsumexp of the scaled causal logits rows, streamed over K blocks."""
+    import jax.numpy as jnp
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bk = _blocks(sk, block_k)
+    scale = dh ** -0.5
+    kb = k.reshape(b, sk // bk, bk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(sk).reshape(sk // bk, bk)
+    qpos = jnp.arange(sq)
+
+    def step(carry, xs):
+        m_run, l_run = carry
+        k_c, kp = xs
+        qg = q.reshape(b, sq, hkv, g, dh)
+        s_c = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k_c).astype(jnp.float32)
+        s_c = s_c * scale                       # (B,Sq,Hkv,G,BK)
+        if causal:
+            mask = kp[None, :] <= qpos[:, None]           # (Sq, BK)
+            s_c = jnp.where(mask[None, :, None, None, :], s_c, -1e30)
+        m_c = jnp.max(s_c, axis=-1)
+        m_new = jnp.maximum(m_run, m_c)
+        l_new = l_run * jnp.exp(m_run - m_new) + \
+            jnp.sum(jnp.exp(s_c - m_new[..., None]), axis=-1)
+        return (m_new, l_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    (m, l), _ = jax.lax.scan(step, (m0, l0), (kb, kpos))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return lse.reshape(b, sq, h)
+
+
+def _flash_bwd_rule(causal, interpret, res, do):
+    """Blockwise backward: for each K block, rebuild P from (q, k, lse) and
+    accumulate dq; dk/dv accumulate per block.  Live memory O(Sq·BK)."""
+    import jax.numpy as jnp
+    q, k, v, o, lse = res
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bk = _blocks(sk, 512)
+    scale = dh ** -0.5
+    qg = q.reshape(b, sq, hkv, g, dh)
+    dog = do.reshape(b, sq, hkv, g, dh)
+    lseg = lse.reshape(b, sq, hkv, g)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1).reshape(b, sq, hkv, g)        # (B,Sq,Hkv,G)
+    kb = k.reshape(b, sk // bk, bk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, sk // bk, bk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(sk).reshape(sk // bk, bk)
+    qpos = jnp.arange(sq)
+
+    def step(dq_acc, xs):
+        k_c, v_c, kp = xs
+        s_c = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k_c).astype(jnp.float32)
+        s_c = s_c * scale
+        if causal:
+            mask = kp[None, :] <= qpos[:, None]
+            s_c = jnp.where(mask[None, :, None, None, :], s_c, -1e30)
+        p = jnp.exp(s_c - lseg[..., None])                  # (B,Sq,Hkv,G,BK)
+        dov = jnp.einsum("bqhgd,bkhd->bqhgk", dog.astype(jnp.float32),
+                         v_c.astype(jnp.float32))
+        ds = p * (dov - delta[..., None]) * scale
+        dq_c = jnp.einsum("bqhgk,bkhd->bqhgd", ds, k_c.astype(jnp.float32))
+        dk_c = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qg.astype(jnp.float32))
+        dv_c = jnp.einsum("bqhgk,bqhgd->bkhd", p, dog.astype(jnp.float32))
+        return dq_acc + dq_c, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, sq, hkv, g, dh), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(step, dq0, (kb, vb, kpos))
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(b, sk, hkv, dh)
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(b, sk, hkv, dh)
+    return (dq.reshape(b, sq, h, dh).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)

@@ -1,0 +1,136 @@
+"""SSD (Mamba2 state-space duality) chunk-scan kernel — the TPU kernel
+behind the SSM share of the roofline's ``memory_s_flash`` term.
+
+The jnp path (models/ssd.ssd_forward) materializes per-chunk quadratics
+(lmat, cb, att: (B,Q,Q,H)) through HBM; Mamba2's reference implementation
+fuses them in SRAM, and this kernel is the TPU-native equivalent: the only
+HBM traffic is the chunk tiles of x, B, C, dt in and y out — exactly the
+``ssd_io`` bytes hlo_analysis charges on the flash path.
+
+Design:
+  grid = (B·H, n_chunks) — the trailing chunk axis is sequential on TPU, so
+  the carried SSM state (P, N) lives in f32 VMEM scratch across chunks.
+  Per grid step, entirely in VMEM/registers:
+    cum   = cumsum(dt·a)                       (Q,)
+    lmat  = tril(exp(cum_i − cum_j))           (Q, Q)
+    att   = (C Bᵀ) ∘ lmat ∘ dt_j               (Q, Q)   [MXU dot + VPU mask]
+    y     = att @ x + (C ∘ exp(cum)) @ stateᵀ  (Q, P)   [two MXU dots]
+    state = state·exp(cum_Q) + xᵀ(dt·decay ∘ B)         [MXU dot]
+  B/C are shared across heads (ngroups=1): their index_map collapses the
+  head coordinate, so head tiles reuse the same (Q, N) blocks.
+
+VMEM working set at (Q=256, P=64, N=128): x 64KB, B/C 128KB each, att
+256KB f32, state 32KB — comfortably under a v5e core's ~16MB budget.
+
+Backward on the TPU target recomputes the quadratics in-kernel (the jnp
+path's jax.checkpoint on the chunk body mirrors this — §Perf iteration D2);
+the roofline charges 4× forward I/O for training, as with flash attention.
+
+Validated against ref.ssd_chunk_ref in tests/test_ssd_kernel.py (interpret
+mode) over (chunks, heads, state, headdim, dtype) sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xs_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, state_ref, *,
+                q: int, p: int, n: int):
+    """One (bh, chunk) grid step.
+
+    xs_ref: (1, Q, P); b_ref/c_ref: (1, Q, N); dt_ref: (1, Q);
+    a_ref: (1, 1) — per-head decay rate a = -exp(A_log[h]);
+    y_ref: (1, Q, P); scratch state_ref: (P, N) f32.
+    """
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xs = xs_ref[0].astype(jnp.float32)            # (Q, P)
+    bm = b_ref[0].astype(jnp.float32)             # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)             # (Q, N)
+    dt = dt_ref[0].astype(jnp.float32)            # (Q,)
+    a = a_ref[0, 0]
+
+    cum = jnp.cumsum(dt * a)                      # (Q,)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, None] - cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(cols <= rows, jnp.exp(li), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    att = cb * lmat * dt[None, :]
+    y = jax.lax.dot_general(att, xs, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+    # inter-chunk: state entering this chunk
+    c_dec = cm * jnp.exp(cum)[:, None]            # (Q, N)
+    y += jax.lax.dot_general(c_dec, state_ref[...],
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, P)
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update: S' = S·exp(cum_Q) + x^T (dt·decay_to_end ∘ B)
+    decay_end = jnp.exp(cum[-1] - cum) * dt       # (Q,)
+    s_in = bm * decay_end[:, None]                # (Q, N)
+    s_new = jax.lax.dot_general(xs, s_in, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = state_ref[...] * jnp.exp(cum[-1]) + s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xs: jax.Array, bmat: jax.Array, cmat: jax.Array,
+             dt: jax.Array, a: jax.Array, *, chunk: int = 256,
+             interpret: bool = False) -> jax.Array:
+    """y[b,l,h,p] = SSD(x, B, C, dt, a) with the chunked state recurrence.
+
+    xs: (B, L, H, P); bmat/cmat: (B, L, N) (shared across heads, ngroups=1);
+    dt: (B, L, H) — post-softplus step sizes; a: (H,) = -exp(A_log).
+    L % chunk == 0 (pad upstream).  Returns (B, L, H, P) in xs.dtype.
+    """
+    b, l, h, p = xs.shape
+    n = bmat.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    # (B, L, H, P) -> (B*H, L, P); B/C stay per-batch; dt -> (B*H, L)
+    xs_h = xs.transpose(0, 2, 1, 3).reshape(b * h, l, p)
+    dt_h = dt.transpose(0, 2, 1).reshape(b * h, l)
+    a_h = jnp.broadcast_to(a[None, :], (b, h)).reshape(b * h, 1)
+
+    def xmap(bh, ci):
+        return (bh, ci, 0)
+
+    def bcmap(bh, ci):
+        return (bh // h, ci, 0)      # head tiles share the (Q, N) block
+
+    def dtmap(bh, ci):
+        return (bh, ci)
+
+    def amap(bh, ci):
+        return (bh, 0)
+
+    kernel = functools.partial(_ssd_kernel, q=q, p=p, n=n)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), xmap),
+            pl.BlockSpec((1, q, n), bcmap),
+            pl.BlockSpec((1, q, n), bcmap),
+            pl.BlockSpec((1, q), dtmap),
+            pl.BlockSpec((1, 1), amap),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), xmap),
+        out_shape=jax.ShapeDtypeStruct((b * h, l, p), xs.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xs_h, bmat, cmat, dt_h, a_h)
+    return y.reshape(b, h, l, p).transpose(0, 2, 1, 3)

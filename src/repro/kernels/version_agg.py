@@ -1,0 +1,66 @@
+"""Per-version aggregate kernel — the cross-version analytics class of
+paper §2.2 ("aggregate count of protein-protein tuples with confidence > 0.9,
+for each version") as a TPU-native bitmap matvec.
+
+Insight: with the bitset vlist (see vlist_membership.py), the per-version
+aggregate over a value column is
+
+    out[v] = Σ_r  bit(r, v) · val[r]
+
+i.e. a {0,1}-matrix × vector product.  Unpacking 32 versions from one uint32
+word turns the CSR segment-sum (scatter-heavy, TPU-hostile) into a dense
+(BR, 32) × (BR,) reduction per word column — MXU/VPU-friendly, no scatters,
+sequential HBM traffic.  The grid walks (version-word, record-block) with the
+record-block axis innermost, accumulating into the output block (revisiting
+pattern: the output BlockSpec ignores the record-block index).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BR = 1024   # record rows per grid step
+
+
+def _agg_kernel(bm_ref, val_ref, o_ref):
+    rb = pl.program_id(1)
+
+    @pl.when(rb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    word = bm_ref[:, 0]                                   # (BR,) uint32
+    shifts = jnp.arange(32, dtype=jnp.uint32)             # (32,)
+    bits = (word[:, None] >> shifts[None, :]) & jnp.uint32(1)   # (BR, 32)
+    vals = val_ref[...]                                   # (BR,)
+    part = jnp.sum(bits.astype(jnp.float32) * vals[:, None], axis=0)  # (32,)
+    o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def version_aggregate(bitmap: jax.Array, values: jax.Array, *,
+                      block_r: int = DEFAULT_BR, interpret: bool = False
+                      ) -> jax.Array:
+    """out: (W*32,) float32 — per-version sums of ``values`` (masked upstream
+    for predicates; use values=1.0 for COUNT).
+
+    bitmap: (R, W) uint32; values: (R,) float32; R multiple of block_r.
+    """
+    r, w = bitmap.shape
+    br = min(block_r, r)
+    assert r % br == 0, (r, br)
+    grid = (w, r // br)   # record-block axis innermost => accumulation works
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, 1), lambda vw, rb: (rb, vw)),
+                  pl.BlockSpec((br,), lambda vw, rb: (rb,))],
+        out_specs=pl.BlockSpec((32,), lambda vw, rb: (vw,)),
+        out_shape=jax.ShapeDtypeStruct((w * 32,), jnp.float32),
+        interpret=interpret,
+    )(bitmap, values.astype(jnp.float32))
+    return out

@@ -1,0 +1,71 @@
+"""Version-membership bitmap kernel — the TPU realization of the paper's
+``ARRAY[v] <@ vlist`` containment scan (combined-table / split-by-vlist
+checkout, Table 1) and of version-predicate queries.
+
+Representation: the vlist column is a *bitset*: ``bitmap`` is (R, W) uint32
+with W = ceil(n_versions / 32); bit v of word v//32 set iff record r ∈
+version v.  This is the range/bitmap-encoded vlist the paper cites as a
+further compression ([14], §3.2) — a beyond-paper feature we make first-class
+because TPUs vectorize bit ops over 32-lane words natively.
+
+Kernel: one pass over the bitmap, BR rows per grid step; emits a per-row 0/1
+membership mask and a per-block popcount (so the host can size the compacted
+result without a second scan).  Bandwidth-bound by design: W words/row vs
+D attrs/row means the scan touches W/D of the data a full-table scan would —
+the quantitative reason combined-table checkout loses to split-by-rlist only
+by a small factor (paper Fig 3c) while commit loses by orders of magnitude.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BR = 1024   # rows per grid step
+
+
+def _membership_kernel(bm_ref, mask_ref, cnt_ref, *, word: int, bit: int):
+    w = bm_ref[:, word]                       # (BR,) uint32
+    m = (w >> jnp.uint32(bit)) & jnp.uint32(1)
+    mask_ref[...] = m.astype(jnp.int32)
+    cnt_ref[0] = jnp.sum(m.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("vid", "block_r", "interpret"))
+def membership_scan(bitmap: jax.Array, *, vid: int, block_r: int = DEFAULT_BR,
+                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Return (mask (R,) int32, per-block counts (R/BR,) int32) for version vid.
+
+    bitmap: (R, W) uint32, R a multiple of block_r (pad with zero rows).
+    """
+    r, w = bitmap.shape
+    br = min(block_r, r)
+    assert r % br == 0, (r, br)
+    word, bit = vid // 32, vid % 32
+    grid = (r // br,)
+    kernel = functools.partial(_membership_kernel, word=word, bit=bit)
+    mask, cnt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, w), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((r,), jnp.int32),
+                   jax.ShapeDtypeStruct((r // br,), jnp.int32)],
+        interpret=interpret,
+    )(bitmap)
+    return mask, cnt
+
+
+def build_bitmap(rlists, n_records: int) -> jax.Array:
+    """Host-side: CSR rlists -> (R, W) uint32 bitset (numpy)."""
+    import numpy as np
+    n_versions = len(rlists)
+    w = (n_versions + 31) // 32
+    bm = np.zeros((n_records, w), dtype=np.uint32)
+    for v, rl in enumerate(rlists):
+        bm[np.asarray(rl), v // 32] |= np.uint32(1 << (v % 32))
+    return bm

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# This is the ONLY entry point that fakes 512 devices (smoke tests and
+# benches see the real host devices).
+
+"""Multi-pod dry-run (DESIGN.md §6, brief "MULTI-POD DRY-RUN").
+
+For every (architecture × input shape × mesh):
+    jit(step).lower(**ShapeDtypeStructs).compile()
+then record memory_analysis(), cost_analysis(), and the collective bytes
+parsed from the compiled HLO — the roofline terms of EXPERIMENTS.md §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch internlm2_1_8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .. import configs
+from ..models.transformer import (abstract_params, cache_specs, param_specs)
+from ..sharding import MeshContext, logical_to_sharding, make_ctx
+from ..train.optimizer import AdamW
+from ..train.train_step import make_train_step
+from ..serve.serve_step import make_prefill_step, make_serve_step
+from .hlo_analysis import (count_params, flash_attention_io_bytes,
+                           model_flops, roofline_from_compiled)
+from .mesh import make_production_mesh
+
+
+def _batch_specs(batch_tree, cfg, kind: str, dp_axes):
+    """PartitionSpecs for the input batch."""
+    def spec(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                        for k in path)
+        nd = len(leaf.shape)
+        if "cache" in name:
+            return None   # placeholder, replaced below
+        b = leaf.shape[0] if nd else 1
+        dp = dp_axes if b >= 2 else None
+        return P(dp, *([None] * (nd - 1)))
+    tree = jax.tree_util.tree_map_with_path(spec, batch_tree)
+    if isinstance(batch_tree, dict) and "cache" in batch_tree:
+        b = batch_tree["tokens"].shape[0]
+        tree = dict(tree)
+        tree["cache"] = cache_specs(cfg, b)
+    return tree
+
+
+def active_params(cfg, abstract) -> float:
+    """N_active for MODEL_FLOPS: full N for dense; for MoE subtract the
+    non-routed fraction of expert params."""
+    total = count_params(abstract)
+    if cfg.moe is None:
+        return float(total)
+    m = cfg.moe
+    expert_params = (cfg.n_layers - cfg.first_dense) * m.n_experts * \
+        (3 * m.d_model * m.d_ff_expert)
+    active_expert = expert_params * (m.top_k / m.n_experts)
+    return float(total - expert_params + active_expert)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    arch = configs.canonical(arch)
+    ok, why = configs.cell_supported(arch, shape)
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    if not ok:
+        rec.update({"status": "skipped", "reason": why})
+        return rec
+
+    cfg = configs.get(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ctx = make_ctx(mesh)
+    chips = int(np.prod(list(mesh.shape.values())))
+    info = configs.SHAPES[shape]
+    tokens_per_step = info["seq"] * info["batch"] \
+        if info["kind"] in ("train", "prefill") else info["batch"]
+
+    t0 = time.time()
+    abstract = abstract_params(cfg)
+    specs = param_specs(cfg)
+    p_shard = logical_to_sharding(specs, mesh)
+    batch, kind = configs.input_specs(cfg, shape)
+    b_specs = _batch_specs(batch, cfg, kind, ctx.dp)
+    b_shard = logical_to_sharding(b_specs, mesh)
+
+    if kind == "train":
+        opt = AdamW()
+        opt_abstract = opt.init_abstract(abstract)
+        opt_specs = opt.state_specs(specs)
+        o_shard = logical_to_sharding(opt_specs, mesh)
+        step = make_train_step(cfg, ctx, opt)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        args = (abstract, opt_abstract, batch)
+    elif kind == "prefill":
+        step = make_prefill_step(cfg, ctx)
+        fn = jax.jit(step, in_shardings=(p_shard, b_shard))
+        args = (abstract, batch)
+    else:  # decode
+        step = make_serve_step(cfg, ctx)
+        cache_shard = b_shard["cache"]
+        fn = jax.jit(step, in_shardings=(p_shard, b_shard),
+                     out_shardings=(None, cache_shard),
+                     donate_argnums=(1,))
+        args = (abstract, batch)
+
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    flash_io = flash_attention_io_bytes(cfg, info["seq"], info["batch"],
+                                        kind, chips)
+    roof = roofline_from_compiled(compiled, chips, flash_io_bytes=flash_io)
+    xla_cost = compiled.cost_analysis()
+    n_active = active_params(cfg, abstract)
+    n_total = count_params(abstract)
+    mf = model_flops(n_active, tokens_per_step)
+    if kind == "train":
+        mf *= 1.0          # 6·N·D already counts fwd+bwd
+    else:
+        mf = 2.0 * n_active * tokens_per_step   # fwd only
+    per_device_flops = roof.flops
+    useful_ratio = mf / max(per_device_flops * chips, 1.0)
+
+    rec.update({
+        "status": "ok",
+        "kind": kind,
+        "chips": chips,
+        "seq": info["seq"], "batch": info["batch"],
+        "n_params": n_total,
+        "n_params_active": n_active,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   + mem.temp_size_in_bytes
+                                   - mem.alias_size_in_bytes,
+        },
+        "roofline": roof.as_dict(),
+        "xla_cost_flops": float(xla_cost.get("flops", 0.0)),   # while-body-once
+        "xla_cost_bytes": float(xla_cost.get("bytes accessed", 0.0)),
+        "model_flops": mf,
+        "useful_flops_ratio": useful_ratio,
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for per-cell JSON")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="resume: skip cells whose JSON already exists")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in configs.ARCH_IDS:
+            for s in configs.SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        for mk in meshes:
+            if args.skip_existing and args.out:
+                fn = os.path.join(args.out,
+                                  f"{configs.canonical(arch)}__{shape}__{mk}.json")
+                if os.path.exists(fn):
+                    continue
+            t0 = time.time()
+            try:
+                rec = run_cell(arch, shape, mk)
+            except Exception as e:
+                rec = {"arch": configs.canonical(arch), "shape": shape,
+                       "mesh": mk, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+            rec["wall_s"] = round(time.time() - t0, 1)
+            line = json.dumps(rec)
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                fn = os.path.join(args.out, f"{rec['arch']}__{shape}__{mk}.json")
+                with open(fn, "w") as f:
+                    f.write(line)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" dom={r['dominant']} comp={r['compute_s']:.3e}s "
+                         f"mem={r['memory_s']:.3e}s "
+                         f"memF={r['memory_s_flash']:.3e}s "
+                         f"coll={r['collective_s']:.3e}s "
+                         f"compile={rec['compile_s']}s")
+            elif status == "error":
+                extra = " " + rec["error"][:200]
+            print(f"[{rec['wall_s']:7.1f}s] {rec['arch']:24s} {shape:12s} "
+                  f"{mk:6s} {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Roofline-term derivation from compiled dry-run artifacts (DESIGN.md §6).
+
+Hardware model: TPU v5e.
+    compute_s    = HLO_FLOPs            / (chips × 197e12)
+    memory_s     = HLO_bytes accessed   / (chips × 819e9)
+    collective_s = Σ collective operand bytes (HLO text) / (chips × 50e9)
+
+cost_analysis() on the CPU backend reports per-program (per-replica) numbers
+for the SPMD-partitioned module, i.e. already per-device work; we therefore
+divide the collective bytes (which we sum over the whole module text — also
+the per-device program) by a single chip's link bandwidth, and use the
+per-device FLOPs/bytes directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s/link (~per chip usable)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[2048,1024]{1,0}' -> byte count.  Tuple shapes handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in an HLO module text.
+
+    Matches lines like:
+      %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), ...
+    The RESULT shape (left of '=') is used: for all-gather it is the full
+    gathered tensor (bytes moved onto the device); for reduce-scatter /
+    all-to-all the result is what lands; for all-reduce result==operand.
+    """
+    bytes_by: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"=\s*(\([^)]*\)|[\w\[\],{}]+)\s+([\w-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((k for k in _COLLECTIVES if op == k or op.startswith(k)), None)
+        if kind is None:
+            continue
+        shape_str = m.group(1)
+        b = _shape_bytes(shape_str)
+        bytes_by[kind] += b
+        count_by[kind] += 1
+    return CollectiveStats(bytes_by_kind=bytes_by, count_by_kind=count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll: CollectiveStats
+    chips: int
+    attn_bytes: float = 0.0      # measured bytes inside attn_core scopes
+    flash_io_bytes: float = 0.0  # kernel I/O replacing them on the flash path
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def flash_bytes(self) -> float:
+        """HBM bytes with the S×S softmax chain replaced by the Pallas flash
+        kernel's DMA I/O (kernels/flash_attention.py) — the TPU-target path."""
+        if self.attn_bytes <= 0:
+            return self.hbm_bytes
+        return self.hbm_bytes - self.attn_bytes + self.flash_io_bytes
+
+    @property
+    def memory_s_flash(self) -> float:
+        return self.flash_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll.total_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s_flash,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Binding term on the TPU-target (flash attention) path."""
+        return max(self.compute_s, self.memory_s_flash, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "attn_bytes_per_device": self.attn_bytes,
+            "flash_io_bytes_per_device": self.flash_io_bytes,
+            "collective_bytes": self.coll.total_bytes,
+            "collective_breakdown": self.coll.bytes_by_kind,
+            "collective_counts": self.coll.count_by_kind,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_s_flash": self.memory_s_flash,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           flash_io_bytes: float = 0.0) -> Roofline:
+    """Trip-count-aware roofline from the compiled HLO text.
+
+    ``compiled.cost_analysis()`` visits while bodies once (scan undercount),
+    so the authoritative numbers come from hlo_count.analyze; the XLA numbers
+    are kept in the record for reference (see dryrun.py).
+    """
+    from .hlo_count import analyze
+    text = compiled.as_text()
+    hc = analyze(text)
+    coll = CollectiveStats(
+        bytes_by_kind={k: int(v) for k, v in hc.coll_bytes.items()},
+        count_by_kind={k: int(v) for k, v in hc.coll_counts.items()})
+    return Roofline(flops=hc.flops, hbm_bytes=hc.bytes, coll=coll, chips=chips,
+                    attn_bytes=hc.attn_bytes, flash_io_bytes=flash_io_bytes)
+
+
+def flash_attention_io_bytes(cfg, seq: int, batch: int, kind: str,
+                             chips: int) -> float:
+    """Per-device HBM I/O of the Pallas flash-attention kernel replacing the
+    materialized softmax chain (DESIGN.md §Perf):
+
+      q = o = B·S·H·dh·2 bytes;  k = v = B·S·Hkv·dh·2 bytes
+      prefill:  q + k + v + o                      = 2q + 2kv
+      train:    fwd + remat-recompute fwd + bwd(q,k,v,o,dO reads;
+                dq,dk,dv writes)                   ≈ 8q + 8kv
+      decode:   no adjustment (the cache stream IS the traffic; flash
+                does not reduce it) — caller passes attn_bytes through.
+
+    Sharded perfectly over batch×heads in our layouts → divide by chips.
+    """
+    if kind == "decode":
+        return 0.0
+    # SSD (Mamba2) chunk scan: the Pallas kernel (kernels/ssd_scan.py)
+    # keeps lmat/cb/att and the carried state in VMEM; HBM I/O per layer is
+    # the chunk-tile reads (x, B, C, dt) + y write.
+    ssd_io = 0.0
+    if cfg.ssd is not None:
+        s = cfg.ssd
+        per_layer = (2 * batch * seq * s.d_inner          # x read + y write
+                     + 4 * batch * seq * s.d_state        # B, C (+grads rd)
+                     + 2 * batch * seq * s.n_heads) * 2   # dt; bf16
+        n_ssd = cfg.n_layers
+        ssd_io = n_ssd * per_layer * (4 if kind == "train" else 1)
+    if cfg.family == "ssm":
+        return ssd_io / chips
+    if cfg.attn_type == "mla" and cfg.mla is not None:
+        h = cfg.mla.n_heads
+        dh_q = cfg.mla.qk_nope + cfg.mla.qk_rope
+        q = batch * seq * h * dh_q * 2
+        kv_pair = batch * seq * h * (dh_q + cfg.mla.v_head) * 2  # expanded K+V
+    else:
+        h, hkv, dh = cfg.n_heads, cfg.n_kv, cfg.hd
+        q = batch * seq * h * dh * 2
+        kv_pair = 2 * batch * seq * hkv * dh * 2
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.shared_every, 1)
+    elif cfg.family == "encdec":
+        n_attn = cfg.n_enc_layers + 2 * cfg.n_layers   # self+self+cross
+    else:
+        n_attn = cfg.n_layers
+    per_layer_fwd = 2 * q + kv_pair
+    if kind == "train":
+        per_layer = 4 * per_layer_fwd          # fwd + recompute + bwd(≈2x)
+    else:
+        per_layer = per_layer_fwd
+    return (n_attn * per_layer + ssd_io) / chips
+
+
+def model_flops(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6·N·D (per step, dense) / 6·N_active·D (MoE)."""
+    return 6.0 * n_params_active * tokens
+
+
+def count_params(abstract_tree) -> int:
+    import numpy as np
+    import jax
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(abstract_tree)))

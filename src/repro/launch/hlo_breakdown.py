@@ -1,0 +1,103 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-op attribution of the roofline byte/flop terms (§Perf profiling tool).
+
+The dry-run gives one memory_s number per cell; hillclimbing needs to know
+*which ops* carry the bytes.  This walks the same trip-count-weighted HLO as
+hlo_count.analyze but aggregates (op kind, result shape) -> bytes/flops and
+prints the top contributors, so every §Perf hypothesis starts from the actual
+profile rather than a guess.
+
+Usage:
+    python -m repro.launch.hlo_breakdown --arch phi3_medium_14b \
+        --shape train_4k --mesh single --top 25
+"""
+import argparse
+import collections
+
+from .hlo_count import analyze
+
+
+def breakdown(text: str) -> tuple[collections.Counter, collections.Counter]:
+    """Returns (bytes_by_key, flops_by_key); key = 'op kind | result shape'.
+    Attribution shares hlo_count.analyze's TrafficModel exactly."""
+    by_bytes: collections.Counter = collections.Counter()
+    by_flops: collections.Counter = collections.Counter()
+
+    def attribute(key: str, b: float, f: float = 0.0) -> None:
+        by_bytes[key] += int(b)
+        if f:
+            by_flops[key] += int(f)
+
+    analyze(text, attribute=attribute)
+    return by_bytes, by_flops
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    # reuse the dry-run cell compiler
+    from . import dryrun as DR
+    from .. import configs
+    from ..sharding import logical_to_sharding, make_ctx
+    from ..models.transformer import abstract_params, param_specs, cache_specs
+    from ..train.optimizer import AdamW
+    from ..train.train_step import make_train_step
+    from ..serve.serve_step import make_prefill_step, make_serve_step
+    from .mesh import make_production_mesh
+    import jax
+
+    arch = configs.canonical(args.arch)
+    cfg = configs.get(arch)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    ctx = make_ctx(mesh)
+    abstract = abstract_params(cfg)
+    specs = param_specs(cfg)
+    p_shard = logical_to_sharding(specs, mesh)
+    batch, kind = configs.input_specs(cfg, args.shape)
+    b_specs = DR._batch_specs(batch, cfg, kind, ctx.dp)
+    b_shard = logical_to_sharding(b_specs, mesh)
+
+    if kind == "train":
+        opt = AdamW()
+        o_shard = logical_to_sharding(opt.state_specs(specs), mesh)
+        fn = jax.jit(make_train_step(cfg, ctx, opt),
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        a = (abstract, opt.init_abstract(abstract), batch)
+    elif kind == "prefill":
+        fn = jax.jit(make_prefill_step(cfg, ctx), in_shardings=(p_shard, b_shard))
+        a = (abstract, batch)
+    else:
+        fn = jax.jit(make_serve_step(cfg, ctx), in_shardings=(p_shard, b_shard),
+                     out_shardings=(None, b_shard["cache"]), donate_argnums=(1,))
+        a = (abstract, batch)
+
+    with mesh:
+        compiled = fn.lower(*a).compile()
+    text = compiled.as_text()
+    by_bytes, by_flops = breakdown(text)
+    tot_b = sum(by_bytes.values())
+    tot_f = sum(by_flops.values())
+    print(f"== {arch} {args.shape} {args.mesh}: total bytes/device "
+          f"{tot_b:.3e}  flops/device {tot_f:.3e}")
+    print(f"\n-- top {args.top} by bytes --")
+    cum = 0
+    for key, b in by_bytes.most_common(args.top):
+        cum += b
+        print(f"{b:12.3e}  ({b/tot_b*100:5.1f}% cum {cum/tot_b*100:5.1f}%)  {key}")
+    print(f"\n-- top 10 by flops --")
+    for key, f in by_flops.most_common(10):
+        print(f"{f:12.3e}  ({f/max(tot_f,1)*100:5.1f}%)  {key}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,801 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` visits while-loop bodies ONCE —
+with scan-over-layers and scan-over-microbatches (our whole model zoo) it
+undercounts FLOPs/bytes/collectives by 1-3 orders of magnitude.  This module
+re-derives the three roofline quantities by walking the optimized HLO text:
+
+  * FLOPs       — every ``dot`` (2 × numel(result) × K_contracted), including
+                  dots inside fused computations, × the product of enclosing
+                  while-loop trip counts (from ``known_trip_count`` backend
+                  config, falling back to the loop-condition constant).
+  * HBM bytes   — per materializing op (fusion, dot, copy, gather, scatter,
+                  dynamic-slice/update, reduce, sort, concatenate, broadcast,
+                  collectives, custom-call): result bytes + operand bytes
+                  (defs resolved through a per-computation symbol table).
+                  Post-fusion HLO makes this a faithful "one read per operand,
+                  one write per result" traffic model.
+  * collective bytes — result-shape bytes per collective kind, × trip counts.
+
+Validated against unrolled-vs-scanned programs in tests/test_hlo_count.py.
+
+Effective-width modeling (TPU-faithfulness).  The CPU backend's
+FloatNormalization pass legalizes bf16 arithmetic to f32: every bf16 dot is
+rewritten as ``convert(bf16->f32) -> f32 dot -> convert(f32->bf16)``, with the
+converts materialized as standalone kLoop fusions.  On the TPU target (native
+bf16 MXU) none of that traffic exists — the dot reads and writes bf16 HBM
+buffers directly.  Counting the CPU-normalized HLO verbatim therefore
+overstates HBM traffic by ~2-3x and makes bf16-vs-f32 program improvements
+invisible.  We model this with per-value *effective element widths*:
+
+  * pure-convert ops (plain ``convert`` or a fusion whose body is a single
+    convert) are FREE aliases — they would be register converts on TPU;
+  * a value's effective width is the minimum dtype width along its
+    convert-alias chain (an f32 copy of a bf16 value reads/writes 2 bytes);
+  * a value whose convert consumer is NARROWER is written at the narrow
+    width (a dot whose result is immediately downcast to bf16 emits bf16 on
+    TPU), and this narrowing propagates through width-transparent ops
+    (collectives / copy / transpose / reshape / slice) to a fixpoint.
+
+Validated in tests/test_hlo_count.py::test_bf16_dot_not_inflated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_BYTES_OPS = {
+    "fusion", "dot", "copy", "convolution", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "sort",
+    "concatenate", "broadcast", "slice", "pad", "iota", "select-and-scatter",
+    "reduce-window", "transpose", "custom-call", "rng", "cholesky",
+    "triangular-solve", "exponential", "log", "tanh", "add", "multiply",
+}
+# NOTE: raw elementwise ops (add/multiply/...) appear unfused only in trivial
+# programs; in optimized HLO they live inside fusions, counted via the fusion.
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "reshape",
+             "optimization-barrier", "convert"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _numel(shape_str: str) -> int:
+    n = 1
+    for d in _shape_dims(shape_str):
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    shape: str          # result shape string (may be a tuple "(...)")
+    op: str
+    rest: str           # everything after the opening paren
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[OpLine]
+    symbols: dict[str, str]      # %name -> result shape string
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index one past the paren that closes s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_op_line(s: str) -> Optional[OpLine]:
+    """'%name = SHAPE op(operands...), attrs' — SHAPE may be a nested tuple."""
+    m = re.match(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*", s)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i < len(s) and s[i] == "(":          # tuple result shape
+        j = _balanced(s, i)
+        shape = s[i:j]
+    else:
+        sm = re.match(r"[\w\[\],{}]+", s[i:])
+        if not sm:
+            return None
+        shape = sm.group(0)
+        j = i + sm.end()
+    om = re.match(r"\s+([\w\-]+)\(", s[j:])
+    if not om:
+        return None
+    op = om.group(1)
+    rest = s[j + om.end():]
+    return OpLine(name=name, shape=shape, op=op, rest=rest, line=s.strip())
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment_re.sub("", raw).rstrip()
+        s = line.strip()
+        if cur is None:
+            hm = re.match(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if hm and line.rstrip().endswith("{") and "->" in line and "=" not in \
+                    line.split("->")[0]:
+                cur = Computation(name=hm.group(2), ops=[], symbols={})
+                if hm.group(1):
+                    entry = hm.group(2)
+                # parameters: "%p: f32[2,3], %q: (s32[], f32[4])"
+                pstart = line.index("(", hm.start(2))
+                pend = _balanced(line, pstart)
+                params = line[pstart + 1:pend - 1]
+                k = 0
+                while k < len(params):
+                    pm = re.match(r"\s*%?([\w.\-]+)\s*:\s*", params[k:])
+                    if not pm:
+                        break
+                    pname = pm.group(1)
+                    k += pm.end()
+                    if k < len(params) and params[k] == "(":
+                        e = _balanced(params, k)
+                    else:
+                        sm = re.match(r"[\w\[\],{}]+", params[k:])
+                        e = k + (sm.end() if sm else 0)
+                    cur.symbols[pname] = params[k:e]
+                    k = e
+                    cm = re.match(r"\s*,", params[k:])
+                    if cm:
+                        k += cm.end()
+            continue
+        if s == "}" or s.startswith("} ") or s == "})":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        op = _parse_op_line(line)
+        if op is not None:
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.shape
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _dot_flops(op: OpLine, comp: Computation) -> int:
+    # contracting dims of the lhs
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not m:
+        return 2 * _numel(op.shape)   # degenerate
+    cdims = [int(d) for d in m.group(1).split(",") if d]
+    # lhs operand = first %name in the operand list
+    ops_m = _OPERAND_RE.findall(op.rest)
+    k = 1
+    if ops_m:
+        lhs_shape = comp.symbols.get(ops_m[0], "")
+        dims = _shape_dims(lhs_shape)
+        for c in cdims:
+            if c < len(dims):
+                k *= dims[c]
+    return 2 * _numel(op.shape) * k
+
+
+# ---------------------------------------------------------- eff. widths --
+_TRANSPARENT_OPS = {"copy", "transpose", "reshape", "slice", "bitcast",
+                    "bitcast-convert", "optimization-barrier"}
+_ALIAS_BODY_OPS = {"convert", "bitcast", "copy", "reshape", "transpose",
+                   "parameter"}
+
+
+def _decl_width(shape_str: str) -> Optional[float]:
+    """Element width in bytes; None for tuple / mixed-dtype shapes."""
+    widths = set()
+    for m in _SHAPE_RE.finditer(shape_str):
+        if m.group(1) in _DTYPE_BYTES:
+            widths.add(_DTYPE_BYTES[m.group(1)])
+    if len(widths) != 1:
+        return None
+    return float(widths.pop())
+
+
+@dataclasses.dataclass
+class FusionInfo:
+    """TPU-faithful I/O summary of a fused computation.
+
+    CPU FloatNormalization computes bf16 math in f32: params get upcast on
+    entry and roots may stay f32 for an f32-legalized consumer.  On the TPU
+    target the HBM buffers carry the JAX-level dtype, which we recover from
+    the convert structure inside the body.  Scan stacks are accessed via
+    dynamic-slice (read one layer's slice) / dynamic-update-slice (in-place
+    write of one slice): only the slice moves through HBM, not the buffer.
+    """
+    param_eff: dict[int, float]      # param index -> effective read width
+    param_read_bytes: dict[int, float]  # abs. override (slice-only params)
+    param_reduce_only: set           # params consumed only by reduces
+    root_eff: Optional[float]        # effective result width (None: declared)
+    root_write_bytes: Optional[float]   # abs. override (DUS root: the slice)
+    alias_like: bool                 # body is convert/bitcast/reshape only
+    movement_like: bool              # body is pure data movement
+    reduce_rooted: bool              # root op is a reduce
+
+
+_LOCAL_ALIAS_OPS = {"bitcast", "reshape", "copy", "transpose",
+                    "dynamic-slice"}
+
+
+def _fusion_info(called: Computation) -> FusionInfo:
+    real = [o for o in called.ops if o.op != "parameter"]
+    alias_like = bool(real) and all(o.op in _ALIAS_BODY_OPS for o in real)
+    _HEAVY = {"dot", "reduce", "reduce-window", "gather", "scatter",
+              "convolution", "sort", "rng"}
+    movement_like = bool(real) and not any(o.op in _HEAVY for o in real)
+    # reduce-like: contains a reduce (CPU also lowers row sums as
+    # reduce-window) and the result is much smaller than the reduced operand
+    # (covers mean = multiply(reduce, 1/n) roots etc.)
+    reduce_rooted = False
+    reds = [o for o in real if o.op in ("reduce", "reduce-window")]
+    if reds:
+        out_n = _numel(real[-1].shape)
+        red_in = max((_numel(called.symbols.get(s, ""))
+                      for red in reds
+                      for s in _OPERAND_RE.findall(red.rest)), default=0)
+        reduce_rooted = out_n * 8 <= max(red_in, 1)
+
+    param_idx: dict[str, int] = {}
+    for o in called.ops:
+        if o.op == "parameter":
+            m = re.search(r"parameter\((\d+)\)", o.line)
+            if m:
+                param_idx[o.name] = int(m.group(1))
+    for n in called.symbols:          # header-declared: 'param_3.17' style
+        m = re.match(r"param_(\d+)", n)
+        if m and n not in param_idx:
+            param_idx[n] = int(m.group(1))
+
+    # body-local alias chains: value -> param index it derives from.
+    # ``derives`` follows width-transparent ops INCLUDING dynamic-slice (for
+    # dtype recovery); ``derives_view`` follows pure view ops only (for the
+    # slice-only-param check — consumers of a slice are not param uses).
+    derives: dict[str, int] = dict(param_idx)
+    derives_view: dict[str, int] = dict(param_idx)
+    uses: dict[int, list[OpLine]] = {j: [] for j in param_idx.values()}
+    _VIEW_OPS = ("bitcast", "reshape", "copy", "transpose")
+    for o in real:
+        srcs = _OPERAND_RE.findall(o.rest)
+        # pure view ops don't count as uses — their consumers do (via derives)
+        if o.op not in _VIEW_OPS:
+            for s in srcs:
+                if s in derives_view:
+                    uses.setdefault(derives_view[s], []).append(o)
+        if srcs and srcs[0] in derives:
+            if o.op in _LOCAL_ALIAS_OPS:
+                derives[o.name] = derives[srcs[0]]
+            if o.op in _VIEW_OPS and srcs[0] in derives_view:
+                derives_view[o.name] = derives_view[srcs[0]]
+
+    param_eff: dict[int, float] = {}
+    root_eff: Optional[float] = None
+    for o in real:
+        if o.op != "convert":
+            continue
+        srcs = _OPERAND_RE.findall(o.rest)
+        if not srcs:
+            continue
+        sw = _decl_width(called.symbols.get(srcs[0], ""))
+        dw = _decl_width(o.shape)
+        if sw is None or dw is None:
+            continue
+        if srcs[0] in derives:       # param read at min(dtype-in, dtype-out)
+            j = derives[srcs[0]]
+            param_eff[j] = min(param_eff.get(j, sw), sw, dw)
+        if o is real[-1]:            # root convert: result at min width
+            root_eff = min(sw, dw)
+
+    # params whose only uses are dynamic-slice: HBM read = slice bytes
+    param_read_bytes: dict[int, float] = {}
+    param_reduce_only: set = set()
+    for j, ops in uses.items():
+        if ops and all(o.op == "dynamic-slice" for o in ops):
+            w = param_eff.get(j)
+            total = 0.0
+            for o in ops:
+                dw = _decl_width(o.shape)
+                eff = min(x for x in (w, dw) if x is not None) \
+                    if (w is not None or dw is not None) else None
+                total += _value_bytes(o.shape, eff)
+            param_read_bytes[j] = total
+        if ops and all(o.op in ("reduce", "reduce-window") for o in ops):
+            param_reduce_only.add(j)
+
+    # dynamic-update-slice root: in-place slice write, buffer untouched
+    # (walk back through width-transparent root ops: convert/bitcast/...)
+    root_write_bytes: Optional[float] = None
+    root_op = real[-1] if real else None
+    by_name = {o.name: o for o in real}
+    hops = 0
+    while root_op is not None and hops < 4 and \
+            root_op.op in ("convert", "bitcast", "reshape", "copy",
+                           "transpose"):
+        srcs_ = _OPERAND_RE.findall(root_op.rest)
+        root_op = by_name.get(srcs_[0]) if srcs_ else None
+        hops += 1
+    if root_op is not None and root_op.op == "dynamic-update-slice":
+        ops_ = _OPERAND_RE.findall(root_op.rest)
+        if len(ops_) >= 2:
+            upd = called.symbols.get(ops_[1], "")
+            root_write_bytes = _value_bytes(upd, _decl_width(upd))
+        # the big aliased buffer param is not read through HBM either
+        if ops_ and ops_[0] in derives_view:
+            param_read_bytes[derives_view[ops_[0]]] = root_write_bytes or 0.0
+
+    return FusionInfo(param_eff=param_eff, param_read_bytes=param_read_bytes,
+                      param_reduce_only=param_reduce_only,
+                      root_eff=root_eff, root_write_bytes=root_write_bytes,
+                      alias_like=alias_like, movement_like=movement_like,
+                      reduce_rooted=reduce_rooted)
+
+
+class TrafficModel:
+    """Per-module TPU-faithful traffic model over post-fusion CPU HLO.
+
+    bytes(op) = result write + operand reads, with
+      * effective widths that undo CPU FloatNormalization's bf16->f32
+        legalization (convert-chain minima, fusion param/root converts,
+        consumer-agreed write narrowing);
+      * alias ops (converts, convert/bitcast-only fusions, reshapes) free;
+      * producer->reduce edges elided (TPU input-fusions fuse elementwise
+        producers into reduces; CPU kLoop fusion materializes them).
+    """
+
+    def __init__(self, comps: dict[str, Computation]):
+        self.comps = comps
+        self.finfo: dict[str, FusionInfo] = {}
+        self._models: dict[str, dict] = {}
+
+    def _fusion_called(self, op: OpLine) -> Optional[str]:
+        if op.op != "fusion":
+            return None
+        m = _CALLS_RE.search(op.line)
+        return m.group(1) if m else None
+
+    def _info(self, cname: str) -> FusionInfo:
+        if cname not in self.finfo:
+            comp = self.comps.get(cname)
+            self.finfo[cname] = (_fusion_info(comp) if comp is not None
+                                 else FusionInfo({}, {}, set(), None, None,
+                                                 False, False, False))
+        return self.finfo[cname]
+
+    def _reads_via_reduce(self, c: OpLine, name: str,
+                          comp: Computation) -> bool:
+        """True if consumer ``c`` reads value ``name`` only through a
+        reduce/reduce-window (TPU input-fusion: the producer folds in)."""
+        if c.op in ("reduce", "reduce-window"):
+            return True
+        called = self._fusion_called(c)
+        if called is None:
+            return False
+        fi = self._info(called)
+        if fi.reduce_rooted:
+            return True
+        pos = -1
+        positions = []
+        for s in _OPERAND_RE.findall(c.rest):
+            if s not in comp.symbols:
+                continue
+            pos += 1
+            if s == name:
+                positions.append(pos)
+        return bool(positions) and all(p in fi.param_reduce_only
+                                       for p in positions)
+
+    def _model(self, comp: Computation) -> dict:
+        if comp.name in self._models:
+            return self._models[comp.name]
+        widths: dict[str, Optional[float]] = {
+            n: _decl_width(s) for n, s in comp.symbols.items()}
+        producers: dict[str, OpLine] = {o.name: o for o in comp.ops}
+
+        # -- pass 1: alias/transparent width propagation (min both ways) ----
+        edges: list[tuple[str, str]] = []
+        for op in comp.ops:
+            srcs = [s for s in _OPERAND_RE.findall(op.rest)
+                    if s in comp.symbols]
+            if not srcs:
+                continue
+            is_alias = op.op == "convert"
+            called = self._fusion_called(op)
+            if called is not None:
+                is_alias = self._info(called).alias_like
+            is_trans = (op.op in _TRANSPARENT_OPS
+                        or any(op.op == k or op.op.startswith(k + "-")
+                               for k in COLLECTIVE_KINDS))
+            if is_alias or is_trans:
+                edges.append((op.name, srcs[0]))
+        def _propagate():
+            for _ in range(4):
+                changed = False
+                for a, s in edges:
+                    wa, ws = widths.get(a), widths.get(s)
+                    if wa is None or ws is None:
+                        continue
+                    mm = min(wa, ws)
+                    if wa != mm:
+                        widths[a] = mm
+                        changed = True
+                    if ws != mm:
+                        widths[s] = mm
+                        changed = True
+                if not changed:
+                    return
+        _propagate()
+
+        # -- passes 2+3 iterated: read widths, then rule-R write narrowing --
+        # rule R: a non-reduce fusion / dot cannot materialize WIDER than its
+        # widest substantive input — f32 results computed from all-bf16
+        # inputs are FloatNormalization artifacts (the JAX-level value is
+        # bf16); genuine f32 accumulators are reduce-rooted and exempt.
+        consumers: dict[str, list] = {}
+        read_w: dict[tuple[str, int], Optional[float]] = {}
+        read_override: dict[tuple[str, int], float] = {}
+        write_w: dict[str, Optional[float]] = {}
+        _SMALL = 16384              # scales/stats don't gate rule R
+        for _ in range(3):
+            consumers.clear()
+            read_w.clear()
+            read_override.clear()
+            for op in comp.ops:
+                called = self._fusion_called(op)
+                fi = self._info(called) if called else None
+                pos = -1
+                substantive: list[float] = []
+                for s in _OPERAND_RE.findall(op.rest):
+                    if s not in comp.symbols:
+                        continue
+                    pos += 1
+                    w = widths.get(s)
+                    if fi is not None and w is not None \
+                            and pos in fi.param_eff:
+                        w = min(w, fi.param_eff[pos])
+                    if fi is not None and pos in fi.param_read_bytes:
+                        read_override[(op.name, pos)] = \
+                            fi.param_read_bytes[pos]
+                    # top-level dynamic-slice/DUS: only the slice moves
+                    if op.op == "dynamic-slice" and pos == 0:
+                        read_override[(op.name, pos)] = _value_bytes(
+                            op.shape, widths.get(op.name))
+                    if op.op == "dynamic-update-slice" and pos == 0:
+                        read_override[(op.name, pos)] = 0.0
+                    read_w[(op.name, pos)] = w
+                    consumers.setdefault(s, []).append((op, w))
+                    if w is not None and _numel(comp.symbols[s]) > _SMALL:
+                        substantive.append(w)
+                # rule R narrowing of this op's own result
+                if substantive and op.op in ("fusion", "dot", "concatenate"):
+                    reduce_like = (fi is not None and fi.reduce_rooted)
+                    cur = widths.get(op.name)
+                    if not reduce_like and cur is not None:
+                        widths[op.name] = min(cur, max(substantive))
+            _propagate()
+
+        elided: set[str] = set()
+        for name, shape in comp.symbols.items():
+            w = widths.get(name)
+            op = producers.get(name)
+            if op is not None:
+                called = self._fusion_called(op)
+                fi = self._info(called) if called else None
+                if fi is not None and fi.root_eff is not None and w is not None:
+                    w = min(w, fi.root_eff)
+            cons = consumers.get(name, [])
+            rws = [rw for _, rw in cons if rw is not None]
+            if w is not None and rws and len(rws) == len(cons):
+                w = min(w, max(rws))      # all consumers agree it is narrow
+            write_w[name] = w
+            # reduce-input elision: elementwise/fusion producer whose only
+            # consumers read it through a reduce (TPU input-fusion folds the
+            # producer into the reduce kernel)
+            if op is not None and cons and op.op in ("fusion", "multiply",
+                                                     "add", "subtract",
+                                                     "divide", "exponential",
+                                                     "broadcast", "select"):
+                called = self._fusion_called(op)
+                if called is None or not self._info(called).reduce_rooted:
+                    if all(self._reads_via_reduce(c, name, comp)
+                           for c, _ in cons):
+                        elided.add(name)
+
+        m = {"widths": widths, "write_w": write_w, "elided": elided,
+             "read_w": read_w, "consumers": consumers,
+             "read_override": read_override}
+        self._models[comp.name] = m
+        return m
+
+    # ------------------------------------------------------------- queries --
+    def is_free_alias(self, op: OpLine, comp: Computation) -> bool:
+        called = self._fusion_called(op)
+        return called is not None and self._info(called).alias_like
+
+    def result_bytes(self, op: OpLine, comp: Computation) -> float:
+        m = self._model(comp)
+        if op.name in m["elided"]:
+            return 0.0
+        if op.shape.startswith("(") and any(
+                op.op == k or op.op.startswith(k + "-")
+                for k in COLLECTIVE_KINDS):
+            ob = self.operand_bytes(op, comp)
+            n_res = sum(_numel(s.group(0))
+                        for s in _SHAPE_RE.finditer(op.shape))
+            n_ops = sum(_numel(comp.symbols.get(s, ""))
+                        for s in _OPERAND_RE.findall(op.rest)
+                        if s in comp.symbols)
+            return ob * (n_res / max(n_ops, 1))
+        called = self._fusion_called(op)
+        if called is not None:
+            fi = self._info(called)
+            if fi.root_write_bytes is not None:
+                return fi.root_write_bytes
+        if op.op == "dynamic-update-slice":
+            ops_ = [s for s in _OPERAND_RE.findall(op.rest)
+                    if s in comp.symbols]
+            if len(ops_) >= 2:
+                upd = comp.symbols[ops_[1]]
+                return _value_bytes(upd, m["widths"].get(ops_[1]))
+        return _value_bytes(op.shape, m["write_w"].get(op.name))
+
+    def operand_bytes(self, op: OpLine, comp: Computation) -> float:
+        m = self._model(comp)
+        total, pos = 0.0, -1
+        for s in _OPERAND_RE.findall(op.rest):
+            if s not in comp.symbols:
+                continue
+            pos += 1
+            if s in m["elided"]:
+                continue
+            key = (op.name, pos)
+            if key in m["read_override"]:
+                total += m["read_override"][key]
+                continue
+            total += _value_bytes(comp.symbols[s],
+                                  m["read_w"].get(key))
+        return total
+
+
+def _value_bytes(shape_str: str, width: Optional[float]) -> float:
+    """Byte size of a value at its effective width (declared for tuples)."""
+    if width is None:
+        return float(_shape_bytes(shape_str))
+    n = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        k = 1
+        for d in m.group(2).split(","):
+            if d:
+                k *= int(d)
+        n += k
+    return n * width
+
+
+def _trip_count(op: OpLine, comps: dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    cm = _COND_RE.search(op.line)
+    if cm and cm.group(1) in comps:
+        cond = comps[cm.group(1)]
+        for o in cond.ops:
+            c = re.search(r"constant\((\d+)\)", o.line)
+            if c:
+                return int(c.group(1))
+    return 1
+
+
+def _operand_bytes(op: OpLine, comp: Computation) -> int:
+    total = 0
+    for name in _OPERAND_RE.findall(op.rest):
+        total += _shape_bytes(comp.symbols.get(name, ""))
+    return total
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    attn_bytes: float = 0.0     # bytes inside jax.named_scope("attn_core")
+                                # (replaced by kernel I/O on the flash path)
+    coll_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    coll_counts: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _fusion_flops(comp: Computation, comps: dict[str, Computation]) -> int:
+    """dots inside a fused computation (kOutput fusions can contain dots)."""
+    total = 0
+    for op in comp.ops:
+        if op.op == "dot":
+            total += _dot_flops(op, comp)
+        cm = _CALLS_RE.search(op.line)
+        if cm and cm.group(1) in comps:
+            total += _fusion_flops(comps[cm.group(1)], comps)
+    return total
+
+
+def analyze(text: str, attribute=None) -> HloCost:
+    """attribute(key, byte_delta, flop_delta) — optional per-op callback for
+    profile breakdowns; key = 'opkind shape'."""
+    comps, entry = parse_hlo(text)
+    cost = HloCost()
+    if entry is None:
+        return cost
+    tm = TrafficModel(comps)
+    self_info = tm._info
+
+    def result_bytes(op: OpLine, comp: Computation) -> float:
+        return tm.result_bytes(op, comp)
+
+    def operand_bytes(op: OpLine, comp: Computation) -> float:
+        return tm.operand_bytes(op, comp)
+
+    def account(op: OpLine, kind: str, b: float, f: float = 0.0) -> None:
+        if attribute is not None:
+            attribute(f"{kind:22s} {op.shape[:64]}", b, f)
+
+    def walk(comp_name: str, mult: float) -> None:
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        # attn-taint: SPMD-inserted reshards/copies between tagged attention
+        # ops carry no metadata; attribute them to attn_core when all their
+        # substantive operands are attn-produced.
+        tainted: set = set()
+
+        _MOVE_KINDS = {"copy", "transpose", "slice", "concatenate", "pad",
+                       "bitcast", "reshape", "convert", "dynamic-slice",
+                       "dynamic-update-slice", "add", "multiply", "divide",
+                       "subtract", "exponential", "maximum", "select",
+                       "broadcast"}
+
+        def _attn(op: OpLine) -> bool:
+            if "attn_core" in op.line:
+                tainted.add(op.name)
+                return True
+            # SPMD-inserted data movement between tagged attention ops
+            # carries no metadata: attribute it to the attention chain.
+            moves = op.op in _MOVE_KINDS
+            if op.op == "fusion":
+                cm = _CALLS_RE.search(op.line)
+                moves = bool(cm) and cm.group(1) in comps and \
+                    self_info(cm.group(1)).movement_like
+            if not moves:
+                return False
+            subs = [s for s in _OPERAND_RE.findall(op.rest)
+                    if s in comp.symbols and _numel(comp.symbols[s]) > 16384]
+            if subs and all(s in tainted for s in subs):
+                tainted.add(op.name)
+                return True
+            return False
+
+        for op in comp.ops:
+            kind = op.op
+            is_attn = _attn(op)
+            if kind in _FREE_OPS:
+                continue
+            if kind == "while":
+                trip = _trip_count(op, comps)
+                bm = _BODY_RE.search(op.line)
+                if bm:
+                    walk(bm.group(1), mult * trip)
+                continue
+            if kind == "conditional":
+                for cm in re.finditer(r"(?:true_computation|false_computation|"
+                                      r"branch_computations=\{)([^}]*)", op.line):
+                    for name in _OPERAND_RE.findall(cm.group(1)):
+                        walk(name, mult)
+                continue
+            if kind == "call":
+                cm = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+                if cm:
+                    walk(cm.group(1), mult)
+                continue
+            coll = next((k for k in COLLECTIVE_KINDS
+                         if kind == k or kind.startswith(k + "-start")
+                         or kind.startswith(k + "-done")), None)
+            if coll is not None:
+                if kind.endswith("-done"):
+                    continue   # count the -start only
+                b = result_bytes(op, comp)
+                cost.coll_bytes[coll] += mult * b
+                cost.coll_counts[coll] += mult
+                tot = b + operand_bytes(op, comp)
+                cost.bytes += mult * tot
+                account(op, coll, mult * tot)
+                continue
+            if kind == "fusion":
+                if tm.is_free_alias(op, comp):
+                    continue   # FloatNormalization artifact: free on TPU
+                f = 0.0
+                cm = _CALLS_RE.search(op.line)
+                if cm and cm.group(1) in comps:
+                    f = _fusion_flops(comps[cm.group(1)], comps)
+                    cost.flops += mult * f
+                b = result_bytes(op, comp) + operand_bytes(op, comp)
+                cost.bytes += mult * b
+                if is_attn:
+                    cost.attn_bytes += mult * b
+                account(op, kind, mult * b, mult * f)
+                continue
+            if kind == "dot":
+                f = _dot_flops(op, comp)
+                cost.flops += mult * f
+                b = result_bytes(op, comp) + operand_bytes(op, comp)
+                cost.bytes += mult * b
+                if is_attn:
+                    cost.attn_bytes += mult * b
+                account(op, kind, mult * b, mult * f)
+                continue
+            if kind in _BYTES_OPS:
+                b = result_bytes(op, comp) + operand_bytes(op, comp)
+                cost.bytes += mult * b
+                if is_attn:
+                    cost.attn_bytes += mult * b
+                account(op, kind, mult * b)
+                continue
+            # unknown op: count bytes conservatively
+            b = result_bytes(op, comp)
+            cost.bytes += mult * b
+            account(op, kind, mult * b)
+
+    walk(entry, 1.0)
+    return cost

@@ -1,0 +1,142 @@
+"""Build the EXPERIMENTS.md §Dry-run / §Roofline tables from the per-cell
+JSON records the dry-run writes.
+
+Usage: python -m repro.launch.report experiments/dryrun_final
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from .hlo_analysis import PEAK_FLOPS
+
+
+def load(dirname: str) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def cell_fraction(r: dict) -> float:
+    """Roofline fraction: ideal model-FLOPs time / binding term."""
+    rf = r["roofline"]
+    bound = max(rf["compute_s"], rf.get("memory_s_flash", rf["memory_s"]),
+                rf["collective_s"])
+    ideal = r["model_flops"] / (r["chips"] * PEAK_FLOPS)
+    return ideal / max(bound, 1e-12)
+
+
+def roofline_table(rows: list[dict], mesh: str = "single") -> str:
+    """One line per (arch × shape): the three terms (memory on both the
+    materialized-softmax and flash-kernel paths), dominant, MODEL/HLO flops
+    ratio, roofline fraction, and the bottleneck note."""
+    out = ["| arch | shape | compute_s | memory_s | memory_s (flash) | "
+           "collective_s | dominant | MODEL/HLO | RF | peak GB | "
+           "bottleneck note |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skipped | — | — | — | {r['reason'][:58]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"ERROR | — | — | — | {r.get('error', '')[:58]} |")
+            continue
+        rf = r["roofline"]
+        note = bottleneck_note(r)
+        peak = r["memory"]["peak_estimate_bytes"] / 1e9
+        ratio = min(r["useful_flops_ratio"], 9.999)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | "
+            f"{fmt_s(rf.get('memory_s_flash', rf['memory_s']))} | "
+            f"{fmt_s(rf['collective_s'])} | {rf['dominant']} | "
+            f"{ratio:.3f} | {cell_fraction(r):.3f} | {peak:.1f} | {note} |")
+    return "\n".join(out)
+
+
+def bottleneck_note(r: dict) -> str:
+    rf = r["roofline"]
+    dom = rf["dominant"]
+    kind = r.get("kind", "")
+    if dom == "memory":
+        if kind == "decode":
+            return ("param+KV/state stream is the floor — larger decode "
+                    "batch or quantized KV to move it")
+        if r["arch"].startswith(("mamba2", "zamba2")):
+            return ("SSD chunk intermediates — an SSD Pallas kernel "
+                    "(chunk state in VMEM) is the next lever")
+        return ("activation streaming — bigger fusion regions / fp8 "
+                "activations to move it")
+    if dom == "collective":
+        bd = rf["collective_breakdown"]
+        top = max(bd, key=bd.get)
+        if kind == "train":
+            return (f"{top} dominates — FSDP weight gathers + grad "
+                    f"reduction; PP (weights resident per stage) or int8 "
+                    f"grad compression to move it")
+        return f"{top} dominates — reshard or overlap to move it"
+    return ("MXU-bound — good; the remaining lever is the MODEL/HLO gap "
+            "(less remat recompute)")
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | status | compile_s | args GB/chip | "
+           "temp GB/chip | collectives (counts) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']} | — | — | — | — |")
+            continue
+        m = r["memory"]
+        cc = {k: int(v) for k, v in r["roofline"]["collective_counts"].items()
+              if v}
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']} | {m['argument_bytes'] / 1e9:.2f} | "
+            f"{m['temp_bytes'] / 1e9:.2f} | {cc} |")
+    return "\n".join(out)
+
+
+def summary_stats(rows: list[dict]) -> str:
+    ok = [r for r in rows if r["status"] == "ok"]
+    fr = {}
+    for mesh in ("single", "multi"):
+        cells = [r for r in ok if r["mesh"] == mesh]
+        nz = [cell_fraction(r) for r in cells
+              if r["kind"] in ("train", "prefill")]
+        fr[mesh] = sum(nz) / max(len(nz), 1)
+    return (f"Mean roofline fraction over train/prefill cells: "
+            f"single-pod {fr['single']:.3f}, multi-pod {fr['multi']:.3f}.")
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_final"
+    rows = load(d)
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    er = len(rows) - ok - sk
+    print(f"## Dry-run summary: {ok} ok / {sk} skipped / {er} errors "
+          f"({len(rows)} cell-x-mesh records)\n")
+    print(summary_stats(rows) + "\n")
+    print("### §Roofline (single-pod 16x16 = 256 chips)\n")
+    print(roofline_table(rows, "single"))
+    print("\n### §Roofline (multi-pod 2x16x16 = 512 chips)\n")
+    print(roofline_table(rows, "multi"))
+    print("\n### §Dry-run detail\n")
+    print(dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

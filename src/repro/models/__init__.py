@@ -1,0 +1,9 @@
+"""The "unaware engine": model zoo for the assigned architectures."""
+from .transformer import (ArchConfig, abstract_params, cache_specs,
+                          decode_step, forward, init_cache,
+                          init_cache_abstract, init_params, loss_fn,
+                          param_specs)
+
+__all__ = ["ArchConfig", "abstract_params", "cache_specs", "decode_step",
+           "forward", "init_cache", "init_cache_abstract", "init_params",
+           "loss_fn", "param_specs"]

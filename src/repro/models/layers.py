@@ -1,0 +1,321 @@
+"""Shared layers: norms, RoPE, GQA attention (train + cached decode), SwiGLU.
+
+Pure-functional: params are nested dicts of arrays; ``*_init`` builds them,
+``*_abstract`` builds matching ShapeDtypeStruct trees (for .lower() without
+allocation).  Compute dtype is bf16; params are kept in fp32 and cast at use
+(mixed precision à la MaxText).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+# ---------------------------------------------------------------- helpers --
+def dense_init(key, d_in: int, d_out: int, bias: bool = False) -> Params:
+    w = jax.random.normal(key, (d_in, d_out), PARAM_DTYPE) * (d_in ** -0.5)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), PARAM_DTYPE)
+    return p
+
+
+def dense_abstract(d_in: int, d_out: int, bias: bool = False) -> Params:
+    p = {"w": jax.ShapeDtypeStruct((d_in, d_out), PARAM_DTYPE)}
+    if bias:
+        p["b"] = jax.ShapeDtypeStruct((d_out,), PARAM_DTYPE)
+    return p
+
+
+def dense(p: Params, x: jax.Array, gather: str | None = None) -> jax.Array:
+    """gather: "col" / "row" — unshard the FSDP dim of the weight before the
+    dot (ZeRO-3 style weight all-gather).  Without it the SPMD partitioner
+    may contract against the row-sharded weight and ALL-REDUCE the
+    activation-sized partial sums (§Perf iteration A4: measured on the
+    attention QKV projections — weight AG is 16-64x fewer wire bytes)."""
+    from ..sharding import shard as _shard
+    from jax.sharding import PartitionSpec as _P
+    w = p["w"].astype(x.dtype)
+    if gather == "col":
+        w = _shard(w, _P(None, "model"))
+    elif gather == "row":
+        w = _shard(w, _P("model", None))
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+@jax.custom_vjp
+def _rms_norm_core(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def _rms_norm_fwd(scale, x, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)                      # (..., 1) f32, tiny
+    y = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    return y, (scale, x, inv)
+
+
+def _rms_norm_bwd(res, dy):
+    scale, x, inv = res
+    d = x.shape[-1]
+    sdy = dy * scale.astype(dy.dtype)                   # bf16
+    # row stat in f32: mean(sdy * x) along features (fuses into the reduce)
+    m = jnp.sum(sdy.astype(jnp.float32) * x.astype(jnp.float32),
+                axis=-1, keepdims=True) / d             # (..., 1)
+    dx = sdy * inv.astype(dy.dtype) \
+        - x * ((m * inv ** 3).astype(dy.dtype))         # bf16 full-size only
+    dscale = jnp.sum((dy * x * inv.astype(dy.dtype)).astype(jnp.float32),
+                     axis=tuple(range(dy.ndim - 1))).astype(scale.dtype)
+    return dscale, dx, None
+
+
+_rms_norm_core.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Variance accumulates in f32 (fused into the reduce on TPU); all
+    full-size tensors — forward output AND the hand-written backward's
+    cotangents — stay in the compute dtype.  Autodiff of the f32 variance
+    path would otherwise materialize residual-shaped f32 chains that cost
+    ~45% of train-step HBM bytes (§Perf iteration A1)."""
+    return _rms_norm_core(scale, x, eps)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, Dh) — rotate pairs along Dh.  positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-np.arange(0, half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs            # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]   # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention --
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+
+
+def attn_init(key, cfg: AttnConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, cfg.d_model, cfg.n_heads * cfg.head_dim, cfg.qkv_bias),
+        "wk": dense_init(k2, cfg.d_model, cfg.n_kv * cfg.head_dim, cfg.qkv_bias),
+        "wv": dense_init(k3, cfg.d_model, cfg.n_kv * cfg.head_dim, cfg.qkv_bias),
+        "wo": dense_init(k4, cfg.n_heads * cfg.head_dim, cfg.d_model),
+    }
+
+
+def attn_abstract(cfg: AttnConfig) -> Params:
+    return {
+        "wq": dense_abstract(cfg.d_model, cfg.n_heads * cfg.head_dim, cfg.qkv_bias),
+        "wk": dense_abstract(cfg.d_model, cfg.n_kv * cfg.head_dim, cfg.qkv_bias),
+        "wv": dense_abstract(cfg.d_model, cfg.n_kv * cfg.head_dim, cfg.qkv_bias),
+        "wo": dense_abstract(cfg.n_heads * cfg.head_dim, cfg.d_model),
+    }
+
+
+def _sdpa(q, k, v, causal: bool, q_offset: int | jax.Array = 0) -> jax.Array:
+    """q: (B, Sq, H, Dh); k/v: (B, Sk, Hkv, Dh) — GQA by head repetition.
+
+    Sharding (§Perf iterations B1/B2): when the kv-head count divides the TP
+    axis, logits shard over kv-heads (the natural layout — SPMD handles it).
+    Otherwise the partitioner is left with a partial-Dh contraction and
+    ALL-REDUCES THE FULL SxS LOGITS (measured: 78s collective on llava
+    prefill_32k), so we q-SEQUENCE-shard the whole chain — forward AND
+    backward.  The backward must be pinned by hand: left to autodiff, SPMD
+    reshards the logits cotangent ("involuntary full rematerialization",
+    measured 69s collective on llava train_4k), so the seq-sharded path is a
+    custom_vjp with with_sharding_constraint on every SxS (co)tangent; only
+    the (B,Sk,Hkv,Dh) dK/dV partial-sums cross the TP axis.
+
+    The S×S chain is tagged ``attn_core``: on the TPU target it runs inside
+    the Pallas flash kernel (kernels/flash_attention.py) and never touches
+    HBM; the roofline reports both materialized-softmax and flash-path
+    memory terms (launch/hlo_analysis.py).
+    """
+    from ..sharding import current_ctx
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    ctx = current_ctx()
+    if ctx is not None and sq > 1 and sq == k.shape[1]:
+        tp = ctx.tp_size
+        if hkv % tp != 0 and sq % tp == 0 and tp > 1:
+            return _sdpa_seq_sharded(q, k, v, causal, q_offset)
+    return _sdpa_core(q, k, v, causal, q_offset)
+
+
+def _sdpa_core(q, k, v, causal: bool, q_offset) -> jax.Array:
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    with jax.named_scope("attn_core"):
+        qg = q.reshape(b, sq, hkv, group, dh)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+        logits *= dh ** -0.5
+        if causal:
+            qpos = jnp.arange(sq) + q_offset
+            kpos = jnp.arange(k.shape[1])
+            mask = kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _seq_specs():
+    """(qkv-like spec, logits spec) for the q-seq-sharded attention path."""
+    from ..sharding import dp_spec
+    return dp_spec("model", None, None), dp_spec(None, None, "model", None)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _sdpa_seq_sharded(q, k, v, causal: bool, q_offset=0):
+    out, _ = _sdpa_seq_fwd_impl(q, k, v, causal, q_offset)
+    return out
+
+
+def _sdpa_seq_fwd_impl(q, k, v, causal, q_offset):
+    from ..sharding import shard
+    qspec, lspec = _seq_specs()
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    q = shard(q, qspec)
+    with jax.named_scope("attn_core"):
+        qg = q.reshape(b, sq, hkv, group, dh)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+        logits = shard(logits * dh ** -0.5, lspec)
+        if causal:
+            qpos = jnp.arange(sq) + q_offset
+            kpos = jnp.arange(k.shape[1])
+            mask = kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = shard(jax.nn.softmax(logits, axis=-1).astype(q.dtype), lspec)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    out = shard(out.reshape(b, sq, h, dh), qspec)
+    return out, (q, k, v, probs)
+
+
+def _sdpa_seq_fwd(q, k, v, causal, q_offset):
+    out, res = _sdpa_seq_fwd_impl(q, k, v, causal, q_offset)
+    return out, res + (q_offset,)
+
+
+def _sdpa_seq_bwd(causal, res, do):
+    from ..sharding import shard
+    q, k, v, probs, _ = res
+    qspec, lspec = _seq_specs()
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    scale = dh ** -0.5
+    with jax.named_scope("attn_core"):
+        dog = shard(do, qspec).reshape(b, sq, hkv, group, dh)
+        qg = q.reshape(b, sq, hkv, group, dh)
+        pf = probs.astype(jnp.float32)
+        # dV: contract the seq-sharded q dim -> small (B,Sk,Hkv,Dh) psum
+        dv = jnp.einsum("bhgqk,bqhgd->bkhd", pf,
+                        dog.astype(jnp.float32))
+        dprobs = shard(jnp.einsum("bqhgd,bkhd->bhgqk",
+                                  dog.astype(jnp.float32),
+                                  v.astype(jnp.float32)), lspec)
+        dlogits = pf * (dprobs
+                        - jnp.sum(dprobs * pf, axis=-1, keepdims=True))
+        dlogits = shard(dlogits * scale, lspec)
+        dqg = jnp.einsum("bhgqk,bkhd->bqhgd", dlogits,
+                         k.astype(jnp.float32))
+        dk = jnp.einsum("bhgqk,bqhgd->bkhd", dlogits,
+                        qg.astype(jnp.float32))
+    dq = shard(dqg.reshape(b, sq, h, dh).astype(q.dtype), qspec)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype), None
+
+
+_sdpa_seq_sharded.defvjp(_sdpa_seq_fwd, _sdpa_seq_bwd)
+
+
+def attention(p: Params, x: jax.Array, cfg: AttnConfig,
+              positions: Optional[jax.Array] = None,
+              kv_cache: Optional[dict] = None,
+              cross_kv: Optional[tuple[jax.Array, jax.Array]] = None):
+    """Returns (out, new_kv_cache).  kv_cache: {"k","v": (B, Smax, Hkv, Dh),
+    "len": ()} for decode; cross_kv for encoder-decoder cross attention."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    q = dense(p["wq"], x, gather="col").reshape(b, s, cfg.n_heads, cfg.head_dim)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = _sdpa(q, k, v, causal=False)
+        return dense(p["wo"], out.reshape(b, s, -1), gather="row"), kv_cache
+    k = dense(p["wk"], x, gather="col").reshape(b, s, cfg.n_kv, cfg.head_dim)
+    v = dense(p["wv"], x, gather="col").reshape(b, s, cfg.n_kv, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if kv_cache is None:
+        out = _sdpa(q, k, v, causal=cfg.causal)
+        new_cache = None
+    else:
+        idx = kv_cache["len"]
+        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(kv_cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(kv_cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "len": idx + s}
+        # mask out cache slots beyond len via causal mask w/ offset
+        out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True,
+                    q_offset=idx)
+    return dense(p["wo"], out.reshape(b, s, -1), gather="row"), new_cache
+
+
+def cross_kv_init(p: Params, memory: jax.Array, cfg: AttnConfig):
+    """Precompute encoder-memory K/V once per sequence (enc-dec decode)."""
+    b, sm, _ = memory.shape
+    k = dense(p["wk"], memory).reshape(b, sm, cfg.n_kv, cfg.head_dim)
+    v = dense(p["wv"], memory).reshape(b, sm, cfg.n_kv, cfg.head_dim)
+    return k, v
+
+
+# ------------------------------------------------------------------- mlp --
+def swiglu_init(key, d_model: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, d_model, d_ff),
+            "wg": dense_init(k2, d_model, d_ff),
+            "wo": dense_init(k3, d_ff, d_model)}
+
+
+def swiglu_abstract(d_model: int, d_ff: int) -> Params:
+    return {"wi": dense_abstract(d_model, d_ff),
+            "wg": dense_abstract(d_model, d_ff),
+            "wo": dense_abstract(d_ff, d_model)}
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(dense(p["wg"], x, gather="col")) * dense(p["wi"], x,
+                                                             gather="col")
+    return dense(p["wo"], h, gather="row")

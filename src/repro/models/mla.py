@@ -1,0 +1,112 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+V2-Lite geometry: no q down-projection (q_lora_rank = None), kv_lora_rank=512,
+per-head qk_nope=128 / qk_rope=64 / v_head=128, 16 heads.
+
+Decode caches only the COMPRESSED latent c_kv (B, S, kv_lora + qk_rope): the
+paper's 93% KV-cache saving; K/V are re-expanded per step from the latent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_abstract, dense_init, rms_norm, rope
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+    rope_theta: float = 10000.0
+
+
+def mla_init(key, cfg: MLAConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope, cfg.qk_rope, cfg.v_head
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, h * (dn + dr)),
+        "wkv_a": dense_init(ks[1], cfg.d_model, cfg.kv_lora + dr),
+        "kv_norm": jnp.ones((cfg.kv_lora,), jnp.float32),
+        "wkv_b": dense_init(ks[2], cfg.kv_lora, h * (dn + dv)),
+        "wo": dense_init(ks[3], h * dv, cfg.d_model),
+    }
+
+
+def mla_abstract(cfg: MLAConfig) -> Params:
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope, cfg.qk_rope, cfg.v_head
+    return {
+        "wq": dense_abstract(cfg.d_model, h * (dn + dr)),
+        "wkv_a": dense_abstract(cfg.d_model, cfg.kv_lora + dr),
+        "kv_norm": jax.ShapeDtypeStruct((cfg.kv_lora,), jnp.float32),
+        "wkv_b": dense_abstract(cfg.kv_lora, h * (dn + dv)),
+        "wo": dense_abstract(h * dv, cfg.d_model),
+    }
+
+
+def _expand_kv(p: Params, c_kv: jax.Array, k_rope: jax.Array, cfg: MLAConfig):
+    """latent (B,S,kv_lora) + shared rope key (B,S,dr) -> per-head K,V."""
+    b, s, _ = c_kv.shape
+    h, dn, dv = cfg.n_heads, cfg.qk_nope, cfg.v_head
+    kv = dense(p["wkv_b"], c_kv).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, cfg.qk_rope))],
+                        axis=-1)
+    return k, v
+
+
+def mla_attention(p: Params, x: jax.Array, cfg: MLAConfig,
+                  positions: Optional[jax.Array] = None,
+                  cache: Optional[dict] = None):
+    """Returns (out, new_cache).  cache = {"ckv": (B, Smax, kv_lora+dr),
+    "len": ()} — compressed latent cache."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope, cfg.qk_rope, cfg.v_head
+
+    q = dense(p["wq"], x).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    ckv_full = dense(p["wkv_a"], x)                       # (B,S,kv_lora+dr)
+    c_kv = rms_norm(p["kv_norm"], ckv_full[..., :cfg.kv_lora])
+    k_rope = rope(ckv_full[..., None, cfg.kv_lora:], positions,
+                  cfg.rope_theta)[..., 0, :]              # (B,S,dr)
+    latent = jnp.concatenate([c_kv, k_rope], axis=-1)
+
+    if cache is None:
+        k, v = _expand_kv(p, c_kv, k_rope, cfg)
+        q_offset = 0
+        new_cache = None
+        kcache, vcache = k, v
+    else:
+        idx = cache["len"]
+        ckv_buf = jax.lax.dynamic_update_slice(
+            cache["ckv"], latent.astype(cache["ckv"].dtype), (0, idx, 0))
+        new_cache = {"ckv": ckv_buf, "len": idx + s}
+        full = ckv_buf.astype(x.dtype)
+        kcache, vcache = _expand_kv(p, full[..., :cfg.kv_lora],
+                                    full[..., cfg.kv_lora:], cfg)
+        q_offset = idx
+
+    dh = dn + dr
+    with jax.named_scope("attn_core"):
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kcache).astype(jnp.float32)
+        logits *= dh ** -0.5
+        qpos = jnp.arange(s) + q_offset
+        kpos = jnp.arange(kcache.shape[1])
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vcache)
+    return dense(p["wo"], out.reshape(b, s, h * dv)), new_cache

@@ -1,0 +1,204 @@
+"""Mamba2 SSD block (arXiv:2405.21060 — state-space duality), chunked.
+
+Train path: chunked SSD — intra-chunk quadratic term (the "attention dual")
+plus an inter-chunk state recurrence carried by ``lax.scan`` (nc = L/Q steps,
+each O(1) in sequence length).  Decode path: O(1) single-step state update —
+this is what makes the ``long_500k`` cells runnable where full attention is
+excluded.
+
+Geometry: d_inner = 2*d_model, headdim P, nheads H = d_inner/P, state N,
+ngroups G = 1 (B/C shared across heads), conv width 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_abstract, dense_init, rms_norm
+from ..sharding import dp_spec, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_state: int = 128          # N
+    headdim: int = 64           # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state   # x, B, C share the conv
+
+    @property
+    def d_in_proj(self) -> int:
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+
+def ssd_init(key, cfg: SSDConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, cfg.d_in_proj),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, cfg.conv_dim),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((cfg.conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "D": jnp.ones((cfg.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "norm": jnp.ones((cfg.d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], cfg.d_inner, cfg.d_model),
+    }
+
+
+def ssd_abstract(cfg: SSDConfig) -> Params:
+    f32 = jnp.float32
+    return {
+        "in_proj": dense_abstract(cfg.d_model, cfg.d_in_proj),
+        "conv_w": jax.ShapeDtypeStruct((cfg.conv_width, cfg.conv_dim), f32),
+        "conv_b": jax.ShapeDtypeStruct((cfg.conv_dim,), f32),
+        "A_log": jax.ShapeDtypeStruct((cfg.n_heads,), f32),
+        "D": jax.ShapeDtypeStruct((cfg.n_heads,), f32),
+        "dt_bias": jax.ShapeDtypeStruct((cfg.n_heads,), f32),
+        "norm": jax.ShapeDtypeStruct((cfg.d_inner,), f32),
+        "out_proj": dense_abstract(cfg.d_inner, cfg.d_model),
+    }
+
+
+def _split_proj(p, x, cfg: SSDConfig):
+    zxbcdt = dense(p["in_proj"], x)
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc: jax.Array, cfg: SSDConfig,
+                 conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv; xbc (B, L, conv_dim)."""
+    w = p["conv_w"].astype(xbc.dtype)           # (W, C)
+    width = cfg.conv_width
+    if conv_state is not None:
+        buf = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        new_state = buf[:, -(width - 1):]
+    else:
+        buf = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+        new_state = buf[:, -(width - 1):]
+    out = sum(buf[:, i:i + xbc.shape[1]] * w[i] for i in range(width))
+    out = out + p["conv_b"].astype(xbc.dtype)
+    return jax.nn.silu(out), new_state
+
+
+def ssd_forward(p: Params, x: jax.Array, cfg: SSDConfig):
+    """Train/prefill path.  x: (B, L, d_model), L % chunk == 0 (pad upstream).
+    Returns (y, final_state) — final_state (B, H, P, N) fp32."""
+    b, l, _ = x.shape
+    q = min(cfg.chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+    h, pdim, n = cfg.n_heads, cfg.headdim, cfg.d_state
+
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc, _ = _causal_conv(p, xbc, cfg)
+    # the chunk math is head-parallel: keep xs/dt head-sharded over TP so
+    # the scan never gathers the stacked (nc,B,Q,H,P) tiles (B/C are shared
+    # across heads — replicated, small)
+    xs = xbc[..., :cfg.d_inner].reshape(b, nc, q, h, pdim)
+    xs = shard(xs, dp_spec(None, None, "model", None))
+    bmat = xbc[..., cfg.d_inner:cfg.d_inner + n].reshape(b, nc, q, n)
+    cmat = xbc[..., cfg.d_inner + n:].reshape(b, nc, q, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"]).reshape(b, nc, q, h)   # (B,nc,Q,H)
+    dt = shard(dt, dp_spec(None, None, "model"))
+    a = -jnp.exp(p["A_log"])                                    # (H,)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(h_prev, inp):
+        """One chunk; bounds live intermediates to (B,Q,Q,H).
+
+        Tagged ``attn_core``: on the TPU target the whole chunk runs inside
+        the Pallas SSD kernel (kernels/ssd_scan.py) with lmat/cb/att in
+        VMEM; the roofline's flash path replaces these bytes with the
+        kernel's chunk-tile I/O (hlo_analysis.flash_attention_io_bytes).
+        """
+        xs_c, b_c, c_c, dt_c = inp          # (B,Q,H,P) (B,Q,N) (B,Q,N) (B,Q,H)
+        with jax.named_scope("attn_core"):
+            # f32 only inside the kernel-fused region: the scan carries bf16
+            # tiles (iteration D1 — the f32 stack copies cost ~40% of the
+            # SSD train-step bytes)
+            xs_c = xs_c.astype(jnp.float32)
+            b_c = b_c.astype(jnp.float32)
+            c_c = c_c.astype(jnp.float32)
+            dt_c = dt_c.astype(jnp.float32)
+            cum = jnp.cumsum(dt_c * a, axis=1)                      # (B,Q,H)
+            # intra-chunk (attention dual): L[i,j] = exp(cum_i - cum_j), i>=j
+            lmat = jnp.where(mask[None, :, :, None],
+                             jnp.exp(cum[:, :, None, :] - cum[:, None, :, :]),
+                             0.0)
+            cb = jnp.einsum("bin,bjn->bij", c_c, b_c)               # (B,Q,Q)
+            att = cb[..., None] * lmat * dt_c[:, None, :, :]        # (B,Q,Q,H)
+            y_c = jnp.einsum("bijh,bjhp->bihp", att, xs_c)
+            # inter-chunk: contribution of the state entering this chunk
+            y_c += jnp.einsum("bin,bih,bhpn->bihp", c_c, jnp.exp(cum), h_prev)
+            # state update: S_c = Σ_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j
+            decay_to_end = jnp.exp(cum[:, -1:, :] - cum)            # (B,Q,H)
+            s_c = jnp.einsum("bjh,bjn,bjhp->bhpn", decay_to_end * dt_c,
+                             b_c, xs_c)
+            h_new = h_prev * jnp.exp(cum[:, -1])[..., None, None] + s_c
+        return h_new, y_c.astype(x.dtype)
+
+    h0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+    # remat the chunk body: autodiff would otherwise SAVE the stacked
+    # (nc,B,Q,Q,H) intra-chunk quadratics across the scan (6.4 GB/instance
+    # on mamba2 train_4k); the fused kernel recomputes them in VMEM instead
+    h_final, y = jax.lax.scan(
+        jax.checkpoint(chunk_step), h0,
+        (xs.swapaxes(0, 1),
+         bmat.swapaxes(0, 1),
+         cmat.swapaxes(0, 1),
+         dt.swapaxes(0, 1).astype(x.dtype)))
+    y = y.swapaxes(0, 1).reshape(b, l, h, pdim)                 # (B,L,H,P)
+    y = shard(y, dp_spec(None, "model", None))
+    y = y + (p["D"].astype(x.dtype)[None, None, :, None]
+             * xs.reshape(b, l, h, pdim))
+    y = y.reshape(b, l, cfg.d_inner)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(p["norm"], y)
+    return dense(p["out_proj"], y), h_final
+
+
+def ssd_decode_step(p: Params, x: jax.Array, cfg: SSDConfig,
+                    state: dict):
+    """O(1) decode.  x: (B, 1, d_model); state = {"h": (B,H,P,N) f32,
+    "conv": (B, W-1, conv_dim)}."""
+    b = x.shape[0]
+    h, pdim, n = cfg.n_heads, cfg.headdim, cfg.d_state
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc, conv_state = _causal_conv(p, xbc, cfg, conv_state=state["conv"])
+    xs = xbc[:, 0, :cfg.d_inner].reshape(b, h, pdim)
+    bvec = xbc[:, 0, cfg.d_inner:cfg.d_inner + n]
+    cvec = xbc[:, 0, cfg.d_inner + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                        # (B,H)
+    hs = state["h"] * da[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bvec.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", cvec.astype(jnp.float32), hs)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(p["norm"], y)
+    return dense(p["out_proj"], y), {"h": hs, "conv": conv_state}

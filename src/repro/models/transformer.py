@@ -1,0 +1,622 @@
+"""Architecture assembly: every assigned family behind one ArchConfig.
+
+Families:
+  dense   — uniform [norm→attn→res, norm→swiglu→res] decoder stack
+  moe     — same, with routed-expert FFN (optionally first-k layers dense)
+  ssm     — uniform [norm→SSD→res] stack (attention-free)
+  hybrid  — Zamba2: groups of SSD layers + one SHARED attention+MLP block
+            applied between groups (same params every application)
+  encdec  — Seamless backbone: bidirectional encoder + causal decoder with
+            cross-attention; the audio frontend is a stub (precomputed frame
+            embeddings enter through batch["enc_embeds"])
+  vlm     — LLaVA-NeXT backbone: decoder-only; anyres vision frontend is a
+            stub (precomputed patch embeddings enter through
+            batch["patch_embeds"] and replace the first n_patches positions)
+
+Layer stacks are ``lax.scan`` over stacked params (small HLO, remat-friendly).
+Sharding: FSDP over "data" on weight rows, TP over "model" on QKV/FFN
+columns, batch over dp axes; see param_specs / DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import current_ctx, dp_spec, residual_spec, shard
+from . import layers as L
+from . import mla as MLA
+from . import moe as MOE
+from . import ssd as SSD
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv: int = 0
+    d_ff: int = 0
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    attn_type: str = "gqa"        # gqa | mla
+    mla: Optional[MLA.MLAConfig] = None
+    moe: Optional[MOE.MoEConfig] = None
+    first_dense: int = 0          # leading dense-FFN layers in an MoE stack
+    ssd: Optional[SSD.SSDConfig] = None
+    shared_every: int = 0         # hybrid: shared attn block between groups
+    n_enc_layers: int = 0         # encdec
+    n_patches: int = 0            # vlm stub frontend length
+    tie_embeddings: bool = True
+    remat: bool = True
+    microbatches: int = 1         # grad-accumulation steps in train_step
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/lm_head rows padded to a 512 multiple so the vocab dim
+        shards evenly 16-way (standard table padding; logits for pad ids are
+        live params that never receive label mass)."""
+        return -(-self.vocab // 512) * 512
+
+    def attn_cfg(self, causal: bool = True) -> L.AttnConfig:
+        return L.AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                            n_kv=self.n_kv, head_dim=self.hd,
+                            qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
+                            causal=causal)
+
+
+# =============================================================== blocks ====
+def _attn_block_init(key, cfg: ArchConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.attn_type == "mla":
+        p["attn"] = MLA.mla_init(ks[0], cfg.mla)
+    else:
+        p["attn"] = L.attn_init(ks[0], cfg.attn_cfg())
+    if cross:
+        p["lnx"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["xattn"] = L.attn_init(ks[2], cfg.attn_cfg(causal=False))
+    p["mlp"] = L.swiglu_init(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _attn_block_abstract(cfg: ArchConfig, cross: bool = False) -> Params:
+    f32 = jnp.float32
+    p = {"ln1": jax.ShapeDtypeStruct((cfg.d_model,), f32),
+         "ln2": jax.ShapeDtypeStruct((cfg.d_model,), f32)}
+    if cfg.attn_type == "mla":
+        p["attn"] = MLA.mla_abstract(cfg.mla)
+    else:
+        p["attn"] = L.attn_abstract(cfg.attn_cfg())
+    if cross:
+        p["lnx"] = jax.ShapeDtypeStruct((cfg.d_model,), f32)
+        p["xattn"] = L.attn_abstract(cfg.attn_cfg(causal=False))
+    p["mlp"] = L.swiglu_abstract(cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _moe_block_init(key, cfg: ArchConfig) -> Params:
+    p = _attn_block_init(key, cfg)
+    del p["mlp"]
+    p["moe"] = MOE.moe_init(jax.random.fold_in(key, 7), cfg.moe)
+    return p
+
+
+def _moe_block_abstract(cfg: ArchConfig) -> Params:
+    p = _attn_block_abstract(cfg)
+    del p["mlp"]
+    p["moe"] = MOE.moe_abstract(cfg.moe)
+    return p
+
+
+def _ssd_block_init(key, cfg: ArchConfig) -> Params:
+    return {"ln": jnp.ones((cfg.d_model,), jnp.float32),
+            "ssd": SSD.ssd_init(key, cfg.ssd)}
+
+
+def _ssd_block_abstract(cfg: ArchConfig) -> Params:
+    return {"ln": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+            "ssd": SSD.ssd_abstract(cfg.ssd)}
+
+
+def _attn_block_apply(p, x, cfg: ArchConfig, positions=None, cache=None,
+                      cross_kv=None, causal=True):
+    h = L.rms_norm(p["ln1"], x)
+    if cfg.attn_type == "mla":
+        a, cache = MLA.mla_attention(p["attn"], h, cfg.mla, positions=positions,
+                                     cache=cache)
+    else:
+        acfg = cfg.attn_cfg(causal=causal)
+        a, cache = L.attention(p["attn"], h, acfg, positions=positions,
+                               kv_cache=cache)
+    x = x + a
+    if "xattn" in p and cross_kv is not None:
+        h = L.rms_norm(p["lnx"], x)
+        a, _ = L.attention(p["xattn"], h, cfg.attn_cfg(causal=False),
+                           cross_kv=cross_kv)
+        x = x + a
+    h = L.rms_norm(p["ln2"], x)
+    if "moe" in p:
+        ctx = current_ctx()
+        y = MOE.moe_ffn(p["moe"], h, cfg.moe, ctx.mesh,
+                        dp_axes=ctx.dp, model_axis=ctx.tp) if ctx else \
+            _moe_ffn_local(p["moe"], h, cfg.moe)
+    else:
+        y = L.swiglu(p["mlp"], h)
+    x = x + y
+    x = shard(x, residual_spec(x))
+    return x, cache
+
+
+def _moe_ffn_local(p, x, mcfg: MOE.MoEConfig):
+    """Meshless fallback (unit tests): dense top-k MoE without dispatch."""
+    b, s, d = x.shape
+    logits = x.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)
+    top_w, top_e = jax.lax.top_k(jax.nn.softmax(logits, -1), mcfg.top_k)
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+    h = jnp.einsum("bsd,edf->bsef", x, p["wg"].astype(x.dtype))
+    h = jax.nn.silu(h) * jnp.einsum("bsd,edf->bsef", x, p["wi"].astype(x.dtype))
+    out_all = jnp.einsum("bsef,efd->bsed", h, p["wo"].astype(x.dtype))
+    sel = jnp.take_along_axis(out_all, top_e[..., None], axis=2)
+    y = (sel * top_w[..., None].astype(x.dtype)).sum(axis=2)
+    if mcfg.n_shared:
+        y = y + L.swiglu(p["shared"], x)
+    return y
+
+
+def _ssd_block_apply(p, x, cfg: ArchConfig, state=None):
+    h = L.rms_norm(p["ln"], x)
+    if state is None:
+        y, _ = SSD.ssd_forward(p["ssd"], h, cfg.ssd)
+        new_state = None
+    else:
+        y, new_state = SSD.ssd_decode_step(p["ssd"], h, cfg.ssd, state)
+    x = x + y
+    x = shard(x, residual_spec(x))
+    return x, new_state
+
+
+# ========================================================= whole model ====
+def _stacked(fn, n: int, key):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def _stacked_abstract(tree, n: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), tree)
+
+
+def _embed_init(key, cfg: ArchConfig) -> Params:
+    v = cfg.vocab_padded
+    e = jax.random.normal(key, (v, cfg.d_model), jnp.float32) \
+        * cfg.d_model ** -0.5
+    p = {"embed": e, "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(jax.random.fold_in(key, 3),
+                                         (cfg.d_model, v),
+                                         jnp.float32) * cfg.d_model ** -0.5
+    return p
+
+
+def _embed_abstract(cfg: ArchConfig) -> Params:
+    v = cfg.vocab_padded
+    p = {"embed": jax.ShapeDtypeStruct((v, cfg.d_model), jnp.float32),
+         "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.ShapeDtypeStruct((cfg.d_model, v), jnp.float32)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    k_emb, k_body, k_extra = jax.random.split(key, 3)
+    p = _embed_init(k_emb, cfg)
+    if cfg.family in ("dense", "vlm"):
+        p["layers"] = _stacked(lambda k: _attn_block_init(k, cfg), cfg.n_layers, k_body)
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense
+        if cfg.first_dense:
+            p["dense_layers"] = _stacked(lambda k: _attn_block_init(k, cfg),
+                                         cfg.first_dense, k_extra)
+        p["layers"] = _stacked(lambda k: _moe_block_init(k, cfg), n_moe, k_body)
+    elif cfg.family == "ssm":
+        p["layers"] = _stacked(lambda k: _ssd_block_init(k, cfg), cfg.n_layers, k_body)
+    elif cfg.family == "hybrid":
+        p["layers"] = _stacked(lambda k: _ssd_block_init(k, cfg), cfg.n_layers, k_body)
+        p["shared_block"] = _attn_block_init(k_extra, cfg)
+    elif cfg.family == "encdec":
+        p["enc_layers"] = _stacked(lambda k: _attn_block_init(k, cfg),
+                                   cfg.n_enc_layers, k_extra)
+        p["layers"] = _stacked(lambda k: _attn_block_init(k, cfg, cross=True),
+                               cfg.n_layers, k_body)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    p = _embed_abstract(cfg)
+    if cfg.family in ("dense", "vlm"):
+        p["layers"] = _stacked_abstract(_attn_block_abstract(cfg), cfg.n_layers)
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense
+        if cfg.first_dense:
+            p["dense_layers"] = _stacked_abstract(_attn_block_abstract(cfg),
+                                                  cfg.first_dense)
+        p["layers"] = _stacked_abstract(_moe_block_abstract(cfg), n_moe)
+    elif cfg.family == "ssm":
+        p["layers"] = _stacked_abstract(_ssd_block_abstract(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        p["layers"] = _stacked_abstract(_ssd_block_abstract(cfg), cfg.n_layers)
+        p["shared_block"] = _attn_block_abstract(cfg)
+    elif cfg.family == "encdec":
+        p["enc_layers"] = _stacked_abstract(_attn_block_abstract(cfg),
+                                            cfg.n_enc_layers)
+        p["layers"] = _stacked_abstract(_attn_block_abstract(cfg, cross=True),
+                                        cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def param_specs(cfg: ArchConfig) -> Params:
+    """PartitionSpecs mirroring abstract_params: FSDP("data") on weight rows,
+    TP("model") on QKV/FFN columns, vocab over "model"."""
+    def spec_for(path: tuple, leaf: jax.ShapeDtypeStruct) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        joined = "/".join(str(n) for n in names)
+        nd = len(leaf.shape)
+        stacked = names[0] in ("layers", "dense_layers", "enc_layers")
+        lead: tuple = (None,) if stacked else ()
+        body = nd - len(lead)
+        if "embed" in joined:
+            return P("model", "data")
+        if "lm_head" in joined:
+            return P("data", "model")
+        if body == 1:                      # norms, biases, A_log, D, ...
+            return P(*lead, None)
+        if "router" in joined:
+            return P(*lead, None, None)
+        if "moe/wi" in joined or "moe/wg" in joined or "moe/wo" in joined:
+            return P(*lead, "model", None, None)      # EP over experts
+        if any(t in joined for t in ("wq", "wk", "wv", "wi", "wg", "wkv_a",
+                                     "in_proj")):
+            return P(*lead, "data", "model")          # col-parallel
+        if any(t in joined for t in ("wo", "out_proj", "wkv_b")):
+            return P(*lead, "model", "data")          # row-parallel
+        if "conv_w" in joined:
+            return P(*lead, None, "model")
+        return P(*lead, *([None] * body))
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params(cfg))
+
+
+# --------------------------------------------------------------- forward --
+def _scan_stack(apply_fn, stacked_params, x, carry_extras=None):
+    def body(x, p):
+        y, _ = apply_fn(p, x)
+        return y, None
+    x, _ = jax.lax.scan(body, x, stacked_params)
+    return x
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def forward(params: Params, batch: dict, cfg: ArchConfig,
+            last_only: bool = False) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, vocab_padded); with
+    ``last_only`` the lm_head runs on the final position only (serving
+    prefill returns just the next-token distribution)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    emb = params["embed"].astype(L.COMPUTE_DTYPE)
+    x = jnp.take(emb, tokens, axis=0)
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    x = shard(x, residual_spec(x))
+
+    if cfg.family == "encdec":
+        enc = batch["enc_embeds"].astype(x.dtype)
+        enc = shard(enc, residual_spec(enc))
+
+        def enc_body(h, p):
+            h, _ = _maybe_remat(
+                lambda pp, hh: _attn_block_apply(pp, hh, cfg, causal=False),
+                cfg)(p, h)
+            return h, None
+        enc, _ = jax.lax.scan(enc_body, enc, params["enc_layers"])
+
+        def dec_body(h, p):
+            def blk(pp, hh):
+                ckv = L.cross_kv_init(pp["xattn"], enc, cfg.attn_cfg(causal=False))
+                return _attn_block_apply(pp, hh, cfg, cross_kv=ckv)
+            h, _ = _maybe_remat(blk, cfg)(p, h)
+            return h, None
+        x, _ = jax.lax.scan(dec_body, x, params["layers"])
+
+    elif cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_dense:
+            def d_body(h, p):
+                h, _ = _maybe_remat(
+                    lambda pp, hh: _attn_block_apply(pp, hh, cfg), cfg)(p, h)
+                return h, None
+            x, _ = jax.lax.scan(d_body, x, params["dense_layers"])
+
+        def body(h, p):
+            h, _ = _maybe_remat(
+                lambda pp, hh: _attn_block_apply(pp, hh, cfg), cfg)(p, h)
+            return h, None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+
+    elif cfg.family == "ssm":
+        def body(h, p):
+            h, _ = _maybe_remat(
+                lambda pp, hh: _ssd_block_apply(pp, hh, cfg), cfg)(p, h)
+            return h, None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+
+    elif cfg.family == "hybrid":
+        g = cfg.shared_every
+        n_groups = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_groups, g, *a.shape[1:]), params["layers"])
+        shared = params["shared_block"]
+
+        def group_body(h, pg):
+            def inner(hh, p):
+                hh, _ = _maybe_remat(
+                    lambda pp, xx: _ssd_block_apply(pp, xx, cfg), cfg)(p, hh)
+                return hh, None
+            h, _ = jax.lax.scan(inner, h, pg)
+            h, _ = _maybe_remat(
+                lambda pp, xx: _attn_block_apply(pp, xx, cfg), cfg)(shared, h)
+            return h, None
+        x, _ = jax.lax.scan(group_body, x, grouped)
+    else:
+        raise ValueError(cfg.family)
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = L.rms_norm(params["final_norm"], x)
+    if "lm_head" in params:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    else:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    logits = shard(logits, dp_spec(None, "model"))
+    return logits
+
+
+def loss_fn(params: Params, batch: dict, cfg: ArchConfig) -> jax.Array:
+    logits = forward(params, batch, cfg)
+    labels = batch["labels"]
+    mask = jnp.ones_like(labels, jnp.float32)
+    if cfg.family == "vlm":
+        pos = jnp.arange(labels.shape[1])[None, :]
+        mask = (pos >= cfg.n_patches).astype(jnp.float32)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------- decode --
+def init_cache_abstract(cfg: ArchConfig, batch: int, max_len: int) -> Any:
+    """ShapeDtypeStruct cache tree for one-token decode with a ``max_len``
+    context."""
+    bf16, f32, i32 = L.COMPUTE_DTYPE, jnp.float32, jnp.int32
+
+    def kv(n_layers):
+        return {"k": jax.ShapeDtypeStruct((n_layers, batch, max_len, cfg.n_kv, cfg.hd), bf16),
+                "v": jax.ShapeDtypeStruct((n_layers, batch, max_len, cfg.n_kv, cfg.hd), bf16),
+                "len": jax.ShapeDtypeStruct((), i32)}
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            return {"ckv": jax.ShapeDtypeStruct(
+                        (cfg.n_layers, batch, max_len, m.kv_lora + m.qk_rope), bf16),
+                    "len": jax.ShapeDtypeStruct((), i32)}
+        return kv(cfg.n_layers)
+    if cfg.family == "moe":
+        out = {}
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            out["ckv"] = jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, max_len, m.kv_lora + m.qk_rope), bf16)
+            out["len"] = jax.ShapeDtypeStruct((), i32)
+            return out
+        return kv(cfg.n_layers)
+    if cfg.family == "ssm":
+        s = cfg.ssd
+        return {"h": jax.ShapeDtypeStruct((cfg.n_layers, batch, s.n_heads,
+                                           s.headdim, s.d_state), f32),
+                "conv": jax.ShapeDtypeStruct((cfg.n_layers, batch,
+                                              s.conv_width - 1, s.conv_dim), f32)}
+    if cfg.family == "hybrid":
+        s = cfg.ssd
+        n_groups = cfg.n_layers // cfg.shared_every
+        return {"h": jax.ShapeDtypeStruct((cfg.n_layers, batch, s.n_heads,
+                                           s.headdim, s.d_state), f32),
+                "conv": jax.ShapeDtypeStruct((cfg.n_layers, batch,
+                                              s.conv_width - 1, s.conv_dim), f32),
+                "shared_k": jax.ShapeDtypeStruct((n_groups, batch, max_len,
+                                                  cfg.n_kv, cfg.hd), bf16),
+                "shared_v": jax.ShapeDtypeStruct((n_groups, batch, max_len,
+                                                  cfg.n_kv, cfg.hd), bf16),
+                "len": jax.ShapeDtypeStruct((), i32)}
+    if cfg.family == "encdec":
+        c = kv(cfg.n_layers)
+        c["enc_k"] = jax.ShapeDtypeStruct((cfg.n_layers, batch, max_len,
+                                           cfg.n_kv, cfg.hd), bf16)
+        c["enc_v"] = jax.ShapeDtypeStruct((cfg.n_layers, batch, max_len,
+                                           cfg.n_kv, cfg.hd), bf16)
+        return c
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, fill_len: int = 0) -> Any:
+    tree = init_cache_abstract(cfg, batch, max_len)
+    def z(s):
+        if s.shape == ():
+            return jnp.asarray(fill_len, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+    return jax.tree.map(z, tree)
+
+
+def cache_specs(cfg: ArchConfig, batch: int) -> Any:
+    """PartitionSpecs for the cache: batch over dp when shardable, the cache
+    SEQUENCE over "model" (sequence-parallel decode attention); SSD states
+    shard heads over "model"."""
+    tree = init_cache_abstract(cfg, batch, 8)   # shapes only; len irrelevant
+
+    def spec(path, leaf):
+        names = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                         for k in path)
+        dp = ("pod", "data") if batch > 1 else None
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if names in ("h", "conv"):            # (L, B, ...)
+            if names == "h":
+                return P(None, dp, "model", None, None)
+            return P(None, dp, None, None)
+        if "len" in names:
+            return P()
+        # KV-like: (L, B, S, Hkv, Dh) or latent (L, B, S, C)
+        rest = [None] * (nd - 3)
+        return P(None, dp, "model", *rest)
+
+    return jax.tree_util.tree_map_with_path(spec, tree)
+
+
+def decode_step(params: Params, batch: dict, cache: Any, cfg: ArchConfig):
+    """One-token decode.  batch["tokens"]: (B, 1).  Returns (logits, cache)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    emb = params["embed"].astype(L.COMPUTE_DTYPE)
+    x = jnp.take(emb, tokens, axis=0)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.attn_type == "mla":
+            pos = cache["len"]
+            def body(h, xs):
+                p, ckv_l = xs
+                blk_cache = {"ckv": ckv_l, "len": pos}
+                positions = jnp.full((b, 1), pos, jnp.int32)
+                hh = L.rms_norm(p["ln1"], h)
+                a, nc = MLA.mla_attention(p["attn"], hh, cfg.mla,
+                                          positions=positions, cache=blk_cache)
+                h = h + a
+                hh = L.rms_norm(p["ln2"], h)
+                if "moe" in p:
+                    ctx = current_ctx()
+                    y = MOE.moe_ffn(p["moe"], hh, cfg.moe, ctx.mesh, ctx.dp,
+                                    ctx.tp) if ctx else _moe_ffn_local(p["moe"], hh, cfg.moe)
+                else:
+                    y = L.swiglu(p["mlp"], hh)
+                return h + y, nc["ckv"]
+            stacks = [params["layers"]]
+            if cfg.first_dense:
+                # run dense layers first (their ckv occupies the leading slots)
+                nd = cfg.first_dense
+                x, ckv_d = jax.lax.scan(body, x, (params["dense_layers"],
+                                                  cache["ckv"][:nd]))
+                x, ckv_m = jax.lax.scan(body, x, (params["layers"],
+                                                  cache["ckv"][nd:]))
+                new_ckv = jnp.concatenate([ckv_d, ckv_m], axis=0)
+            else:
+                x, new_ckv = jax.lax.scan(body, x, (params["layers"], cache["ckv"]))
+            new_cache = {"ckv": new_ckv, "len": cache["len"] + 1}
+        else:
+            pos = cache["len"]
+            def body(h, xs):
+                p, k_l, v_l = xs
+                blk_cache = {"k": k_l, "v": v_l, "len": pos}
+                positions = jnp.full((b, 1), pos, jnp.int32)
+                h, nc = _attn_block_apply(p, h, cfg, positions=positions,
+                                          cache=blk_cache)
+                return h, (nc["k"], nc["v"])
+            x, (nk, nv) = jax.lax.scan(body, x, (params["layers"],
+                                                 cache["k"], cache["v"]))
+            new_cache = {"k": nk, "v": nv, "len": cache["len"] + 1}
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            p, h_l, c_l = xs
+            h, st = _ssd_block_apply(p, h, cfg, state={"h": h_l, "conv": c_l})
+            return h, (st["h"], st["conv"])
+        x, (nh, nconv) = jax.lax.scan(body, x, (params["layers"],
+                                                cache["h"], cache["conv"]))
+        new_cache = {"h": nh, "conv": nconv}
+
+    elif cfg.family == "hybrid":
+        g = cfg.shared_every
+        n_groups = cfg.n_layers // g
+        pos = cache["len"]
+        grouped = jax.tree.map(lambda a: a.reshape(n_groups, g, *a.shape[1:]),
+                               params["layers"])
+        gh = cache["h"].reshape(n_groups, g, *cache["h"].shape[1:])
+        gc = cache["conv"].reshape(n_groups, g, *cache["conv"].shape[1:])
+        shared = params["shared_block"]
+
+        def group_body(h, xs):
+            pg, h_g, c_g, sk, sv = xs
+            def inner(hh, ys):
+                p, h_l, c_l = ys
+                hh, st = _ssd_block_apply(p, hh, cfg,
+                                          state={"h": h_l, "conv": c_l})
+                return hh, (st["h"], st["conv"])
+            h, (nh, nc) = jax.lax.scan(inner, h, (pg, h_g, c_g))
+            blk_cache = {"k": sk, "v": sv, "len": pos}
+            positions = jnp.full((b, 1), pos, jnp.int32)
+            h, nkv = _attn_block_apply(shared, h, cfg, positions=positions,
+                                       cache=blk_cache)
+            return h, (nh, nc, nkv["k"], nkv["v"])
+        x, (nh, nconv, nsk, nsv) = jax.lax.scan(
+            group_body, x, (grouped, gh, gc, cache["shared_k"], cache["shared_v"]))
+        new_cache = {"h": nh.reshape(cache["h"].shape),
+                     "conv": nconv.reshape(cache["conv"].shape),
+                     "shared_k": nsk, "shared_v": nsv,
+                     "len": cache["len"] + 1}
+
+    elif cfg.family == "encdec":
+        pos = cache["len"]
+        def body(h, xs):
+            p, k_l, v_l, ek, ev = xs
+            blk_cache = {"k": k_l, "v": v_l, "len": pos}
+            positions = jnp.full((b, 1), pos, jnp.int32)
+            h, nc = _attn_block_apply(p, h, cfg, positions=positions,
+                                      cache=blk_cache,
+                                      cross_kv=(ek.astype(h.dtype),
+                                                ev.astype(h.dtype)))
+            return h, (nc["k"], nc["v"])
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"], cache["enc_k"],
+                                             cache["enc_v"]))
+        new_cache = dict(cache)
+        new_cache.update({"k": nk, "v": nv, "len": cache["len"] + 1})
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(params["final_norm"], x)
+    if "lm_head" in params:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    else:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    return logits[..., :cfg.vocab], new_cache

@@ -1,0 +1,3 @@
+from .serve_step import greedy_decode, make_prefill_step, make_serve_step
+
+__all__ = ["greedy_decode", "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,161 @@
+"""Paged KV cache — fixed-size pages + per-request page tables.
+
+The serving analogue of the paper's storage story: a request's KV history is
+a *version* of the cache; shared prompt prefixes are shared pages (records),
+exactly the CVD's record-dedup applied to attention state.  ``fork`` clones
+a request by copying its page table, not its pages (copy-on-write appends) —
+the same mechanism as checkout's zero-copy record sharing, and what makes
+versioned prompt-set serving (examples/serve_versions.py) cheap.
+
+Pure-JAX, jit-compatible: the pool is a preallocated
+(n_pages, page, n_kv, head_dim) array per layer; page tables are int32
+(max_pages_per_seq,) rows; allocation state is a watermark + free list
+carried functionally.
+
+For the dry-run shapes the dense ring cache in models/transformer.py is
+used (one request batch, uniform lengths); PagedKVCache is the
+variable-length multi-tenant path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = object
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    n_layers: int
+    n_kv: int
+    head_dim: int
+    page: int = 64             # tokens per page (sublane multiple)
+    n_pages: int = 256         # pool size per layer
+    max_pages_per_seq: int = 64
+
+
+def init_pool(cfg: PagedConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    """Functional cache state.
+
+    k/v:     (L, n_pages, page, n_kv, hd)   the page pools
+    table:   (B, max_pages_per_seq) int32   page ids per request (-1 empty)
+    length:  (B,) int32                     tokens written per request
+    refcnt:  (n_pages,) int32               copy-on-write sharing
+    watermark: () int32                     next never-used page
+    """
+    return {
+        "k": jnp.zeros((cfg.n_layers, cfg.n_pages, cfg.page, cfg.n_kv,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, cfg.n_pages, cfg.page, cfg.n_kv,
+                        cfg.head_dim), dtype),
+        "table": jnp.full((batch, cfg.max_pages_per_seq), -1, jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
+        "refcnt": jnp.zeros((cfg.n_pages,), jnp.int32),
+        "watermark": jnp.zeros((), jnp.int32),
+    }
+
+
+def _alloc(state: dict) -> tuple[dict, jax.Array]:
+    """Allocate one page (watermark bump; freed pages are reused by scanning
+    refcnt — O(n_pages), fine at serving pool sizes)."""
+    free = jnp.argmin(state["refcnt"])             # first refcnt==0 page
+    have_free = state["refcnt"][free] == 0
+    wm = state["watermark"]
+    page = jnp.where(have_free & (free < wm), free, wm)
+    new_wm = jnp.where(page == wm, wm + 1, wm)
+    refcnt = state["refcnt"].at[page].add(1)
+    return {**state, "watermark": new_wm, "refcnt": refcnt}, page
+
+
+def append(cfg: PagedConfig, state: dict, layer_kv: tuple, req: jax.Array
+           ) -> dict:
+    """Append ONE token's K/V for request ``req`` across all layers.
+
+    layer_kv: (k, v) each (L, n_kv, hd).  Copy-on-write: if the request's
+    current tail page is shared (refcnt > 1), it is copied to a fresh page
+    first — forked requests never clobber their sibling's history.
+    """
+    length = state["length"][req]
+    slot = length % cfg.page
+    tpos = length // cfg.page
+
+    def needs_page(state):
+        state, page = _alloc(state)
+        table = state["table"].at[req, tpos].set(page.astype(jnp.int32))
+        return {**state, "table": table}
+
+    state = jax.lax.cond(slot == 0, needs_page, lambda s: s, state)
+    page = state["table"][req, tpos]
+
+    # copy-on-write for shared tail pages
+    def cow(state):
+        st, fresh = _alloc(state)
+        k = st["k"].at[:, fresh].set(st["k"][:, page])
+        v = st["v"].at[:, fresh].set(st["v"][:, page])
+        refcnt = st["refcnt"].at[page].add(-1)
+        table = st["table"].at[req, tpos].set(fresh.astype(jnp.int32))
+        return {**st, "k": k, "v": v, "refcnt": refcnt, "table": table}
+
+    state = jax.lax.cond(state["refcnt"][page] > 1, cow, lambda s: s, state)
+    page = state["table"][req, tpos]
+
+    k_new, v_new = layer_kv
+    k = state["k"].at[:, page, slot].set(k_new.astype(state["k"].dtype))
+    v = state["v"].at[:, page, slot].set(v_new.astype(state["v"].dtype))
+    length_all = state["length"].at[req].add(1)
+    return {**state, "k": k, "v": v, "length": length_all}
+
+
+def fork(cfg: PagedConfig, state: dict, src: jax.Array, dst: jax.Array
+         ) -> dict:
+    """dst becomes a zero-copy clone of src (page-table copy + refcnt bump).
+    The paper's checkout: a new version sharing every record."""
+    row = state["table"][src]
+    used = row >= 0
+    bump = jnp.zeros_like(state["refcnt"]).at[
+        jnp.where(used, row, 0)].add(used.astype(jnp.int32))
+    return {**state,
+            "table": state["table"].at[dst].set(row),
+            "length": state["length"].at[dst].set(state["length"][src]),
+            "refcnt": state["refcnt"] + bump}
+
+
+def gather_kv(cfg: PagedConfig, state: dict, req: jax.Array, layer: int
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Materialize request ``req``'s history for one layer:
+    (S_max, n_kv, hd) k/v plus a validity mask (S_max,).  S_max =
+    max_pages_per_seq * page — attention masks the tail."""
+    row = state["table"][req]                     # (P,)
+    safe = jnp.maximum(row, 0)
+    k = state["k"][layer][safe]                   # (P, page, n_kv, hd)
+    v = state["v"][layer][safe]
+    pmax = cfg.max_pages_per_seq
+    smax = pmax * cfg.page
+    k = k.reshape(smax, cfg.n_kv, cfg.head_dim)
+    v = v.reshape(smax, cfg.n_kv, cfg.head_dim)
+    pos = jnp.arange(smax)
+    mask = pos < state["length"][req]
+    return k, v, mask
+
+
+def release(cfg: PagedConfig, state: dict, req: jax.Array) -> dict:
+    """Drop a finished request: decrement refcounts, clear its table row.
+    Pages reaching refcnt 0 become allocatable again."""
+    row = state["table"][req]
+    used = row >= 0
+    dec = jnp.zeros_like(state["refcnt"]).at[
+        jnp.where(used, row, 0)].add(-used.astype(jnp.int32))
+    return {**state,
+            "refcnt": jnp.maximum(state["refcnt"] + dec, 0),
+            "table": state["table"].at[req].set(-1),
+            "length": state["length"].at[req].set(0)}
+
+
+def pool_stats(state: dict) -> dict:
+    return {"pages_in_use": int((state["refcnt"] > 0).sum()),
+            "watermark": int(state["watermark"]),
+            "shared_pages": int((state["refcnt"] > 1).sum())}

@@ -1,0 +1,52 @@
+"""Serving: batched one-token decode against a fixed-capacity KV/state cache.
+
+``make_serve_step`` binds an ArchConfig + MeshContext into the jit-able
+``serve_step(params, batch) -> (logits, cache)`` the dry-run lowers for the
+decode_* and long_* shape cells.  Requests are plain token batches; prefix
+blocks can be served from a CVD (multiple prompt VERSIONS sharing a cached
+prefix — the serving analogue of dataset dedup), see examples/serve.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import ArchConfig, cache_specs, decode_step, forward
+from ..sharding import MeshContext, dp_spec, mesh_context, shard
+
+
+def make_serve_step(cfg: ArchConfig, ctx: MeshContext):
+    def serve_step(params, batch: dict):
+        """batch = {"tokens": (B,1), "cache": <cache tree>}."""
+        with mesh_context(ctx):
+            cache = batch["cache"]
+            logits, new_cache = decode_step(params, batch, cache, cfg)
+            return logits, new_cache
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, ctx: MeshContext):
+    def prefill_step(params, batch: dict):
+        with mesh_context(ctx):
+            batch = dict(batch)
+            batch["tokens"] = shard(batch["tokens"], dp_spec(None))
+            # serving prefill: only the next-token distribution leaves the
+            # step (the lm_head runs on the last position only)
+            logits = forward(params, batch, cfg, last_only=True)
+            return logits
+    return prefill_step
+
+
+def greedy_decode(params, cfg: ArchConfig, ctx: MeshContext, prompt,
+                  n_steps: int, cache):
+    """Simple greedy loop for the examples (CPU scale)."""
+    step = jax.jit(make_serve_step(cfg, ctx))
+    tok = prompt[:, -1:]
+    out = []
+    for _ in range(n_steps):
+        logits, cache = step(params, {"tokens": tok, "cache": cache})
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), cache

@@ -1,0 +1,10 @@
+from .optimizer import AdamW, AdamWState, cosine_schedule
+from .train_step import (accumulate_grads, ef_init, ef_init_abstract,
+                         ef_specs, make_eval_step, make_train_step,
+                         quantize_int8)
+from .checkpoint import CheckpointStore
+from . import ft
+
+__all__ = ["AdamW", "AdamWState", "cosine_schedule", "accumulate_grads",
+           "ef_init", "ef_init_abstract", "ef_specs", "make_eval_step",
+           "make_train_step", "quantize_int8", "CheckpointStore", "ft"]

@@ -1,0 +1,89 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and schedules.
+
+Implemented natively (no optax dependency) as a (init, update) pair; the
+update is a single fused tree_map so the compiled step keeps one pass over
+the optimizer state (one HBM read/write per tensor — matters at 14B params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def init_abstract(self, abstract_tree) -> AdamWState:
+        zeros = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          m=jax.tree.map(zeros, abstract_tree),
+                          v=jax.tree.map(zeros, abstract_tree))
+
+    def state_specs(self, param_specs):
+        from jax.sharding import PartitionSpec as P
+        return AdamWState(step=P(),
+                          m=param_specs,
+                          v=param_specs)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        # global-norm clip
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m2 / c1
+            vh = v2 / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+        flat, tdef = jax.tree.flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        mflat = tdef.flatten_up_to(state.m)
+        vflat = tdef.flatten_up_to(state.v)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(gflat, mflat, vflat, flat)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,19 @@
+import os
+
+# Tests must see the real host device count (the dry-run fakes 512 devices in
+# its own process only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def canon_rows(x):
+    """Row-set canonical form for set-equality of record tables."""
+    x = np.ascontiguousarray(x)
+    return x[np.lexsort(x.T[::-1])]

@@ -1,0 +1,118 @@
+"""Paper §4: LYRESPLIT guarantees, estimate exactness, binary search."""
+import numpy as np
+import pytest
+
+from repro.core import (generate, lyresplit, lyresplit_for_budget, to_tree)
+from repro.core.graph import checkout_cost, storage_cost
+from repro.core.lyresplit import lyresplit as _ls
+
+
+def _parts(workload, assignment):
+    return [[workload.graph.rlist(int(v)) for v in np.flatnonzero(assignment == k)]
+            for k in np.unique(assignment)]
+
+
+@pytest.mark.parametrize("kind,seed", [("SCI", 1), ("SCI", 2), ("CUR", 3)])
+def test_estimates_match_bipartite_exactly(kind, seed):
+    """LYRESPLIT never touches the bipartite graph, yet its tree-derived
+    S and C_avg must equal the real ones (the no-cross-version-diff identity)."""
+    w = generate(kind, n_versions=120, inserts=40, n_branches=15, n_attrs=4,
+                 seed=seed)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    res = lyresplit(tree, 0.35)
+    parts = _parts(w, res.assignment)
+    if kind == "SCI":   # exact only for trees (DAG merges duplicate records)
+        assert storage_cost(parts) == res.est_storage
+        assert abs(checkout_cost(parts) - res.est_checkout) < 1e-9
+    else:               # DAG: estimate is an upper bound (App. C.1)
+        assert storage_cost(parts) <= res.est_storage
+        assert checkout_cost(parts) <= res.est_checkout + 1e-9
+
+
+@pytest.mark.parametrize("delta", [0.1, 0.3, 0.5, 0.9])
+def test_theorem2_bounds(delta):
+    w = generate("SCI", n_versions=150, inserts=30, n_branches=20, n_attrs=4,
+                 seed=7)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    res = lyresplit(tree, delta)
+    e_over_v = w.n_edges / w.n_versions
+    # checkout bound: C_avg ≤ (1/δ)·|E|/|V|
+    assert res.est_checkout <= (1.0 / delta) * e_over_v + 1e-6
+    # storage bound: S ≤ (1+δ)^ℓ |R|
+    assert res.est_storage <= (1 + delta) ** res.levels * w.n_records + 1e-6
+
+
+def test_each_version_in_exactly_one_partition():
+    w = generate("SCI", n_versions=100, inserts=25, n_attrs=4, seed=11)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    res = lyresplit(tree, 0.4)
+    assert (res.assignment >= 0).all()
+    # partitions are connected subtrees: each non-root member's parent is
+    # either in the same partition or the member is the component root
+    for comp in res.components:
+        members = set(int(v) for v in comp.nodes)
+        roots = [v for v in members if int(tree.parent[v]) not in members]
+        assert len(roots) == 1
+
+
+def test_budget_search_respects_gamma():
+    w = generate("SCI", n_versions=150, inserts=30, n_branches=12, n_attrs=4,
+                 seed=5)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    for factor in (1.3, 1.5, 2.0, 3.0):
+        sr = lyresplit_for_budget(tree, gamma=factor * w.n_records)
+        assert sr.best.est_storage <= factor * w.n_records + 1e-6
+
+
+def test_delta_monotonicity():
+    """Appendix B superset property: larger δ => more splits, ≥ storage,
+    ≤ checkout."""
+    w = generate("SCI", n_versions=120, inserts=30, n_branches=15, n_attrs=4,
+                 seed=9)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    prev_s, prev_c = None, None
+    for delta in (0.05, 0.15, 0.3, 0.6, 0.95):
+        res = lyresplit(tree, delta)
+        if prev_s is not None:
+            assert res.est_storage >= prev_s - 1e-9
+            assert res.est_checkout <= prev_c + 1e-9
+        prev_s, prev_c = res.est_storage, res.est_checkout
+
+
+def test_extreme_deltas():
+    w = generate("SCI", n_versions=80, inserts=20, n_attrs=4, seed=13)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    # δ -> at the lower extreme: one partition, S = |R|, C = |R|
+    lo = lyresplit(tree, w.n_edges / (w.n_records * w.n_versions) * 0.5)
+    assert lo.n_partitions == 1
+    assert lo.est_storage == w.n_records
+
+
+def test_weighted_variant_bound():
+    """App. C.2: with frequencies, C_w ≤ (1/δ)·ζ where
+    ζ = Σ f_i |R(v_i)| / Σ f_i."""
+    w = generate("SCI", n_versions=100, inserts=25, n_attrs=4, seed=17)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    rng = np.random.default_rng(0)
+    freq = rng.integers(1, 10, size=tree.n).astype(np.float64)
+    delta = 0.3
+    res = lyresplit(tree, delta, freq=freq)
+    zeta = float((freq * tree.n_records).sum() / freq.sum())
+    assert res.est_checkout <= (1.0 / delta) * zeta + 1e-6
+
+
+def test_dag_reduction_counts_rhat():
+    w = generate("CUR", n_versions=100, inserts=30, n_branches=10, n_attrs=4,
+                 seed=19)
+    tree, rhat = to_tree(w.graph, w.vgraph)
+    assert rhat > 0                      # merges duplicate some records
+    assert (tree.parent >= 0).sum() == tree.n - 1   # proper tree
+
+
+def test_lyresplit_wall_time_scales():
+    """LYRESPLIT must be millisecond-fast: it sees only the version graph."""
+    w = generate("SCI", n_versions=1000, inserts=20, n_branches=50, n_attrs=2,
+                 seed=23)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    res = lyresplit(tree, 0.3)
+    assert res.wall_s < 1.0

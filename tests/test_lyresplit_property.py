@@ -1,0 +1,80 @@
+"""Property-based tests (hypothesis) over random version trees: the system's
+invariants must hold for EVERY derivation history, not just the benchmark's."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lyresplit import lyresplit, lyresplit_for_budget
+from repro.core.version_graph import WeightedTree
+
+
+@st.composite
+def version_trees(draw):
+    n = draw(st.integers(min_value=2, max_value=60))
+    parent = np.full(n, -1, dtype=np.int64)
+    sizes = np.zeros(n, dtype=np.int64)
+    edge_w = np.zeros(n, dtype=np.int64)
+    sizes[0] = draw(st.integers(min_value=1, max_value=200))
+    for v in range(1, n):
+        p = draw(st.integers(min_value=0, max_value=v - 1))
+        parent[v] = p
+        w = draw(st.integers(min_value=0, max_value=int(sizes[p])))
+        inserts = draw(st.integers(min_value=0, max_value=100))
+        sizes[v] = w + inserts          # keep w consistent: |R(v)| ≥ w(p,v)
+        edge_w[v] = w
+    return WeightedTree(parent=parent, n_records=sizes, edge_w=edge_w)
+
+
+def _tree_quantities(tree):
+    # |R| from the no-cross-version-diff identity; |E| = Σ|R(v)|
+    root = int(np.flatnonzero(tree.parent < 0)[0])
+    in_c = np.arange(tree.n) != root
+    n_R = int(tree.n_records[root]
+              + (tree.n_records[in_c] - tree.edge_w[in_c]).sum())
+    n_E = float(tree.n_records.sum())
+    return n_R, n_E
+
+
+@given(version_trees(), st.floats(min_value=0.05, max_value=1.0))
+@settings(max_examples=120, deadline=None)
+def test_partition_invariants(tree, delta):
+    res = lyresplit(tree, delta)
+    # every version in exactly one partition
+    assert (res.assignment >= 0).all()
+    counts = np.bincount(res.assignment)
+    assert counts.sum() == tree.n
+    # components are connected subtrees
+    for comp in res.components:
+        members = set(int(v) for v in comp.nodes)
+        roots = [v for v in members if int(tree.parent[v]) not in members]
+        assert len(roots) == 1
+    n_R, n_E = _tree_quantities(tree)
+    # storage ≥ |R| always; Theorem 2 storage bound
+    assert res.est_storage >= n_R
+    assert res.est_storage <= (1 + delta) ** max(res.levels, 0) * n_R + 1e-6
+    # checkout bound (Theorem 2)
+    if n_E > 0:
+        assert res.est_checkout <= (1.0 / delta) * (n_E / tree.n) + 1e-6
+    # partition stats are self-consistent
+    assert abs(sum(c.n_V * c.n_R for c in res.components) / tree.n
+               - res.est_checkout) < 1e-6
+
+
+@given(version_trees(), st.floats(min_value=1.05, max_value=4.0))
+@settings(max_examples=60, deadline=None)
+def test_budget_search_feasible(tree, factor):
+    n_R, _ = _tree_quantities(tree)
+    if n_R == 0:
+        return
+    sr = lyresplit_for_budget(tree, gamma=factor * n_R)
+    assert sr.best.est_storage <= factor * n_R + 1e-6
+
+
+@given(version_trees())
+@settings(max_examples=60, deadline=None)
+def test_delta_superset_property(tree):
+    """Appendix B: storage non-decreasing, checkout non-increasing in δ."""
+    deltas = [0.1, 0.4, 0.8]
+    results = [lyresplit(tree, d) for d in deltas]
+    for a, b in zip(results, results[1:]):
+        assert b.est_storage >= a.est_storage - 1e-9
+        assert b.est_checkout <= a.est_checkout + 1e-9

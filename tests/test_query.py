@@ -1,0 +1,79 @@
+"""Versioned query layer vs brute force."""
+import numpy as np
+
+from repro.core import generate
+from repro.core import query as Q
+
+
+def _w():
+    return generate("SCI", n_versions=50, inserts=30, n_attrs=6, seed=2)
+
+
+def test_version_scan():
+    w = _w()
+    out = Q.version_scan(w.graph, w.data, 7, lambda d: d[:, 2] > 500)
+    brute = w.data[w.graph.rlist(7)]
+    brute = brute[brute[:, 2] > 500]
+    np.testing.assert_array_equal(out, brute)
+
+
+def test_versions_with_record():
+    w = _w()
+    pred = lambda d: d[:, 3] == d[:, 3].max()
+    vids = Q.versions_with_record(w.graph, w.data, pred)
+    brute = [v for v in range(w.n_versions)
+             if pred(w.data)[w.graph.rlist(v)].any()]
+    np.testing.assert_array_equal(vids, brute)
+
+
+def test_per_version_aggregate_sum_count_max():
+    w = _w()
+    for agg in ("sum", "count", "max", "mean"):
+        got = Q.per_version_aggregate(w.graph, w.data, col=4, agg=agg)
+        for v in (0, 10, 49):
+            vals = w.data[w.graph.rlist(v), 4].astype(np.float64)
+            expect = {"sum": vals.sum(), "count": float(len(vals)),
+                      "max": vals.max(), "mean": vals.mean()}[agg]
+            np.testing.assert_allclose(got[v], expect)
+
+
+def test_aggregate_with_predicate():
+    """The intro's query: per-version count of tuples with col > threshold."""
+    w = _w()
+    got = Q.per_version_aggregate(w.graph, w.data, col=2, agg="count",
+                                  predicate=lambda d: d[:, 2] > 900)
+    for v in (3, 20):
+        vals = w.data[w.graph.rlist(v), 2]
+        np.testing.assert_allclose(got[v], (vals > 900).sum())
+
+
+def test_diff_symmetric():
+    w = _w()
+    d1, d2 = Q.diff(w.graph, w.data, 4, 9)
+    r4, r9 = set(w.graph.rlist(4).tolist()), set(w.graph.rlist(9).tolist())
+    assert len(d1) == len(r4 - r9)
+    assert len(d2) == len(r9 - r4)
+
+
+def test_versions_with_bulk_delete():
+    w = _w()
+    parents = [list(w.vgraph.parents(v)) for v in range(w.n_versions)]
+    vids = Q.versions_with_bulk_delete(w.graph, parents, threshold=0)
+    # brute force
+    brute = []
+    for v in range(w.n_versions):
+        for p in parents[v]:
+            if len(np.setdiff1d(w.graph.rlist(p), w.graph.rlist(v))) > 0:
+                brute.append(v)
+                break
+    np.testing.assert_array_equal(vids, brute)
+
+
+def test_join_versions():
+    w = _w()
+    out = Q.join_versions(w.graph, w.data, 5, 6, on=0)
+    a, b = w.data[w.graph.rlist(5)], w.data[w.graph.rlist(6)]
+    n_expected = sum((b[:, 0] == k).sum() for k in a[:, 0])
+    assert len(out) == n_expected
+    if len(out):
+        assert out.shape[1] == 2 * w.data.shape[1]

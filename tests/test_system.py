@@ -1,0 +1,70 @@
+"""End-to-end behaviour: the full bolt-on loop.
+
+Dataset CVD -> LYRESPLIT partitioning -> VersionedDataset checkout ->
+train a reduced arch for a few steps -> checkpoint (itself a CVD) ->
+simulated preemption -> resume with zero replay -> loss continues down.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import generate, lyresplit_for_budget, to_tree
+from repro.data import VersionedDataset
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.sharding import make_ctx
+from repro.train import AdamW, CheckpointStore, make_train_step
+from repro.train.ft import resume_latest
+
+
+def test_versioned_training_end_to_end(tmp_path):
+    # 1. a versioned corpus, partitioned under a 2x storage budget
+    w = generate("SCI", n_versions=30, inserts=80, n_branches=4, n_attrs=8,
+                 seed=0)
+    tree, _ = to_tree(w.graph, w.vgraph)
+    sr = lyresplit_for_budget(tree, gamma=2.0 * w.n_records)
+    ds = VersionedDataset.from_graph(w.graph, w.data % 256,
+                                     sr.best.assignment, seq_len=16)
+    vid = w.n_versions - 1
+
+    # 2. the unaware engine: reduced arch, host mesh
+    cfg = dataclasses.replace(configs.smoke("internlm2_1_8b"))
+    ctx = make_ctx(make_host_mesh())
+    params = init_params(cfg, jax.random.key(0))
+    opt = AdamW(lr=5e-3)
+    state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, ctx, opt))
+
+    store = CheckpointStore(str(tmp_path / "ckpt"), shard_rows=256)
+    losses = []
+    it = ds.batches(vid=vid, global_batch=4, seed=1, n_steps=4)
+    first_batch = None
+    for b in it:
+        # fixed batch for the loss-decrease check (stream determinism is
+        # covered by test_data_pipeline); cursor semantics still exercised
+        if first_batch is None:
+            first_batch = {"tokens": b["tokens"], "labels": b["labels"]}
+        params, state, m = step_fn(params, state, first_batch)
+        losses.append(float(m["loss"]))
+    ck_vid = store.save(step=4, tree=params,
+                        meta={"cursor": 4, "data_vid": int(vid)})
+
+    # 3. preemption: fresh process state, resume from the checkpoint CVD
+    rvid, params2, meta = resume_latest(store, treedef_like=params)
+    assert rvid == ck_vid and meta["cursor"] == 4
+    state2 = opt.init(params2)   # (optimizer state reset acceptable for test)
+    it2 = ds.batches(vid=meta["data_vid"], global_batch=4, seed=1,
+                     start_step=meta["cursor"], n_steps=3)
+    for b in it2:
+        assert b["step"] >= meta["cursor"]      # zero-replay resume
+        params2, state2, m = step_fn(params2, state2, first_batch)
+        losses.append(float(m["loss"]))
+
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+
+    # 4. provenance: the run knows exactly which dataset version it consumed
+    prov = ds.provenance(vid)
+    assert prov["vid"] == vid
