@@ -1,0 +1,16 @@
+# Single-entry targets for the tier-1 verify command and the perf benches.
+# PYTHONPATH=src is pinned here so nobody has to remember it.
+
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test bench bench-all
+
+test:           ## tier-1 verify: the command CI and the roadmap pin
+	$(PY) -m pytest -x -q
+
+bench:          ## batched checkout perf trajectory (BENCH_batched_checkout.json)
+	$(PY) -m benchmarks.batched_checkout
+
+bench-all:      ## every paper-figure benchmark
+	$(PY) -m benchmarks.run

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.  Figures covered:
   fig14 — online maintenance + migration                          §5.4
   d1    — checkout cost model linearity                           App. D.1
   kernel— TPU kernel data-movement microbench                     (ours)
+  batched_checkout — fused multi-version engine vs K-launch loop  (ours)
 """
 from __future__ import annotations
 
@@ -16,12 +17,12 @@ import time
 
 
 def main() -> None:
-    from . import (d1_cost_model, fig3_datamodels, fig9_tradeoff,
-                   fig10_runtime, fig12_partition_benefit, fig14_online,
-                   kernel_bench, roofline_bench)
+    from . import (batched_checkout, d1_cost_model, fig3_datamodels,
+                   fig9_tradeoff, fig10_runtime, fig12_partition_benefit,
+                   fig14_online, kernel_bench, roofline_bench)
     mods = [fig3_datamodels, fig9_tradeoff, fig10_runtime,
             fig12_partition_benefit, fig14_online, d1_cost_model,
-            kernel_bench, roofline_bench]
+            kernel_bench, roofline_bench, batched_checkout]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in mods:

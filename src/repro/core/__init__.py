@@ -1,5 +1,7 @@
 """OrpheusDB core: CVD storage models, LYRESPLIT partitioning, online
 maintenance, and the versioned query layer."""
+from .checkout import (checkout_partitioned, checkout_rlists,
+                       checkout_versions, checkout_versions_loop)
 from .graph import BipartiteGraph, checkout_cost, storage_cost, union_size
 from .version_graph import VersionGraph, WeightedTree, to_tree, edge_weights
 from .datamodels import (ALL_MODELS, CombinedTable, DeltaBased, SplitByRlist,
@@ -11,6 +13,8 @@ from .bench_gen import generate, Workload
 
 __all__ = [
     "BipartiteGraph", "checkout_cost", "storage_cost", "union_size",
+    "checkout_partitioned", "checkout_rlists", "checkout_versions",
+    "checkout_versions_loop",
     "VersionGraph", "WeightedTree", "to_tree", "edge_weights",
     "ALL_MODELS", "CombinedTable", "DeltaBased", "SplitByRlist",
     "SplitByVlist", "TablePerVersion",

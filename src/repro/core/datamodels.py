@@ -38,6 +38,18 @@ def _row_keys(rows: np.ndarray) -> np.ndarray:
     return rows.view([("", rows.dtype)] * rows.shape[1]).ravel()
 
 
+def _raw_keys(rows: np.ndarray) -> np.ndarray:
+    """Per-row raw-bytes view (plain void, compares as the row's bytes).
+
+    Unlike the structured view of ``_row_keys`` this sorts/joins on the raw
+    byte string — exactly the ``.tobytes()`` identity the dict-probe loops
+    used, so the vectorized joins below are byte-compatible with them.
+    """
+    rows = np.ascontiguousarray(rows)
+    width = rows.dtype.itemsize * (rows.shape[1] if rows.ndim == 2 else 1)
+    return rows.view(np.dtype((np.void, width))).ravel()
+
+
 class StorageModel:
     """Shared bookkeeping: a VersionGraph and per-version row sets."""
 
@@ -56,7 +68,21 @@ class StorageModel:
 
     def checkout_multi(self, vids: Sequence[int]) -> np.ndarray:
         """Merge checkout with PK-precedence order (paper §2.2): first two
-        attribute columns are the composite PK; earlier vids win."""
+        attribute columns are the composite PK; earlier vids win.
+
+        Vectorized: one concatenated materialization, then first-occurrence
+        dedup on the PK via ``np.unique(..., return_index=True)``.
+        """
+        mats = [self.checkout(v) for v in vids]
+        if not mats or sum(len(m) for m in mats) == 0:
+            return np.zeros((0, self.n_attrs), np.int32)
+        rows = np.concatenate(mats, axis=0)
+        pk = _raw_keys(rows[:, :2])
+        _, first = np.unique(pk, return_index=True)
+        return rows[np.sort(first)]
+
+    def checkout_multi_loop(self, vids: Sequence[int]) -> np.ndarray:
+        """Seed per-row dict-probe merge — kept as the oracle for tests."""
         out_rows: list[np.ndarray] = []
         seen: set[bytes] = set()
         for v in vids:
@@ -77,8 +103,33 @@ class StorageModel:
         """Split ``table`` into (matched parent rids, new row block).
 
         Row identity is full-row value equality against the parent(s) only
-        (*no cross-version diff* rule).
+        (*no cross-version diff* rule).  Vectorized sorted join on raw-byte
+        row keys; on a key collision among parent rows the LAST parent rid
+        wins, matching the dict-build order of the seed loop.
         """
+        table = np.asarray(table)
+        if len(parent_rids) == 0:
+            return np.zeros(0, np.int64), table
+        if len(table) == 0:
+            return np.zeros(0, np.int64), table
+        pkeys = _raw_keys(parent_rows)
+        tkeys = _raw_keys(table)
+        if pkeys.dtype != tkeys.dtype:    # row byte-widths differ: no matches
+            return np.zeros(0, np.int64), table
+        order = np.argsort(pkeys, kind="stable")
+        skeys = pkeys[order]
+        # last equal key in stable order == last dict write in the seed loop
+        pos = np.searchsorted(skeys, tkeys, side="right") - 1
+        hit = (pos >= 0) & (skeys[pos.clip(0)] == tkeys)
+        matched = np.asarray(parent_rids)[order[pos[hit]]].astype(np.int64)
+        new = table[~hit]
+        if len(new) == 0:
+            new = np.zeros((0, table.shape[1]), table.dtype)
+        return matched, new
+
+    def _diff_against_parents_loop(self, table, parent_rows, parent_rids
+                                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Seed per-row dict-probe diff — kept as the oracle for tests."""
         if len(parent_rids) == 0:
             return np.zeros(0, np.int64), table
         pk = {k.tobytes(): int(r) for k, r in zip(_row_keys(parent_rows), parent_rids)}
@@ -128,64 +179,75 @@ class _RidStore(StorageModel):
         return self.data_table[rids], rids
 
 
-class CombinedTable(_RidStore):
+class _VlistStore(_RidStore):
+    """Shared machinery for the two vlist models.
+
+    The LOGICAL layout is per-row vlist arrays (the paper's expensive commit
+    pattern — every contained row's vlist grows by one cell per commit, which
+    ``storage_cells`` still charges for).  The PHYSICAL index is incremental
+    CSR kept commit-side: per vid, the sorted rid array — so ``rlist`` and
+    ``checkout`` are O(|rlist|) array reads instead of a Python scan over
+    every row's vlist.
+    """
+
+    def __init__(self, n_attrs: int):
+        super().__init__(n_attrs)
+        self._rlists: list[np.ndarray] = []   # vid -> sorted unique rids
+        self._n_edges = 0                     # vlist cells incl. multiplicity
+
+    def rlist(self, vid: int) -> np.ndarray:
+        return self._rlists[vid]
+
+    @property
+    def vlists(self) -> list[np.ndarray]:
+        """rid -> sorted vid array, materialized from the CSR index
+        (kept for introspection; the scan-based models' logical view)."""
+        out: list[np.ndarray] = [np.zeros(0, np.int64) for _ in range(self._n_rows)]
+        if not self._rlists:
+            return out
+        owners = np.concatenate([np.full(len(rl), v, np.int64)
+                                 for v, rl in enumerate(self._rlists)])
+        rids = np.concatenate(self._rlists)
+        order = np.argsort(rids, kind="stable")
+        rids, owners = rids[order], owners[order]
+        bounds = np.flatnonzero(np.diff(rids)) + 1
+        for s, e in zip(np.concatenate([[0], bounds]),
+                        np.concatenate([bounds, [len(rids)]])):
+            if e > s:
+                out[int(rids[s])] = owners[s:e]
+        return out
+
+    def commit(self, table, parents=(), t=0.0):
+        p_rows, p_rids = self._parent_view(parents)
+        matched, new = self._diff_against_parents(table, p_rows, p_rids)
+        new_rids = self._append_rows(new)
+        # logical cost: a vlist cell per contained row (with multiplicity,
+        # like the seed's per-row append); physical index: one CSR entry
+        self._n_edges += len(matched) + len(new_rids)
+        self._rlists.append(np.unique(np.concatenate([matched, new_rids])))
+        return self.vgraph.add_version(parents, commit_t=t)
+
+
+class CombinedTable(_VlistStore):
     """Fig 1(b): single table with a per-row vlist array."""
 
     name = "combined-table"
 
-    def __init__(self, n_attrs: int):
-        super().__init__(n_attrs)
-        self.vlists: list[list[int]] = []   # per rid
-
-    def rlist(self, vid: int) -> np.ndarray:
-        return np.asarray([r for r, vl in enumerate(self.vlists) if vid in vl], np.int64)
-
-    def commit(self, table, parents=(), t=0.0):
-        vid_next = self.vgraph.n_versions
-        p_rows, p_rids = self._parent_view(parents)
-        matched, new = self._diff_against_parents(table, p_rows, p_rids)
-        new_rids = self._append_rows(new)
-        self.vlists.extend([] for _ in range(len(new_rids)))
-        # the expensive path: append vid to the vlist of EVERY contained row
-        for rid in matched:
-            self.vlists[int(rid)].append(vid_next)
-        for rid in new_rids:
-            self.vlists[int(rid)].append(vid_next)
-        return self.vgraph.add_version(parents, commit_t=t)
-
     def checkout(self, vid):
-        # full scan with containment check (ARRAY[v] <@ vlist)
-        mask = np.fromiter((vid in vl for vl in self.vlists), count=len(self.vlists),
-                           dtype=bool)
+        # full scan with containment check (ARRAY[v] <@ vlist), realized as
+        # a vectorized membership mask from the CSR index
+        mask = np.zeros(self._n_rows, bool)
+        mask[self._rlists[vid]] = True
         return self.data_table[mask]
 
     def storage_cells(self) -> int:
-        return self._n_rows * self.n_attrs + sum(len(v) for v in self.vlists)
+        return self._n_rows * self.n_attrs + self._n_edges
 
 
-class SplitByVlist(_RidStore):
+class SplitByVlist(_VlistStore):
     """Fig 1(c.i): data table + (rid -> vlist) versioning table."""
 
     name = "split-by-vlist"
-
-    def __init__(self, n_attrs: int):
-        super().__init__(n_attrs)
-        self.vlists: list[list[int]] = []
-
-    def rlist(self, vid: int) -> np.ndarray:
-        return np.asarray([r for r, vl in enumerate(self.vlists) if vid in vl], np.int64)
-
-    def commit(self, table, parents=(), t=0.0):
-        vid_next = self.vgraph.n_versions
-        p_rows, p_rids = self._parent_view(parents)
-        matched, new = self._diff_against_parents(table, p_rows, p_rids)
-        new_rids = self._append_rows(new)
-        self.vlists.extend([] for _ in range(len(new_rids)))
-        for rid in matched:            # same expensive append pattern
-            self.vlists[int(rid)].append(vid_next)
-        for rid in new_rids:
-            self.vlists[int(rid)].append(vid_next)
-        return self.vgraph.add_version(parents, commit_t=t)
 
     def checkout(self, vid):
         # scan versioning table for membership, then join rids with data table
@@ -194,7 +256,7 @@ class SplitByVlist(_RidStore):
 
     def storage_cells(self) -> int:
         return (self._n_rows * self.n_attrs          # data table
-                + sum(len(v) + 1 for v in self.vlists))  # rid + vlist cells
+                + self._n_edges + self._n_rows)      # rid + vlist cells
 
 
 class SplitByRlist(_RidStore):

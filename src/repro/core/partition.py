@@ -77,6 +77,13 @@ class PartitionedCVD:
         p = self.partitions[self.vid_to_pid[vid]]
         return p.block[p.local_rlist(vid)]
 
+    def checkout_many(self, vids, *, use_kernel: Optional[bool] = None
+                      ) -> list[np.ndarray]:
+        """Batched multi-version checkout: one fused gather per partition
+        touched (ONE ``checkout_batched`` kernel launch each on device)."""
+        from .checkout import checkout_partitioned
+        return checkout_partitioned(self, vids, use_kernel=use_kernel)
+
     def checkout_bytes_touched(self, vid: int) -> int:
         """Bytes streamed for the checkout under the sequential-scan (hash
         join probe) model of App. D.1: the whole partition block."""
@@ -87,15 +94,13 @@ class PartitionedCVD:
 def build_partition(graph: BipartiteGraph, data: np.ndarray, pid: int,
                     vids: np.ndarray) -> Partition:
     rls = [graph.rlist(int(v)) for v in vids]
-    grids = np.unique(np.concatenate(rls)) if rls else np.zeros(0, np.int64)
-    remap = {int(g): i for i, g in enumerate(grids)}
+    cat = np.concatenate(rls) if rls else np.zeros(0, np.int64)
+    grids = np.unique(cat)
     indptr = np.zeros(len(vids) + 1, dtype=np.int64)
-    chunks = []
     for i, rl in enumerate(rls):
-        loc = np.asarray([remap[int(r)] for r in rl], dtype=np.int64)
-        chunks.append(loc)
-        indptr[i + 1] = indptr[i] + len(loc)
-    indices = np.concatenate(chunks) if chunks else np.zeros(0, np.int64)
+        indptr[i + 1] = indptr[i] + len(rl)
+    # global -> local rid remap: one binary search over the sorted grid set
+    indices = np.searchsorted(grids, cat).astype(np.int64)
     block = data[grids] if len(grids) else np.zeros((0, data.shape[1]), data.dtype)
     return Partition(pid=pid, vids=np.asarray(vids, np.int64), grids=grids,
                      block=block, indptr=indptr, indices=indices,

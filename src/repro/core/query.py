@@ -7,7 +7,9 @@ vectorized pass — the delta model would need to materialize every version.
 
 Device-scale variants of the hot paths live in repro/kernels (version_agg,
 vlist_membership); this module is the engine-level reference implementation
-and the host fallback.
+and the host fallback.  Multi-version materialization routes through the
+batched checkout engine (core.checkout): ONE fused gather for every version
+a query touches, on device a single ``checkout_batched`` kernel launch.
 """
 from __future__ import annotations
 
@@ -15,6 +17,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from .checkout import checkout_versions
 from .graph import BipartiteGraph
 
 
@@ -96,9 +99,33 @@ def versions_with_bulk_delete(graph: BipartiteGraph, parents: Sequence[Sequence[
 
 
 def join_versions(graph: BipartiteGraph, data: np.ndarray, v1: int, v2: int,
-                  on: int = 0) -> np.ndarray:
+                  on: int = 0, *, use_kernel: Optional[bool] = None) -> np.ndarray:
     """Inner join of two versions on attribute ``on`` — the multi-version
-    renaming query of §2.2.  Returns concatenated row pairs."""
+    renaming query of §2.2.  Returns concatenated row pairs.
+
+    Both versions materialize in one fused batched-checkout pass; the join
+    itself is a vectorized sort-merge (stable sort of the build side, binary
+    search per probe key) with output ordered exactly like the seed's
+    hash-probe loop: probe order major, build order minor.
+    """
+    a, b = checkout_versions(graph, data, [v1, v2], use_kernel=use_kernel)
+    bo = np.argsort(b[:, on], kind="stable")
+    bs = b[bo, on]
+    lo = np.searchsorted(bs, a[:, on], side="left")
+    hi = np.searchsorted(bs, a[:, on], side="right")
+    cnt = hi - lo
+    total = int(cnt.sum())
+    if total == 0:
+        return np.zeros((0, 2 * data.shape[1]), data.dtype)
+    ai = np.repeat(np.arange(len(a)), cnt)
+    offs = np.concatenate([[0], np.cumsum(cnt)])
+    bi = np.arange(total) - np.repeat(offs[:-1], cnt) + np.repeat(lo, cnt)
+    return np.concatenate([a[ai], b[bo[bi]]], axis=1)
+
+
+def join_versions_loop(graph: BipartiteGraph, data: np.ndarray, v1: int,
+                       v2: int, on: int = 0) -> np.ndarray:
+    """Seed per-row hash-probe join — kept as the oracle for tests."""
     a, b = data[graph.rlist(v1)], data[graph.rlist(v2)]
     keys_b: dict[int, list[int]] = {}
     for i, k in enumerate(b[:, on]):

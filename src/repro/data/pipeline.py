@@ -11,7 +11,9 @@ a preempted run resumes mid-epoch from (vid, cursor) with zero replay.
 
 The hot path — materializing the checked-out version — runs through
 kernels.checkout_gather (tiled variant when the rlist is run-dense, which is
-exactly what LYRESPLIT partitioning produces).
+exactly what LYRESPLIT partitioning produces).  Multi-version materialization
+(``checkout_many``) runs through the batched checkout engine: one fused
+``checkout_batched`` kernel launch per partition for the whole version wave.
 """
 from __future__ import annotations
 
@@ -47,6 +49,13 @@ class VersionedDataset:
             packed, perm, _ = K.checkout_gather_tiled(p.block, rl)
             return np.asarray(packed)[perm]
         return np.asarray(K.checkout_gather(p.block, rl))
+
+    def checkout_many(self, vids, *, use_kernel: Optional[bool] = None
+                      ) -> list[np.ndarray]:
+        """Materialize a wave of versions via the fused batched engine —
+        one ``checkout_batched`` launch per partition touched (on TPU;
+        fused host gather otherwise, same default as the store)."""
+        return self.store.checkout_many(vids, use_kernel=use_kernel)
 
     # -- batching ------------------------------------------------------------------
     def batches(self, vid: int, global_batch: int, seed: int = 0,

@@ -2,9 +2,10 @@
 bitset scan, per-version aggregates.  See ops.py for the public wrappers and
 ref.py for the pure-jnp oracles."""
 from . import ops, ref
-from .ops import (build_bitmap, checkout_gather, checkout_gather_tiled,
-                  membership_scan, plan_tiles, version_aggregate)
+from .ops import (build_bitmap, checkout_batched, checkout_gather,
+                  checkout_gather_tiled, membership_scan, plan_batched,
+                  plan_tiles, version_aggregate)
 
-__all__ = ["ops", "ref", "build_bitmap", "checkout_gather",
-           "checkout_gather_tiled", "membership_scan", "plan_tiles",
-           "version_aggregate"]
+__all__ = ["ops", "ref", "build_bitmap", "checkout_batched",
+           "checkout_gather", "checkout_gather_tiled", "membership_scan",
+           "plan_batched", "plan_tiles", "version_aggregate"]

@@ -1,0 +1,170 @@
+"""Batched multi-version checkout kernel — K versions, ONE ``pallas_call``.
+
+``checkout_gather`` retrieves one version per kernel launch; serving heavy
+multi-user traffic means retrieving MANY versions per request wave (RStore's
+batched retrieval; Bhattacherjee et al.'s recreation/storage tradeoff).  K
+launches pay K pipeline spin-ups and K stalls between DMA streams.  This
+kernel fuses the whole wave into one scalar-prefetched plan executed by a
+single launch — one pipelined DMA stream for the concatenation of K rlists.
+
+Data flow::
+
+    rlists (K versions, sorted rids each)
+      └─ plan_batched                       [host, vectorized numpy]
+           chunks each rlist into BN-row output tiles and classifies every
+           tile by measured run density:
+             mode 1 — the BN rids are consecutive -> ONE (BN, BD) run DMA
+                      (the tile-gather path; LYRESPLIT partitions make this
+                      the common case)
+             mode 0 — scattered rids           -> BN (1, BD) row DMAs
+                      (the row-gather path)
+           emits (starts, mode, tile_offsets): a flat tile plan whose
+           concatenation covers every requested version back to back
+      └─ checkout_batched                   [device, ONE pallas_call]
+           grid = (total_tiles, D/BD); the plan rides in scalar-prefetch
+           (SMEM) so the DMA engine sees every source address ahead of the
+           body — the K-version wave streams as one pipeline
+      └─ split per version                  [host, zero-copy slices]
+           out[k] = packed[tile_offsets[k]*BN : tile_offsets[k]*BN + n_k]
+
+Rows come back in rlist order per version (no perm needed); per-version
+padding to the BN-row tile boundary re-reads that version's last row and is
+sliced off on the host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .checkout_gather import DEFAULT_BD, DEFAULT_BN
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedPlan:
+    """Host-side gather plan for one fused multi-version checkout."""
+
+    starts: np.ndarray        # (T*BN,) int32 — source rid per packed output row
+    mode: np.ndarray          # (T,) int32 — 1 = run DMA, 0 = per-row DMAs
+    tile_offsets: np.ndarray  # (K+1,) int64 — version k owns tiles [k, k+1)
+    n_rows: np.ndarray        # (K,) int64 — valid rows per version
+    density: np.ndarray       # (K,) float — fraction of full-run tiles
+
+    @property
+    def n_tiles(self) -> int:
+        return len(self.mode)
+
+    def segment(self, k: int, block_n: int) -> slice:
+        s = int(self.tile_offsets[k]) * block_n
+        return slice(s, s + int(self.n_rows[k]))
+
+
+def plan_batched(rlists, block_n: int = DEFAULT_BN,
+                 density_threshold: float = 0.05) -> BatchedPlan:
+    """Chunk K rlists into a flat adaptive tile plan.
+
+    Rids are planned AS GIVEN (output row i of version k is
+    data[rlists[k][i]]); run DMAs only fire on exactly-consecutive chunks,
+    so unsorted or duplicate rids simply fall back to row DMAs.
+
+    Per version, the measured run density (fraction of BN-row chunks whose
+    rids are consecutive) picks the gather mode: above ``density_threshold``
+    the consecutive chunks go out as single run DMAs (tile-gather); below it
+    every chunk uses row DMAs — mixed-mode bookkeeping isn't worth it when
+    runs almost never happen.
+    """
+    starts_parts: list[np.ndarray] = []
+    mode_parts: list[np.ndarray] = []
+    tile_offsets = np.zeros(len(rlists) + 1, np.int64)
+    n_rows = np.zeros(len(rlists), np.int64)
+    density = np.zeros(len(rlists), np.float64)
+    for k, rl in enumerate(rlists):
+        rl = np.asarray(rl, dtype=np.int64)
+        n = len(rl)
+        n_rows[k] = n
+        t = -(-n // block_n) if n else 0
+        tile_offsets[k + 1] = tile_offsets[k] + t
+        if n == 0:
+            continue
+        pad = t * block_n - n
+        padded = np.concatenate([rl, np.full(pad, rl[-1], np.int64)]) if pad \
+            else rl
+        chunks = padded.reshape(t, block_n)
+        # a chunk is a run iff its rids are consecutive (padding repeats the
+        # last rid, so a padded tail can never appear consecutive)
+        runs = np.all(np.diff(chunks, axis=1) == 1, axis=1) if block_n > 1 \
+            else np.ones(t, bool)
+        density[k] = float(runs.mean())
+        if density[k] < density_threshold:
+            runs = np.zeros(t, bool)
+        starts_parts.append(padded.astype(np.int32))
+        mode_parts.append(runs.astype(np.int32))
+    starts = np.concatenate(starts_parts) if starts_parts \
+        else np.zeros(0, np.int32)
+    mode = np.concatenate(mode_parts) if mode_parts else np.zeros(0, np.int32)
+    return BatchedPlan(starts=starts, mode=mode, tile_offsets=tile_offsets,
+                       n_rows=n_rows, density=density)
+
+
+def _make_kernel(block_n: int, block_d: int):
+    def kernel(starts_ref, mode_ref, data_ref, o_ref, sems):
+        t = pl.program_id(0)
+        j = pl.program_id(1)
+        col = pl.ds(j * block_d, block_d)
+
+        @pl.when(mode_ref[t] == 1)
+        def _run():
+            cp = pltpu.make_async_copy(
+                data_ref.at[pl.ds(starts_ref[t * block_n], block_n), col],
+                o_ref, sems.at[0])
+            cp.start()
+            cp.wait()
+
+        @pl.when(mode_ref[t] == 0)
+        def _rows():
+            for i in range(block_n):
+                pltpu.make_async_copy(
+                    data_ref.at[pl.ds(starts_ref[t * block_n + i], 1), col],
+                    o_ref.at[pl.ds(i, 1)], sems.at[i]).start()
+            for i in range(block_n):
+                pltpu.make_async_copy(
+                    data_ref.at[pl.ds(starts_ref[t * block_n + i], 1), col],
+                    o_ref.at[pl.ds(i, 1)], sems.at[i]).wait()
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_d", "interpret"))
+def checkout_batched(data: jax.Array, starts: jax.Array, mode: jax.Array, *,
+                     block_n: int = DEFAULT_BN, block_d: int = DEFAULT_BD,
+                     interpret: bool = False) -> jax.Array:
+    """Execute a ``plan_batched`` plan: ONE pallas_call for the whole wave.
+
+    data:   (R, D) with D a multiple of block_d (pad upstream).
+    starts: (T*block_n,) int32 source rids (plan.starts).
+    mode:   (T,) int32 per-tile gather mode (plan.mode).
+    Returns (T*block_n, D) packed rows; slice per version with plan.segment.
+    """
+    r, d = data.shape
+    t = mode.shape[0]
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    grid = (t, d // bd)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((block_n, bd), lambda i, j, s, m: (i, j)),
+        scratch_shapes=[pltpu.SemaphoreType.DMA((block_n,))],
+    )
+    return pl.pallas_call(
+        _make_kernel(block_n, bd), grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((t * block_n, d), data.dtype),
+        interpret=interpret,
+    )(starts.astype(jnp.int32), mode.astype(jnp.int32), data)

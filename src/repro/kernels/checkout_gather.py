@@ -25,6 +25,11 @@ Two kernels:
 
 Both tile the feature dimension at BD (lane-width multiple of 128) so the
 VMEM working set stays bounded regardless of table width.
+
+Multi-version retrieval (K versions, one launch) lives in the sibling module
+``checkout_batched`` — it fuses both modes above into a single adaptive
+(starts, mode) plan executed by ONE pallas_call; see its module docstring for
+the engine data-flow map.
 """
 from __future__ import annotations
 
@@ -114,10 +119,13 @@ def plan_tiles(rids, block_n: int = DEFAULT_BN):
                    partitions hold dense rid runs).
     """
     rids = np.asarray(rids)
-    assert len(rids) == 0 or np.all(np.diff(rids) >= 1), "rlist must be sorted unique"
-    tiles = np.unique(rids // block_n).astype(np.int32)
-    tile_pos = {int(t): i for i, t in enumerate(tiles)}
-    perm = np.asarray([tile_pos[int(r // block_n)] * block_n + int(r % block_n)
-                       for r in rids], dtype=np.int64)
+    if len(rids) and np.any(np.diff(rids) < 1):
+        raise ValueError(
+            "plan_tiles requires a sorted, duplicate-free rlist (a version "
+            "is a SET of records); sort/validate at the checkout_gather "
+            "entry point — see kernels.ops.checkout_gather_tiled")
+    tile_of = rids // block_n
+    tiles = np.unique(tile_of).astype(np.int32)
+    perm = np.searchsorted(tiles, tile_of) * block_n + rids % block_n
     waste = 1.0 - len(rids) / max(len(tiles) * block_n, 1)
-    return tiles, perm, waste
+    return tiles, perm.astype(np.int64), waste

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import checkout_batched as _cb
 from . import checkout_gather as _cg
 from . import ref as _ref
 from . import version_agg as _va
@@ -49,19 +50,94 @@ def checkout_gather(data, rids, *, block_d: int = _cg.DEFAULT_BD,
     return out[:, :d]
 
 
+def _validate_rlist(rids, *, sort: bool = True) -> tuple[np.ndarray, np.ndarray | None]:
+    """Entry-point rlist validation for the tiled/batched checkout paths.
+
+    ``plan_tiles``/``plan_batched`` require sorted, duplicate-free rlists;
+    callers (DeltaBased replay, ad-hoc queries) don't always guarantee order.
+    Returns (sorted_rids, order) where ``order`` is the stable argsort applied
+    (None when already sorted).  Duplicates are a caller bug — a version is a
+    SET of records — and raise a clear error instead of a planner assert.
+    """
+    rids = np.asarray(rids)
+    if rids.ndim != 1:
+        raise ValueError(f"rlist must be 1-D, got shape {rids.shape}")
+    order = None
+    if len(rids) > 1 and np.any(np.diff(rids) < 0):
+        if not sort:
+            raise ValueError("rlist must be sorted")
+        order = np.argsort(rids, kind="stable")
+        rids = rids[order]
+    if len(rids) > 1 and np.any(np.diff(rids) == 0):
+        raise ValueError(
+            "rlist contains duplicate rids — a version is a set of records; "
+            "deduplicate (np.unique) before checkout")
+    return rids, order
+
+
 def checkout_gather_tiled(data, rids, *, block_n: int = _cg.DEFAULT_BN,
                           block_d: int = _cg.DEFAULT_BD):
     """Ranged/tiled checkout (beyond-paper fast path for sorted rlists).
 
+    Accepts unsorted (but duplicate-free) rlists: sorted here, and ``perm``
+    is composed so packed_rows[perm] == data[rids] for the rids AS GIVEN.
+
     Returns (packed_rows, perm, waste) — packed_rows[perm] == data[rids]."""
     data = jnp.asarray(data)
-    tiles, perm, waste = _cg.plan_tiles(np.asarray(rids), block_n=block_n)
+    rids_sorted, order = _validate_rlist(rids)
+    tiles, perm, waste = _cg.plan_tiles(rids_sorted, block_n=block_n)
+    if order is not None:   # packed[perm][i] == data[rids_sorted[i]]
+        unsorted_perm = np.empty_like(perm)
+        unsorted_perm[order] = perm
+        perm = unsorted_perm
     d = data.shape[1]
     bd = min(block_d, max(128, d))
     padded = _pad_axis(_pad_axis(data, bd, axis=1), block_n, axis=0)
     out = _cg.gather_row_tiles(padded, jnp.asarray(tiles), block_n=block_n,
                                block_d=bd, interpret=not _on_tpu())
     return out[:, :d], perm, waste
+
+
+def checkout_batched(data, rlists, *, block_n: int = _cg.DEFAULT_BN,
+                     block_d: int = _cg.DEFAULT_BD,
+                     density_threshold: float = 0.05,
+                     interpret: bool | None = None):
+    """Fused multi-version checkout: K rlists, ONE ``pallas_call``.
+
+    Plans the concatenation of the rlists with ``plan_batched`` — per-tile
+    run DMAs where the rlist is dense, row DMAs where it is scattered —
+    executes the whole wave in a single kernel launch, and splits the packed
+    output back into per-version row blocks.
+
+    Row k's block is data[rlists[k]] exactly — rids are honored AS GIVEN
+    (unsorted/duplicate rids gather in request order via row DMAs; run DMAs
+    only fire on exactly-consecutive chunks), matching the host fallback and
+    the NumPy oracle.  Canonical sorted-unique rlists get the dense fast
+    path.
+
+    Returns (list of (n_k, D) arrays in request order, BatchedPlan).
+    """
+    data = jnp.asarray(data)
+    rls = []
+    for rl in rlists:
+        rl = np.asarray(rl)
+        if rl.ndim != 1:
+            raise ValueError(f"rlist must be 1-D, got shape {rl.shape}")
+        rls.append(rl)
+    plan = _cb.plan_batched(rls, block_n=block_n,
+                            density_threshold=density_threshold)
+    d = data.shape[1]
+    if plan.n_tiles == 0:
+        empty = np.zeros((0, d), dtype=data.dtype)
+        return [empty for _ in rls], plan
+    bd = min(block_d, max(128, d))
+    padded = _pad_axis(data, bd, axis=1)
+    packed = _cb.checkout_batched(
+        padded, jnp.asarray(plan.starts), jnp.asarray(plan.mode),
+        block_n=block_n, block_d=bd,
+        interpret=not _on_tpu() if interpret is None else interpret)
+    packed = np.asarray(packed)[:, :d]
+    return [packed[plan.segment(k, block_n)] for k in range(len(rls))], plan
 
 
 def membership_scan(bitmap, vid: int, *, block_r: int = _vm.DEFAULT_BR):
@@ -90,6 +166,7 @@ def version_aggregate(bitmap, values, *, block_r: int = _va.DEFAULT_BR):
 
 build_bitmap = _vm.build_bitmap
 plan_tiles = _cg.plan_tiles
+plan_batched = _cb.plan_batched
 
 
 # ------------------------------------------------------------------------

@@ -13,6 +13,13 @@ def gather_rows_ref(data: jax.Array, rids: jax.Array) -> jax.Array:
     return jnp.take(data, rids, axis=0)
 
 
+def gather_batched_ref(data, rlists):
+    """NumPy oracle for checkout_batched: per-version gather loop."""
+    import numpy as np
+    data = np.asarray(data)
+    return [data[np.asarray(rl, dtype=np.int64)] for rl in rlists]
+
+
 def gather_row_tiles_ref(data: jax.Array, tile_idx: jax.Array, block_n: int) -> jax.Array:
     r, d = data.shape
     tiles = data.reshape(r // block_n, block_n, d)

@@ -5,7 +5,10 @@
 
 Serves a model against a VERSIONED prompt store: requests reference prompt
 versions in a CVD (the serving analogue of dataset versioning — A/B prompt
-sets, regression suites, replayable eval batches).  The decode loop batches
+sets, regression suites, replayable eval batches).  ``--prompt-version``
+accepts a comma-separated list; the wave of prompt versions is materialized
+through the batched checkout engine (one fused gather per partition touched)
+and requests round-robin across the versions.  The decode loop batches
 requests, maintains the fixed-capacity KV/state cache, and reports
 tokens/sec.  ``--mesh single|multi`` lowers the same serve_step the dry-run
 compiles for the 256/512-chip meshes.
@@ -26,6 +29,7 @@ from ..data import VersionedDataset
 from ..models import init_params
 from ..models.transformer import init_cache
 from ..sharding import make_ctx
+from ..serve.checkout import BatchedCheckoutServer
 from ..serve.serve_step import make_prefill_step, make_serve_step
 from .mesh import make_host_mesh, make_production_mesh
 from .train import reduced_config
@@ -38,7 +42,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode-steps", type=int, default=32)
-    ap.add_argument("--prompt-version", type=int, default=-1)
+    ap.add_argument("--prompt-version", type=str, default="-1",
+                    help="prompt CVD version(s); comma-separated for a "
+                         "fused multi-version wave (-1 = latest)")
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--seed", type=int, default=0)
@@ -62,13 +68,22 @@ def main() -> None:
     ds = VersionedDataset.from_graph(w.graph, w.data % cfg.vocab,
                                      sr.best.assignment,
                                      seq_len=args.prompt_len)
-    vid = args.prompt_version if args.prompt_version >= 0 \
-        else w.n_versions - 1
-    rows = ds.checkout(vid)[:args.requests, :args.prompt_len] % cfg.vocab
+    vids = [v if v >= 0 else w.n_versions - 1
+            for v in (int(s) for s in args.prompt_version.split(","))]
+    server = BatchedCheckoutServer(ds.store, use_kernel=True)
+    waves = server.serve(vids)          # ONE fused gather wave for all vids
+    per_v = max(args.requests // len(vids), 1)
+    pool = np.concatenate([m[:per_v] for m in waves])
+    if len(pool) == 0:
+        raise SystemExit(f"prompt versions {vids} contain no rows")
+    reps = -(-args.requests // len(pool))          # cycle to fill the batch
+    rows = np.tile(pool, (reps, 1))[:args.requests]
+    rows = rows[:, :args.prompt_len] % cfg.vocab
     prompts = jnp.asarray(rows.astype(np.int32))
     b = prompts.shape[0]
     print(f"mesh={dict(mesh.shape)} arch={cfg.name} serving {b} requests "
-          f"from prompt CVD v{vid}")
+          f"from prompt CVD versions {vids} "
+          f"({server.stats.waves} checkout wave)")
 
     params = init_params(cfg, jax.random.key(args.seed))
     max_len = args.prompt_len + args.decode_steps

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..sharding import compat_shard_map
 from .layers import Params, dense_abstract, dense_init, swiglu_abstract, swiglu_init
 
 
@@ -87,7 +88,8 @@ def _dispatch_combine(x, router_w, wi, wg, wo, *, cfg: MoEConfig, model_axis: st
     """Runs PER (pod,data)-SHARD inside shard_map.  x: (T_loc, d)."""
     t_loc, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
-    m = jax.lax.axis_size(model_axis)
+    m = (jax.lax.axis_size(model_axis) if hasattr(jax.lax, "axis_size")
+         else jax.lax.psum(1, model_axis))
     e_loc = e // m
     c = _capacity(t_loc, cfg)
 
@@ -152,7 +154,7 @@ def moe_ffn(p: Params, x: jax.Array, cfg: MoEConfig, mesh: jax.sharding.Mesh,
                               cfg=cfg, model_axis=model_axis)
         return y.reshape(xs.shape)
 
-    mapped = jax.shard_map(
+    mapped = compat_shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(dp_axes, seq_spec, None), P(None, None),
                   P("model", None, None), P("model", None, None),

@@ -1,3 +1,5 @@
+from .checkout import BatchedCheckoutServer, CheckoutStats
 from .serve_step import greedy_decode, make_prefill_step, make_serve_step
 
-__all__ = ["greedy_decode", "make_prefill_step", "make_serve_step"]
+__all__ = ["BatchedCheckoutServer", "CheckoutStats", "greedy_decode",
+           "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,77 @@
+"""Serve-side batched checkout: coalesce concurrent version requests into
+fused multi-version gathers.
+
+Request flow (the serve half of the checkout data-flow map in
+``core/checkout.py``)::
+
+    clients ── submit(vid) ──┐
+    clients ── submit(vid) ──┤   pending wave (dedup by vid)
+    clients ── submit(vid) ──┘
+                │ flush()
+                └─ core.checkout.checkout_partitioned
+                     one fused gather per partition touched — on TPU one
+                     ``checkout_batched`` pallas_call per partition, however
+                     many versions the wave names
+                └─ per-request results (identical vids share one gather)
+
+Under heavy multi-user traffic this turns N concurrent checkouts into
+~n_partitions kernel launches per wave instead of N — the serving analogue
+of LyreSplit's checkout-latency headline, applied to batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core.checkout import checkout_partitioned
+
+
+@dataclasses.dataclass
+class CheckoutStats:
+    waves: int = 0
+    requests: int = 0
+    unique_versions: int = 0
+    rows_served: int = 0
+
+
+class BatchedCheckoutServer:
+    """Coalescing front-end over a PartitionedCVD (or any store exposing
+    ``vid_to_pid``, ``partitions``)."""
+
+    def __init__(self, store, *, use_kernel: Optional[bool] = None):
+        self.store = store
+        self.use_kernel = use_kernel
+        self._pending: list[int] = []
+        self.stats = CheckoutStats()
+
+    # -- request plane ---------------------------------------------------------
+    def submit(self, vid: int) -> int:
+        """Queue a checkout request; returns its ticket (position)."""
+        self._pending.append(int(vid))
+        return len(self._pending) - 1
+
+    def flush(self) -> list[np.ndarray]:
+        """Serve every pending request in one fused wave (per-partition
+        batched gathers); duplicate vids share a single gather."""
+        vids = self._pending
+        self._pending = []
+        if not vids:
+            return []
+        uniq = sorted(set(vids))
+        slot = {v: i for i, v in enumerate(uniq)}
+        mats = checkout_partitioned(self.store, uniq, use_kernel=self.use_kernel)
+        out = [mats[slot[v]] for v in vids]
+        self.stats.waves += 1
+        self.stats.requests += len(vids)
+        self.stats.unique_versions += len(uniq)
+        self.stats.rows_served += sum(len(m) for m in out)
+        return out
+
+    # -- convenience -----------------------------------------------------------
+    def serve(self, vids: Sequence[int]) -> list[np.ndarray]:
+        """submit+flush in one call — the whole wave fused."""
+        for v in vids:
+            self.submit(v)
+        return self.flush()

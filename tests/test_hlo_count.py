@@ -94,9 +94,13 @@ def test_collectives_through_scan_subprocess():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.launch.hlo_count import analyze
-        mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+        try:
+            from jax.sharding import AxisType
+            mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+        except ImportError:
+            mesh = jax.make_mesh((4,), ("model",))
         def f(x, w):
             def body(c, wi):
                 y = c @ wi

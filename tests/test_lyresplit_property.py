@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) over random version trees: the system's
 invariants must hold for EVERY derivation history, not just the benchmark's."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lyresplit import lyresplit, lyresplit_for_budget
