@@ -4,13 +4,20 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench bench-all
+.PHONY: test bench bench-multipart bench-all lint
 
 test:           ## tier-1 verify: the command CI and the roadmap pin
 	$(PY) -m pytest -x -q
 
+lint:           ## syntax/undefined-name gate (no style bikeshed)
+	$(PY) -m pyflakes src/repro benchmarks tests || \
+	$(PY) -m flake8 --select=E9,F src/repro benchmarks tests
+
 bench:          ## batched checkout perf trajectory (BENCH_batched_checkout.json)
 	$(PY) -m benchmarks.batched_checkout
+
+bench-multipart: ## cross-partition wave vs P-launch loop (BENCH_multipart_checkout.json)
+	$(PY) -m benchmarks.multipart_checkout
 
 bench-all:      ## every paper-figure benchmark
 	$(PY) -m benchmarks.run

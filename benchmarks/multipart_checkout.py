@@ -1,0 +1,127 @@
+"""Cross-partition fused checkout: ONE ``checkout_wave`` pallas_call per
+wave vs the per-partition engine's P launches, across P ∈ {1, 4, 16, 64}
+partitions × K ∈ {4, 16, 64} versions per wave.
+
+Three measurements per (P, K):
+  * kernel tier — the per-partition engine pays one ``checkout_batched``
+    launch per partition touched (≈ min(P, K)); the wave engine pays exactly
+    ONE ``checkout_wave`` launch over the device-resident superblock
+    (interpret mode off-TPU; on TPU the gap is the saved pipeline spin-ups
+    plus the single fused DMA stream);
+  * host tier — per-partition np.take loop vs one np.take over the rebased
+    concatenation (expect ~parity: numpy pays no launch overhead);
+  * superblock amortization — cold wave (build + upload) vs warm wave
+    (epoch cache hit), plus the upload counter proving consecutive waves
+    skip the host→device transfer entirely.
+
+Emits CSV lines (benchmarks/run.py convention) and writes
+``BENCH_multipart_checkout.json`` next to the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core.checkout import (build_superblock, checkout_partitioned_perpart,
+                                 checkout_wave, get_superblock)
+from repro.core.graph import BipartiteGraph
+from repro.core.partition import PartitionedCVD
+
+from .common import emit, timeit
+
+PS = (1, 4, 16, 64)
+KS = (4, 16, 64)
+N_VERSIONS = 128
+R, D = 8192, 128
+ROWS_PER_VERSION = 128
+SEED = 0
+
+
+def _make_store(rng, p):
+    """128 versions, half dense runs / half scattered, assigned v -> v%p."""
+    rls = []
+    for v in range(N_VERSIONS):
+        if v % 2 == 0:
+            s = int(rng.integers(0, R - ROWS_PER_VERSION))
+            rls.append(np.arange(s, s + ROWS_PER_VERSION, dtype=np.int64))
+        else:
+            rls.append(np.sort(rng.choice(
+                R, ROWS_PER_VERSION, replace=False)).astype(np.int64))
+    graph = BipartiteGraph.from_rlists(rls, n_records=R)
+    data = rng.integers(0, 1 << 20, (R, D)).astype(np.int32)
+    return PartitionedCVD(graph, data, np.arange(N_VERSIONS) % p)
+
+
+def _wave_vids(p, k):
+    """k vids touching min(p, k) distinct partitions: under the v -> v%p
+    assignment the first k vids already round-robin across partitions."""
+    return list(range(k))
+
+
+def main() -> None:
+    rng = np.random.default_rng(SEED)
+    results = []
+    for p in PS:
+        store = _make_store(rng, p)
+        # superblock amortization, measured once per store
+        t_build, sb_cold = timeit(build_superblock, store, repeat=3)
+        sb, _ = get_superblock(store)
+        sb.device()
+        uploads_before = sb.uploads
+        for k in KS:
+            vids = _wave_vids(p, k)
+            touched = len({int(store.vid_to_pid[v]) for v in vids})
+
+            # warm both jit caches so compile time stays out of the timing
+            out_w = checkout_wave(store, vids, use_kernel=True)
+            out_p = checkout_partitioned_perpart(store, vids, use_kernel=True)
+            for a, b in zip(out_w, out_p):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+            t_wave_k, _ = timeit(checkout_wave, store, vids,
+                                 use_kernel=True, repeat=5)
+            t_pp_k, _ = timeit(checkout_partitioned_perpart, store, vids,
+                               use_kernel=True, repeat=5)
+            t_wave_h, _ = timeit(checkout_wave, store, vids,
+                                 use_kernel=False, repeat=5)
+            t_pp_h, _ = timeit(checkout_partitioned_perpart, store, vids,
+                               use_kernel=False, repeat=5)
+            row = {"p": p, "k": k, "partitions_touched": touched,
+                   "launches_wave": 1, "launches_perpart": touched,
+                   "wave_kernel_s": t_wave_k, "perpart_kernel_s": t_pp_k,
+                   "kernel_speedup": t_pp_k / max(t_wave_k, 1e-12),
+                   "wave_host_s": t_wave_h, "perpart_host_s": t_pp_h,
+                   "host_speedup": t_pp_h / max(t_wave_h, 1e-12)}
+            results.append(row)
+            emit(f"multipart_checkout_p{p}_k{k}_kernel", t_wave_k * 1e6,
+                 f"perpart_us={t_pp_k * 1e6:.1f} "
+                 f"speedup={row['kernel_speedup']:.2f} launches={touched}->1")
+            emit(f"multipart_checkout_p{p}_k{k}_host", t_wave_h * 1e6,
+                 f"perpart_us={t_pp_h * 1e6:.1f} "
+                 f"speedup={row['host_speedup']:.2f}")
+        # epoch cache: consecutive waves must not re-upload the superblock
+        sb_now, hit = get_superblock(store)
+        results.append({"p": p, "superblock_rows": int(sb.n_rows),
+                        "superblock_build_s": t_build,
+                        "cache_hit_after_waves": bool(hit),
+                        "uploads_total": int(sb_now.uploads),
+                        "upload_skipped_across_waves":
+                            bool(sb_now.uploads == uploads_before)})
+        emit(f"multipart_superblock_p{p}_build", t_build * 1e6,
+             f"rows={sb.n_rows} uploads={sb_now.uploads} "
+             f"cache_hit={hit}")
+
+    out_path = pathlib.Path(__file__).resolve().parent.parent / \
+        "BENCH_multipart_checkout.json"
+    out_path.write_text(json.dumps(
+        {"config": {"R": R, "D": D, "n_versions": N_VERSIONS,
+                    "rows_per_version": ROWS_PER_VERSION,
+                    "ps": list(PS), "ks": list(KS)},
+         "results": results}, indent=2))
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV.  Figures covered:
   d1    — checkout cost model linearity                           App. D.1
   kernel— TPU kernel data-movement microbench                     (ours)
   batched_checkout — fused multi-version engine vs K-launch loop  (ours)
+  multipart_checkout — cross-partition wave vs P-launch loop      (ours)
 """
 from __future__ import annotations
 
@@ -19,10 +20,12 @@ import time
 def main() -> None:
     from . import (batched_checkout, d1_cost_model, fig3_datamodels,
                    fig9_tradeoff, fig10_runtime, fig12_partition_benefit,
-                   fig14_online, kernel_bench, roofline_bench)
+                   fig14_online, kernel_bench, multipart_checkout,
+                   roofline_bench)
     mods = [fig3_datamodels, fig9_tradeoff, fig10_runtime,
             fig12_partition_benefit, fig14_online, d1_cost_model,
-            kernel_bench, roofline_bench, batched_checkout]
+            kernel_bench, roofline_bench, batched_checkout,
+            multipart_checkout]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in mods:

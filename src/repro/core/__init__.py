@@ -1,7 +1,9 @@
 """OrpheusDB core: CVD storage models, LYRESPLIT partitioning, online
 maintenance, and the versioned query layer."""
-from .checkout import (checkout_partitioned, checkout_rlists,
-                       checkout_versions, checkout_versions_loop)
+from .checkout import (Superblock, build_superblock, checkout_partitioned,
+                       checkout_partitioned_perpart, checkout_rlists,
+                       checkout_versions, checkout_versions_loop,
+                       checkout_wave, get_superblock, plan_wave)
 from .graph import BipartiteGraph, checkout_cost, storage_cost, union_size
 from .version_graph import VersionGraph, WeightedTree, to_tree, edge_weights
 from .datamodels import (ALL_MODELS, CombinedTable, DeltaBased, SplitByRlist,
@@ -13,8 +15,10 @@ from .bench_gen import generate, Workload
 
 __all__ = [
     "BipartiteGraph", "checkout_cost", "storage_cost", "union_size",
-    "checkout_partitioned", "checkout_rlists", "checkout_versions",
-    "checkout_versions_loop",
+    "checkout_partitioned", "checkout_partitioned_perpart",
+    "checkout_rlists", "checkout_versions", "checkout_versions_loop",
+    "checkout_wave", "Superblock", "build_superblock", "get_superblock",
+    "plan_wave",
     "VersionGraph", "WeightedTree", "to_tree", "edge_weights",
     "ALL_MODELS", "CombinedTable", "DeltaBased", "SplitByRlist",
     "SplitByVlist", "TablePerVersion",

@@ -3,30 +3,51 @@
 Data-flow map (kernels -> core -> query/serve)::
 
     request: vids = [v0, v1, ... v_{K-1}]          (query layer, serve layer)
-      └─ group by partition                        core.checkout (this module)
-      │    PartitionedCVD.vid_to_pid buckets the wave; each partition
-      │    contributes (block, [local rlists]) — checkout touches ONE
-      │    partition per version (paper §4)
-      └─ per partition: fused gather
-      │    device path:  kernels.ops.checkout_batched — plan_batched chunks
-      │                  the concatenated rlists into an adaptive
-      │                  (starts, mode) tile plan and issues ONE pallas_call
-      │                  (run DMAs where the rlist is dense, row DMAs where
-      │                  scattered); K versions stream as one DMA pipeline
-      │    host path:    one np.take over the concatenated rlists, split by
-      │                  offsets — the same fusion, numpy-executed
+      └─ superblock                                core.checkout (this module)
+      │    get_superblock concatenates every partition's block into ONE
+      │    (ΣR_p, D) array (segments BN-aligned, D padded to the lane tile),
+      │    cached on the store keyed by ``store.epoch`` — repeated waves
+      │    reuse the device-resident copy and skip the host→device transfer
+      └─ plan_wave                                 [host, vectorized numpy]
+      │    rebases each version's LOCAL rlist by its partition's row offset,
+      │    so one flat adaptive (starts, mode) tile plan (plan_batched)
+      │    covers versions from DIFFERENT partitions back to back; emits a
+      │    per-tile ``hi`` bound (partition segment end) that lets
+      │    consecutive tail chunks promote to run DMAs
+      └─ one fused gather for the WHOLE wave
+      │    device path:  kernels.ops.checkout_wave — ONE pallas_call no
+      │                  matter how many partitions the wave touches (run
+      │                  DMAs where the rlist is dense, row DMAs where
+      │                  scattered; the ``hi`` bound is checked on device)
+      │    host path:    one np.take over the rebased concatenation when a
+      │                  superblock is already cached; per-partition np.takes
+      │                  otherwise (numpy pays no launch cost, so host-only
+      │                  processes skip the superblock copy entirely)
       └─ reassemble per-version blocks in request order
 
-``checkout_versions_loop`` is the seed per-version gather loop, kept as the
-oracle the tests and benchmarks compare against.
+``checkout_partitioned`` routes through this wave engine by default; the
+previous one-gather-PER-PARTITION path survives as
+``checkout_partitioned_perpart`` (the oracle and benchmark baseline), and
+``checkout_versions_loop`` is the seed per-version gather loop.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 from typing import Optional, Sequence
 
 import numpy as np
 
 from .graph import BipartiteGraph
+
+
+@functools.lru_cache(maxsize=1)
+def _default_use_kernel() -> bool:
+    """Backend probe, resolved ONCE per process (importing jax and asking
+    for the default backend on every checkout call is measurable on the
+    serve hot path)."""
+    import jax
+    return jax.default_backend() == "tpu"
 
 
 def _fused_host_gather(data: np.ndarray, rlists: Sequence[np.ndarray]
@@ -48,11 +69,10 @@ def checkout_rlists(data: np.ndarray, rlists: Sequence[np.ndarray], *,
 
     use_kernel: True -> Pallas ``checkout_batched`` (ONE kernel launch;
     interpret mode off-TPU), False -> fused host gather, None -> kernel on
-    TPU, host otherwise.
+    TPU, host otherwise (probe cached per process).
     """
     if use_kernel is None:
-        import jax
-        use_kernel = jax.default_backend() == "tpu"
+        use_kernel = _default_use_kernel()
     if not use_kernel:
         return _fused_host_gather(np.asarray(data), rlists)
     from ..kernels import ops as K
@@ -68,16 +88,268 @@ def checkout_versions(graph: BipartiteGraph, data: np.ndarray,
                            use_kernel=use_kernel)
 
 
-def checkout_partitioned(store, vids: Sequence[int], *,
-                         use_kernel: Optional[bool] = None) -> list[np.ndarray]:
-    """Batched checkout over a PartitionedCVD: one fused gather PER
-    PARTITION touched by the wave, results in request order."""
+# --------------------------------------------------------------- superblock --
+
+@dataclasses.dataclass
+class Superblock:
+    """Every partition's block concatenated into one gatherable array.
+
+    Layout: partition p owns rows [row_offsets[p], row_offsets[p] + R_p) of
+    ``host``; each segment is padded to a BLOCK_N multiple (``bounds[p]`` is
+    the aligned exclusive end — the safe upper limit for a run DMA landing
+    in p), and D is padded to the lane-tile multiple so the kernel consumes
+    the array as-is.  ``device()`` uploads once and pins the copy; the
+    epoch captured at build keys cache invalidation.
+    """
+    host: np.ndarray          # (R_pad, D_pad) zero-padded concatenation
+    row_offsets: np.ndarray   # (P,) int64 — first superblock row of partition p
+    bounds: np.ndarray        # (P,) int64 — aligned exclusive end of partition p
+    d: int                    # original feature width (pre-padding)
+    bd: int                   # lane-tile width the feature axis is padded to
+    block_n: int              # row alignment of the partition segments
+    epoch: int                # store.epoch at build time
+    _device: object = dataclasses.field(default=None, repr=False)
+    uploads: int = 0          # host→device transfers performed
+
+    @property
+    def n_rows(self) -> int:
+        return self.host.shape[0]
+
+    def device(self):
+        """The device-resident copy — uploaded on first use, then pinned."""
+        if self._device is None:
+            import jax.numpy as jnp
+            self._device = jnp.asarray(self.host)
+            self.uploads += 1
+        return self._device
+
+
+def build_superblock(store, *, block_n: Optional[int] = None,
+                     block_d: Optional[int] = None) -> Superblock:
+    """Concatenate ``store.partitions`` blocks (padded to a common D) into
+    one Superblock."""
+    from ..kernels.checkout_gather import DEFAULT_BD, DEFAULT_BN
+    bn = DEFAULT_BN if block_n is None else block_n
+    blk_d = DEFAULT_BD if block_d is None else block_d
+    parts = store.partitions
+    d = max((p.block.shape[1] for p in parts), default=0)
+    bd = min(blk_d, max(128, d)) if d else blk_d
+    d_pad = -(-max(d, 1) // bd) * bd
+    seg = np.array([-(-p.block.shape[0] // bn) * bn for p in parts], np.int64)
+    row_offsets = np.concatenate([[0], np.cumsum(seg)[:-1]]).astype(np.int64) \
+        if len(parts) else np.zeros(0, np.int64)
+    bounds = row_offsets + seg
+    total = int(seg.sum())
+    dtype = parts[0].block.dtype if parts else np.int32
+    host = np.zeros((max(total, bn), d_pad), dtype=dtype)
+    for p, off in zip(parts, row_offsets):
+        r, pd = p.block.shape
+        host[off:off + r, :pd] = p.block
+    return Superblock(host=host, row_offsets=row_offsets, bounds=bounds,
+                      d=d, bd=bd, block_n=bn,
+                      epoch=int(getattr(store, "epoch", 0)))
+
+
+def get_superblock(store, *, block_n: Optional[int] = None,
+                   block_d: Optional[int] = None) -> tuple[Superblock, bool]:
+    """Epoch-keyed superblock cache, attached to the store.
+
+    Returns (superblock, cache_hit).  A hit means the (host AND any pinned
+    device) copy is reused verbatim — consecutive waves skip both the
+    concatenation and the host→device transfer.  Bumping ``store.epoch``
+    (partition rebuild) invalidates every cached shape.
+    """
+    cache = getattr(store, "_superblock_cache", None)
+    if cache is None:
+        cache = {}
+        try:
+            store._superblock_cache = cache
+        except AttributeError:          # store forbids attributes: no cache
+            cache = None
+    key = (block_n, block_d)
+    epoch = int(getattr(store, "epoch", 0))
+    if cache is not None:
+        sb = cache.get(key)
+        if sb is not None and sb.epoch == epoch:
+            return sb, True
+    sb = build_superblock(store, block_n=block_n, block_d=block_d)
+    if cache is not None:
+        cache[key] = sb
+    return sb, False
+
+
+def peek_superblock(store) -> Optional[Superblock]:
+    """A cached, epoch-current superblock — or None, WITHOUT building one.
+    The host gather path uses this so pure-host processes never pay the
+    superblock's memory copy; only processes that run the kernel path (and
+    therefore hold one anyway) get the fused host gather off it."""
+    cache = getattr(store, "_superblock_cache", None)
+    if not cache:
+        return None
+    epoch = int(getattr(store, "epoch", 0))
+    for sb in cache.values():
+        if sb.epoch == epoch:
+            return sb
+    return None
+
+
+# ---------------------------------------------------------------- wave plan --
+
+@dataclasses.dataclass(frozen=True)
+class WavePlan:
+    """A cross-partition gather plan: one flat tile plan over the superblock.
+
+    ``plan`` is the adaptive (starts, mode) plan from ``plan_batched`` over
+    the REBASED rlists (local rid + partition row offset); ``hi`` carries the
+    per-tile exclusive row bound the kernel checks before a run DMA.
+    """
+    plan: object              # kernels.checkout_batched.BatchedPlan
+    hi: np.ndarray            # (T,) int32 per-tile run-DMA bound
+    rebased: list             # the rebased rlists (host-path gather input)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.plan.n_tiles
+
+    def segment(self, k: int, block_n: int) -> slice:
+        return self.plan.segment(k, block_n)
+
+
+def _rebase_wave(store, vids: Sequence[int], sb: Superblock
+                 ) -> tuple[list[np.ndarray], list[int]]:
+    """Rebase each version's LOCAL rlist into superblock coordinates (local
+    rid + partition row offset).  The host path gathers straight off this;
+    the kernel path plans it with ``plan_wave``."""
+    rebased: list[np.ndarray] = []
+    pids: list[int] = []
+    for v in vids:
+        pid = int(store.vid_to_pid[int(v)])
+        p = store.partitions[pid]
+        rebased.append(np.asarray(p.local_rlist(int(v)), np.int64)
+                       + int(sb.row_offsets[pid]))
+        pids.append(pid)
+    return rebased, pids
+
+
+def plan_wave(store, vids: Sequence[int], sb: Superblock, *,
+              density_threshold: float = 0.05) -> WavePlan:
+    """Plan a multi-partition wave as ONE flat tile plan.
+
+    Each version's local rlist is rebased by its partition's superblock row
+    offset, then the whole wave is planned back to back by ``plan_batched``
+    exactly as if it came from a single block.  Two wave-only extensions:
+
+      * ``hi[t]`` = the aligned end of tile t's partition segment — the run
+        bound the kernel verifies on device;
+      * consecutive TAIL chunks are promoted to run DMAs (mode 1): the
+        padding rows a full (BN, BD) read drags in stay inside the
+        partition's aligned segment and land in the sliced-off region of the
+        output, so the promotion turns BN row DMAs into ONE run DMA for
+        every dense version whose length isn't a BN multiple.
+    """
+    from ..kernels.checkout_batched import plan_batched
+    bn = sb.block_n
+    rebased, pids = _rebase_wave(store, vids, sb)
+    plan = plan_batched(rebased, block_n=bn,
+                        density_threshold=density_threshold)
+    hi = np.zeros(plan.n_tiles, np.int32)
+    mode = plan.mode.copy()
+    for k, (rl, pid) in enumerate(zip(rebased, pids)):
+        t0, t1 = int(plan.tile_offsets[k]), int(plan.tile_offsets[k + 1])
+        if t1 == t0:
+            continue
+        hi[t0:t1] = int(sb.bounds[pid])
+        # tail promotion: valid rids of the last chunk are consecutive
+        tail = rl[(t1 - t0 - 1) * bn:]
+        if len(tail) < bn and (len(tail) <= 1
+                               or np.all(np.diff(tail) == 1)):
+            mode[t1 - 1] = 1
+    plan = dataclasses.replace(plan, mode=mode)
+    return WavePlan(plan=plan, hi=hi, rebased=rebased)
+
+
+def _validate_vids(store, vids: Sequence[int]) -> list[int]:
     vids = [int(v) for v in vids]
     n_versions = len(store.vid_to_pid)
     bad = [v for v in vids if not 0 <= v < n_versions]
     if bad:
         raise ValueError(f"unknown version id(s) {bad}: store has "
                          f"{n_versions} versions (0..{n_versions - 1})")
+    return vids
+
+
+def checkout_wave(store, vids: Sequence[int], *,
+                  use_kernel: Optional[bool] = None,
+                  density_threshold: float = 0.05) -> list[np.ndarray]:
+    """Cross-partition fused checkout: the whole wave, ONE kernel launch.
+
+    However many partitions the vids span, the wave executes as a single
+    ``checkout_wave`` pallas_call over the store's cached device-resident
+    superblock.  The superblock (a padded copy of EVERY partition block) is
+    only built when the fusion can pay for it: waves confined to one
+    partition with no superblock cached already run as one launch through
+    the per-partition engine, and the host path likewise gathers off a
+    superblock only when one is already cached (free fusion), falling back
+    to per-partition np.takes otherwise."""
+    vids = _validate_vids(store, vids)
+    if not vids:
+        return []
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    sb = peek_superblock(store)
+    if not use_kernel:
+        # Host tier: reuse an ALREADY-CACHED superblock for the one-take
+        # fused gather, but never build one just for numpy — np.take off the
+        # per-partition blocks is parity-fast and costs no extra copy.
+        if sb is None:
+            return checkout_partitioned_perpart(store, vids,
+                                                use_kernel=False)
+        rebased, _ = _rebase_wave(store, vids, sb)
+        return _fused_host_gather(sb.host[:, :sb.d], rebased)
+    if sb is None and len({int(store.vid_to_pid[v]) for v in vids}) <= 1:
+        # one partition touched = the per-partition engine is already a
+        # single launch; don't build+pin a whole-store superblock for it
+        return checkout_partitioned_perpart(store, vids,
+                                            use_kernel=use_kernel)
+    sb, _ = get_superblock(store)
+    wp = plan_wave(store, vids, sb, density_threshold=density_threshold)
+    if wp.n_tiles == 0:
+        empty = np.zeros((0, sb.d), dtype=sb.host.dtype)
+        return [empty for _ in vids]
+    from ..kernels import ops as K
+    packed = K.checkout_wave(sb.device(), wp.plan.starts, wp.plan.mode,
+                             wp.hi, block_n=sb.block_n, block_d=sb.bd)
+    packed = np.asarray(packed)[:, :sb.d]
+    return [packed[wp.segment(k, sb.block_n)] for k in range(len(vids))]
+
+
+# ------------------------------------------------------------- entry points --
+
+def checkout_partitioned(store, vids: Sequence[int], *,
+                         use_kernel: Optional[bool] = None,
+                         engine: str = "wave") -> list[np.ndarray]:
+    """Batched checkout over a PartitionedCVD, results in request order.
+
+    engine="wave" (default): ONE fused gather for the whole wave via the
+    device-resident superblock — a single pallas_call regardless of how many
+    partitions the vids span.  engine="perpart": the previous one fused
+    gather PER PARTITION (kept as oracle and benchmark baseline).
+    """
+    if engine == "wave":
+        return checkout_wave(store, vids, use_kernel=use_kernel)
+    if engine == "perpart":
+        return checkout_partitioned_perpart(store, vids,
+                                            use_kernel=use_kernel)
+    raise ValueError(f"unknown engine {engine!r} (use 'wave' or 'perpart')")
+
+
+def checkout_partitioned_perpart(store, vids: Sequence[int], *,
+                                 use_kernel: Optional[bool] = None
+                                 ) -> list[np.ndarray]:
+    """Per-partition engine: one fused gather (one launch) per partition
+    touched by the wave — the baseline the wave engine is benchmarked
+    against."""
+    vids = _validate_vids(store, vids)
     by_pid: dict[int, list[int]] = {}
     for i, v in enumerate(vids):
         by_pid.setdefault(int(store.vid_to_pid[v]), []).append(i)

@@ -53,14 +53,23 @@ class PartitionedCVD:
         self.assignment = np.asarray(assignment, dtype=np.int64)
         self.partitions: list[Partition] = []
         self.vid_to_pid: np.ndarray = np.full(graph.n_versions, -1, np.int64)
+        self.epoch = -1   # bumped by every _build; keys the superblock cache
         self._build()
 
     def _build(self) -> None:
         self.partitions = []
+        self.epoch += 1
         for k in np.unique(self.assignment):
             vids = np.flatnonzero(self.assignment == k)
             self.partitions.append(build_partition(self.graph, self.data, int(k), vids))
             self.vid_to_pid[vids] = len(self.partitions) - 1
+
+    def repartition(self, assignment: np.ndarray) -> None:
+        """Rebuild under a new assignment (online migration); bumps the
+        epoch so cached superblocks are invalidated."""
+        self.assignment = np.asarray(assignment, dtype=np.int64)
+        self.vid_to_pid = np.full(self.graph.n_versions, -1, np.int64)
+        self._build()
 
     # -- paper cost model ----------------------------------------------------
     def storage_cost(self) -> int:
@@ -77,12 +86,22 @@ class PartitionedCVD:
         p = self.partitions[self.vid_to_pid[vid]]
         return p.block[p.local_rlist(vid)]
 
-    def checkout_many(self, vids, *, use_kernel: Optional[bool] = None
-                      ) -> list[np.ndarray]:
-        """Batched multi-version checkout: one fused gather per partition
-        touched (ONE ``checkout_batched`` kernel launch each on device)."""
+    def global_rlist(self, vid: int) -> np.ndarray:
+        """The version's GLOBAL rids (sorted) — local rids mapped back
+        through the partition's grid set."""
+        p = self.partitions[self.vid_to_pid[vid]]
+        return p.grids[p.local_rlist(vid)]
+
+    def checkout_many(self, vids, *, use_kernel: Optional[bool] = None,
+                      engine: str = "wave") -> list[np.ndarray]:
+        """Batched multi-version checkout.  Default engine="wave": the whole
+        wave is ONE fused gather over the epoch-cached device-resident
+        superblock (a single ``checkout_wave`` pallas_call however many
+        partitions the vids span); engine="perpart" keeps the previous
+        one-launch-per-partition path."""
         from .checkout import checkout_partitioned
-        return checkout_partitioned(self, vids, use_kernel=use_kernel)
+        return checkout_partitioned(self, vids, use_kernel=use_kernel,
+                                    engine=engine)
 
     def checkout_bytes_touched(self, vid: int) -> int:
         """Bytes streamed for the checkout under the sequential-scan (hash

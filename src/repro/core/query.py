@@ -17,8 +17,21 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from .checkout import checkout_versions
+from .checkout import checkout_versions, checkout_wave
 from .graph import BipartiteGraph
+
+
+def _is_store(graph) -> bool:
+    """PartitionedCVD (or any store exposing vid_to_pid/partitions) — the
+    multi-version queries then route through the cross-partition wave
+    engine: ONE fused gather for every version the query touches."""
+    return hasattr(graph, "vid_to_pid") and hasattr(graph, "partitions")
+
+
+def _materialize(graph, data, vids, use_kernel):
+    if _is_store(graph):
+        return checkout_wave(graph, vids, use_kernel=use_kernel)
+    return checkout_versions(graph, data, vids, use_kernel=use_kernel)
 
 
 def version_scan(graph: BipartiteGraph, data: np.ndarray, vid: int,
@@ -74,9 +87,23 @@ def per_version_aggregate(graph: BipartiteGraph, data: np.ndarray, col: int,
     return out
 
 
-def diff(graph: BipartiteGraph, data: np.ndarray, v1: int, v2: int
-         ) -> tuple[np.ndarray, np.ndarray]:
-    """Records in v1 not in v2, and vice versa (the `diff` command)."""
+def diff(graph, data: Optional[np.ndarray], v1: int, v2: int, *,
+         use_kernel: Optional[bool] = None) -> tuple[np.ndarray, np.ndarray]:
+    """Records in v1 not in v2, and vice versa (the `diff` command).
+
+    ``graph`` may be a BipartiteGraph (+ the record pool ``data``) or a
+    PartitionedCVD store (``data`` ignored): the store path materializes
+    both versions in ONE fused cross-partition wave, then masks each side by
+    global-rid membership — versions in different partitions never touch
+    each other's blocks on the host.
+    """
+    if _is_store(graph):
+        rows_a, rows_b = checkout_wave(graph, [v1, v2],
+                                       use_kernel=use_kernel)
+        ga, gb = graph.global_rlist(v1), graph.global_rlist(v2)
+        keep_a = ~np.isin(ga, gb, assume_unique=True)
+        keep_b = ~np.isin(gb, ga, assume_unique=True)
+        return np.asarray(rows_a)[keep_a], np.asarray(rows_b)[keep_b]
     a, b = graph.rlist(v1), graph.rlist(v2)
     only_a = np.setdiff1d(a, b, assume_unique=True)
     only_b = np.setdiff1d(b, a, assume_unique=True)
@@ -98,17 +125,22 @@ def versions_with_bulk_delete(graph: BipartiteGraph, parents: Sequence[Sequence[
     return np.asarray(out, dtype=np.int64)
 
 
-def join_versions(graph: BipartiteGraph, data: np.ndarray, v1: int, v2: int,
+def join_versions(graph, data: Optional[np.ndarray], v1: int, v2: int,
                   on: int = 0, *, use_kernel: Optional[bool] = None) -> np.ndarray:
     """Inner join of two versions on attribute ``on`` — the multi-version
     renaming query of §2.2.  Returns concatenated row pairs.
 
-    Both versions materialize in one fused batched-checkout pass; the join
-    itself is a vectorized sort-merge (stable sort of the build side, binary
-    search per probe key) with output ordered exactly like the seed's
-    hash-probe loop: probe order major, build order minor.
+    Both versions materialize in one fused batched-checkout pass (``graph``
+    may be a PartitionedCVD store, in which case the pass is ONE
+    cross-partition wave even when v1 and v2 live in different partitions);
+    the join itself is a vectorized sort-merge (stable sort of the build
+    side, binary search per probe key) with output ordered exactly like the
+    seed's hash-probe loop: probe order major, build order minor.
     """
-    a, b = checkout_versions(graph, data, [v1, v2], use_kernel=use_kernel)
+    a, b = _materialize(graph, data, [v1, v2], use_kernel)
+    a, b = np.asarray(a), np.asarray(b)
+    if _is_store(graph):
+        data = graph.data
     bo = np.argsort(b[:, on], kind="stable")
     bs = b[bo, on]
     lo = np.searchsorted(bs, a[:, on], side="left")

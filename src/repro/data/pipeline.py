@@ -12,8 +12,9 @@ a preempted run resumes mid-epoch from (vid, cursor) with zero replay.
 The hot path — materializing the checked-out version — runs through
 kernels.checkout_gather (tiled variant when the rlist is run-dense, which is
 exactly what LYRESPLIT partitioning produces).  Multi-version materialization
-(``checkout_many``) runs through the batched checkout engine: one fused
-``checkout_batched`` kernel launch per partition for the whole version wave.
+(``checkout_many``) runs through the cross-partition wave engine: ONE fused
+``checkout_wave`` kernel launch for the whole version wave over the store's
+epoch-cached device-resident superblock.
 """
 from __future__ import annotations
 
@@ -50,12 +51,14 @@ class VersionedDataset:
             return np.asarray(packed)[perm]
         return np.asarray(K.checkout_gather(p.block, rl))
 
-    def checkout_many(self, vids, *, use_kernel: Optional[bool] = None
-                      ) -> list[np.ndarray]:
+    def checkout_many(self, vids, *, use_kernel: Optional[bool] = None,
+                      engine: str = "wave") -> list[np.ndarray]:
         """Materialize a wave of versions via the fused batched engine —
-        one ``checkout_batched`` launch per partition touched (on TPU;
-        fused host gather otherwise, same default as the store)."""
-        return self.store.checkout_many(vids, use_kernel=use_kernel)
+        by default ONE ``checkout_wave`` launch for the whole wave over the
+        store's epoch-cached superblock, however many partitions it spans
+        (on TPU; fused host gather otherwise, same default as the store)."""
+        return self.store.checkout_many(vids, use_kernel=use_kernel,
+                                        engine=engine)
 
     # -- batching ------------------------------------------------------------------
     def batches(self, vid: int, global_batch: int, seed: int = 0,

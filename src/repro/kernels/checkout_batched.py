@@ -30,6 +30,18 @@ Data flow::
 Rows come back in rlist order per version (no perm needed); per-version
 padding to the BN-row tile boundary re-reads that version's last row and is
 sliced off on the host.
+
+Cross-partition waves (``checkout_wave``) add a THIRD prefetched scalar:
+``core.checkout.plan_wave`` rebases every version's local rlist by its
+partition's row offset inside a device-resident superblock, so one flat
+(starts, mode) plan covers versions from *different* partitions back to
+back.  The rebase lets the planner promote consecutive tail chunks to run
+DMAs (the padded rows land in the sliced-off region), which makes a run DMA
+read past a version's last valid row — ``hi`` carries the per-tile exclusive
+row bound (the tile's partition segment end) and the kernel only issues the
+run DMA when ``start + BN <= hi[t]``, falling back to row DMAs otherwise.
+The bounds check runs on device, so a stale plan degrades to correct row
+gathers instead of reading out of bounds.
 """
 from __future__ import annotations
 
@@ -111,21 +123,26 @@ def plan_batched(rlists, block_n: int = DEFAULT_BN,
                        n_rows=n_rows, density=density)
 
 
-def _make_kernel(block_n: int, block_d: int):
-    def kernel(starts_ref, mode_ref, data_ref, o_ref, sems):
+def _make_wave_kernel(block_n: int, block_d: int):
+    """Like ``_make_kernel`` but with a per-tile row bound: run DMAs fire
+    only when the whole (BN, BD) read stays inside the tile's partition
+    segment of the superblock (``hi`` is the exclusive bound)."""
+    def kernel(starts_ref, mode_ref, hi_ref, data_ref, o_ref, sems):
         t = pl.program_id(0)
         j = pl.program_id(1)
         col = pl.ds(j * block_d, block_d)
+        s0 = starts_ref[t * block_n]
+        run_ok = jnp.logical_and(mode_ref[t] == 1,
+                                 s0 + block_n <= hi_ref[t])
 
-        @pl.when(mode_ref[t] == 1)
+        @pl.when(run_ok)
         def _run():
             cp = pltpu.make_async_copy(
-                data_ref.at[pl.ds(starts_ref[t * block_n], block_n), col],
-                o_ref, sems.at[0])
+                data_ref.at[pl.ds(s0, block_n), col], o_ref, sems.at[0])
             cp.start()
             cp.wait()
 
-        @pl.when(mode_ref[t] == 0)
+        @pl.when(jnp.logical_not(run_ok))
         def _rows():
             for i in range(block_n):
                 pltpu.make_async_copy(
@@ -141,15 +158,20 @@ def _make_kernel(block_n: int, block_d: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("block_n", "block_d", "interpret"))
-def checkout_batched(data: jax.Array, starts: jax.Array, mode: jax.Array, *,
-                     block_n: int = DEFAULT_BN, block_d: int = DEFAULT_BD,
-                     interpret: bool = False) -> jax.Array:
-    """Execute a ``plan_batched`` plan: ONE pallas_call for the whole wave.
+def checkout_wave(data: jax.Array, starts: jax.Array, mode: jax.Array,
+                  hi: jax.Array, *,
+                  block_n: int = DEFAULT_BN, block_d: int = DEFAULT_BD,
+                  interpret: bool = False) -> jax.Array:
+    """Execute a cross-partition ``plan_wave`` plan: ONE pallas_call for a
+    wave spanning any number of partitions.
 
-    data:   (R, D) with D a multiple of block_d (pad upstream).
-    starts: (T*block_n,) int32 source rids (plan.starts).
-    mode:   (T,) int32 per-tile gather mode (plan.mode).
-    Returns (T*block_n, D) packed rows; slice per version with plan.segment.
+    data:   (R, D) superblock — every partition's rows concatenated, D a
+            multiple of block_d (pad at superblock build).
+    starts: (T*block_n,) int32 superblock rids (rebased by partition offset).
+    mode:   (T,) int32 per-tile gather mode (1 = run candidate).
+    hi:     (T,) int32 per-tile exclusive row bound for run DMAs.
+    Returns (T*block_n, D) packed rows; slice per version with the plan's
+    segments.
     """
     r, d = data.shape
     t = mode.shape[0]
@@ -157,14 +179,36 @@ def checkout_batched(data: jax.Array, starts: jax.Array, mode: jax.Array, *,
     assert d % bd == 0, (d, bd)
     grid = (t, d // bd)
     spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
-        out_specs=pl.BlockSpec((block_n, bd), lambda i, j, s, m: (i, j)),
+        out_specs=pl.BlockSpec((block_n, bd), lambda i, j, s, m, h: (i, j)),
         scratch_shapes=[pltpu.SemaphoreType.DMA((block_n,))],
     )
     return pl.pallas_call(
-        _make_kernel(block_n, bd), grid_spec=spec,
+        _make_wave_kernel(block_n, bd), grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((t * block_n, d), data.dtype),
         interpret=interpret,
-    )(starts.astype(jnp.int32), mode.astype(jnp.int32), data)
+    )(starts.astype(jnp.int32), mode.astype(jnp.int32),
+      hi.astype(jnp.int32), data)
+
+
+def checkout_batched(data: jax.Array, starts: jax.Array, mode: jax.Array, *,
+                     block_n: int = DEFAULT_BN, block_d: int = DEFAULT_BD,
+                     interpret: bool = False) -> jax.Array:
+    """Execute a ``plan_batched`` plan: ONE pallas_call for the whole wave.
+
+    The single-block special case of ``checkout_wave``: ``plan_batched``
+    only marks exactly-consecutive chunks as runs, so every run DMA is
+    in-bounds by construction and the per-tile bound degenerates to the
+    block's row count.
+
+    data:   (R, D) with D a multiple of block_d (pad upstream).
+    starts: (T*block_n,) int32 source rids (plan.starts).
+    mode:   (T,) int32 per-tile gather mode (plan.mode).
+    Returns (T*block_n, D) packed rows; slice per version with plan.segment.
+    """
+    hi = jnp.full(mode.shape, data.shape[0], jnp.int32)
+    return checkout_wave(data, starts, mode, hi,
+                         block_n=block_n, block_d=block_d,
+                         interpret=interpret)

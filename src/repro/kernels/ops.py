@@ -140,6 +140,30 @@ def checkout_batched(data, rlists, *, block_n: int = _cg.DEFAULT_BN,
     return [packed[plan.segment(k, block_n)] for k in range(len(rls))], plan
 
 
+def checkout_wave(data, starts, mode, hi, *, block_n: int = _cg.DEFAULT_BN,
+                  block_d: int = _cg.DEFAULT_BD,
+                  interpret: bool | None = None) -> jax.Array:
+    """Cross-partition fused checkout: a whole multi-partition wave, ONE
+    ``pallas_call`` over a pre-padded superblock.
+
+    Thin wrapper over ``checkout_batched.checkout_wave`` — the superblock
+    (``core.checkout.build_superblock``) is already padded to the lane tile
+    and BN-aligned per partition segment, so no padding happens here; this
+    only resolves the interpret/TPU mode and casts the plan arrays.
+    """
+    data = jnp.asarray(data)
+    d = data.shape[1]
+    bd = min(block_d, max(128, d))
+    if d % bd:
+        raise ValueError(
+            f"superblock D={d} not a multiple of the lane tile {bd} — build "
+            "it with core.checkout.build_superblock (which pre-pads)")
+    return _cb.checkout_wave(
+        data, jnp.asarray(starts), jnp.asarray(mode), jnp.asarray(hi),
+        block_n=block_n, block_d=bd,
+        interpret=not _on_tpu() if interpret is None else interpret)
+
+
 def membership_scan(bitmap, vid: int, *, block_r: int = _vm.DEFAULT_BR):
     """(mask, per-block counts) for version ``vid`` over the bitset vlists."""
     bitmap = jnp.asarray(bitmap)

@@ -45,6 +45,11 @@ def main() -> None:
     ap.add_argument("--prompt-version", type=str, default="-1",
                     help="prompt CVD version(s); comma-separated for a "
                          "fused multi-version wave (-1 = latest)")
+    ap.add_argument("--wave-size", type=int, default=None,
+                    help="flush the checkout wave once this many prompt "
+                         "version requests are pending (the deadline half "
+                         "of the flusher is poll()-driven and only makes "
+                         "sense inside a real event loop)")
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
     ap.add_argument("--seed", type=int, default=0)
@@ -70,8 +75,10 @@ def main() -> None:
                                      seq_len=args.prompt_len)
     vids = [v if v >= 0 else w.n_versions - 1
             for v in (int(s) for s in args.prompt_version.split(","))]
-    server = BatchedCheckoutServer(ds.store, use_kernel=True)
-    waves = server.serve(vids)          # ONE fused gather wave for all vids
+    server = BatchedCheckoutServer(ds.store, use_kernel=True,
+                                   max_wave=args.wave_size)
+    server.warmup()                     # superblock built+pinned pre-traffic
+    waves = server.serve(vids)          # ONE fused cross-partition wave
     per_v = max(args.requests // len(vids), 1)
     pool = np.concatenate([m[:per_v] for m in waves])
     if len(pool) == 0:

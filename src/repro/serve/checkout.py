@@ -4,28 +4,40 @@ fused multi-version gathers.
 Request flow (the serve half of the checkout data-flow map in
 ``core/checkout.py``)::
 
-    clients ── submit(vid) ──┐
-    clients ── submit(vid) ──┤   pending wave (dedup by vid)
+    clients ── submit(vid) ──┐                       ticket per request
+    clients ── submit(vid) ──┤   pending wave (dedup by vid at flush)
     clients ── submit(vid) ──┘
-                │ flush()
-                └─ core.checkout.checkout_partitioned
-                     one fused gather per partition touched — on TPU one
-                     ``checkout_batched`` pallas_call per partition, however
-                     many versions the wave names
-                └─ per-request results (identical vids share one gather)
+                │ flush()            — explicit,
+                │                    — size-triggered   (>= max_wave pending),
+                │                    — deadline-triggered (oldest pending
+                │                      waited >= deadline_s; checked by poll())
+                └─ core.checkout.checkout_wave
+                     ONE cross-partition ``checkout_wave`` pallas_call for
+                     the whole wave, however many partitions (and however
+                     many versions) it spans, over the store's epoch-cached
+                     device-resident superblock — repeated waves skip the
+                     host→device transfer entirely
+                └─ per-ticket results (identical vids share one gather;
+                   per-ticket submit→result latency lands in CheckoutStats)
 
-Under heavy multi-user traffic this turns N concurrent checkouts into
-~n_partitions kernel launches per wave instead of N — the serving analogue
-of LyreSplit's checkout-latency headline, applied to batches.
+Under heavy multi-user traffic this turns N concurrent checkouts into ONE
+kernel launch per wave instead of N — the serving analogue of LyreSplit's
+checkout-latency headline, applied to batches.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional, Sequence
+import time
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from ..core.checkout import checkout_partitioned
+from ..core.checkout import (_default_use_kernel, _validate_vids,
+                             checkout_partitioned, get_superblock)
+
+LATENCY_WINDOW = 65536     # per-ticket latencies kept for the percentiles
+RETAIN_RESULTS = 256       # unclaimed ticket results kept before eviction
 
 
 @dataclasses.dataclass
@@ -34,44 +46,161 @@ class CheckoutStats:
     requests: int = 0
     unique_versions: int = 0
     rows_served: int = 0
+    # sliding window (deque, maxlen) — unbounded growth would leak on a
+    # long-running server; `requests` keeps the all-time count
+    ticket_latency_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+
+    @property
+    def p50_latency_s(self) -> float:
+        return float(np.median(list(self.ticket_latency_s))) \
+            if self.ticket_latency_s else 0.0
+
+    @property
+    def max_latency_s(self) -> float:
+        return float(max(self.ticket_latency_s)) \
+            if self.ticket_latency_s else 0.0
 
 
 class BatchedCheckoutServer:
     """Coalescing front-end over a PartitionedCVD (or any store exposing
-    ``vid_to_pid``, ``partitions``)."""
+    ``vid_to_pid``, ``partitions``).
 
-    def __init__(self, store, *, use_kernel: Optional[bool] = None):
+    max_wave:   flush automatically once this many requests are pending.
+    deadline_s: flush on ``poll()`` once the OLDEST pending request has
+                waited this long (the deadline half of the accumulate-for-
+                N-ms-or-K-vids flusher; poll() is the event-loop hook).
+    engine:     "wave" (default) = one fused cross-partition launch per
+                flush; "perpart" = the previous one-launch-per-partition
+                path.
+    """
+
+    def __init__(self, store, *, use_kernel: Optional[bool] = None,
+                 engine: str = "wave", max_wave: Optional[int] = None,
+                 deadline_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.store = store
         self.use_kernel = use_kernel
-        self._pending: list[int] = []
+        self.engine = engine
+        self.max_wave = max_wave
+        self.deadline_s = deadline_s
+        self._clock = clock
+        self._pending: list[tuple[int, int, float]] = []  # (ticket, vid, t)
+        self._next_ticket = 0
+        # unclaimed results, FIFO-evicted beyond RETAIN_RESULTS so a caller
+        # that only consumes flush()'s return value cannot leak the server;
+        # reserved tickets (serve()'s in-flight wave) are eviction-exempt
+        self._results: collections.OrderedDict[int, np.ndarray] = \
+            collections.OrderedDict()
+        self._reserved: set[int] = set()
         self.stats = CheckoutStats()
 
     # -- request plane ---------------------------------------------------------
     def submit(self, vid: int) -> int:
-        """Queue a checkout request; returns its ticket (position)."""
-        self._pending.append(int(vid))
-        return len(self._pending) - 1
+        """Queue a checkout request; returns its ticket.  Tickets are global
+        and monotonically increasing — they stay valid across flushes (claim
+        the result with ``result(ticket)``).  May trigger a size-based
+        flush."""
+        # validate HERE so a bad vid raises in the offending client's call
+        # instead of poisoning a coalesced flush that carries other clients'
+        # requests
+        (vid,) = _validate_vids(self.store, [vid])
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, vid, self._clock()))
+        if self.max_wave is not None and len(self._pending) >= self.max_wave:
+            self.flush()
+        return ticket
+
+    def poll(self) -> bool:
+        """Deadline flusher hook: flush iff the oldest pending request has
+        waited ``deadline_s``.  Returns whether a wave was flushed."""
+        if (self._pending and self.deadline_s is not None
+                and self._clock() - self._pending[0][2] >= self.deadline_s):
+            self.flush()
+            return True
+        return False
 
     def flush(self) -> list[np.ndarray]:
-        """Serve every pending request in one fused wave (per-partition
-        batched gathers); duplicate vids share a single gather."""
-        vids = self._pending
+        """Serve every pending request in one fused wave (a single
+        cross-partition gather); duplicate vids share one gather.  Results
+        come back in TICKET (insertion) order for this wave and are also
+        retained for ``result(ticket)``."""
+        wave = self._pending
         self._pending = []
-        if not vids:
+        if not wave:
             return []
+        vids = [v for _, v, _ in wave]
         uniq = sorted(set(vids))
         slot = {v: i for i, v in enumerate(uniq)}
-        mats = checkout_partitioned(self.store, uniq, use_kernel=self.use_kernel)
-        out = [mats[slot[v]] for v in vids]
+        try:
+            mats = checkout_partitioned(self.store, uniq,
+                                        use_kernel=self.use_kernel,
+                                        engine=self.engine)
+        except BaseException:
+            # a failed gather must not destroy the coalesced wave: re-queue
+            # every request so the tickets stay serviceable
+            self._pending = wave + self._pending
+            raise
+        done = self._clock()
+        out = []
+        for ticket, v, t0 in wave:
+            m = mats[slot[v]]
+            self._results[ticket] = m
+            self.stats.ticket_latency_s.append(done - t0)
+            out.append(m)
+        if len(self._results) > RETAIN_RESULTS:
+            for t in list(self._results):
+                if len(self._results) <= RETAIN_RESULTS:
+                    break
+                if t not in self._reserved:
+                    del self._results[t]
         self.stats.waves += 1
-        self.stats.requests += len(vids)
+        self.stats.requests += len(wave)
         self.stats.unique_versions += len(uniq)
         self.stats.rows_served += sum(len(m) for m in out)
         return out
 
+    def result(self, ticket: int) -> np.ndarray:
+        """Claim (and drop) a flushed ticket's materialized version.  An
+        unreserved ticket older than the RETAIN_RESULTS most recent
+        unclaimed ones has been evicted and raises KeyError; a still-pending
+        ticket also raises and KEEPS its eviction-exempt reservation."""
+        out = self._results.pop(ticket)
+        self._reserved.discard(ticket)
+        return out
+
     # -- convenience -----------------------------------------------------------
+    def warmup(self) -> None:
+        """Opt this server into the superblock ahead of the first wave.
+
+        Builds the host superblock (an explicit memory-for-fusion trade: the
+        engine's host tier only ever reuses a cached superblock, it never
+        builds one implicitly — see ``core.checkout.peek_superblock``) and,
+        for kernel-path servers only, uploads + pins the device copy so the
+        first request doesn't pay the host→device transfer."""
+        sb, _ = get_superblock(self.store)
+        if self.use_kernel or (self.use_kernel is None
+                               and _default_use_kernel()):
+            sb.device()
+
     def serve(self, vids: Sequence[int]) -> list[np.ndarray]:
-        """submit+flush in one call — the whole wave fused."""
-        for v in vids:
-            self.submit(v)
-        return self.flush()
+        """submit+flush in one call — results in request order, correct even
+        when a size-based flush fires mid-submit (collected by ticket, not
+        by wave position).  Tickets are reserved before submission so a
+        wave larger than RETAIN_RESULTS cannot evict its own results."""
+        tickets = []
+        try:
+            for v in vids:
+                self._reserved.add(self._next_ticket)  # submit assigns this
+                tickets.append(self.submit(v))
+        except BaseException:
+            # drop the speculative reservation (the id was never assigned)
+            # and this wave's earlier ones — the caller won't claim them, so
+            # they must stay subject to normal eviction
+            self._reserved.discard(self._next_ticket)
+            for t in tickets:
+                self._reserved.discard(t)
+            raise
+        self.flush()
+        return [self.result(t) for t in tickets]

@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) for the adaptive batched-checkout
+planner: ``plan_batched`` must emit a correct, fully-covering tile plan for
+EVERY rlist shape — duplicates, unsorted inputs, empty rlists interleaved
+with non-empty, block_n=1, and densities landing exactly on the threshold."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.checkout_batched import plan_batched
+
+R = 512   # rid universe for generated rlists
+
+
+@st.composite
+def rlist_waves(draw):
+    """K rlists mixing dense runs, scattered picks, duplicates and empties."""
+    k = draw(st.integers(min_value=1, max_value=6))
+    rls = []
+    for _ in range(k):
+        kind = draw(st.sampled_from(["empty", "run", "scatter", "dups"]))
+        if kind == "empty":
+            rls.append(np.zeros(0, np.int64))
+        elif kind == "run":
+            n = draw(st.integers(min_value=1, max_value=64))
+            s = draw(st.integers(min_value=0, max_value=R - n))
+            rls.append(np.arange(s, s + n, dtype=np.int64))
+        elif kind == "scatter":
+            n = draw(st.integers(min_value=1, max_value=48))
+            rls.append(np.sort(np.asarray(
+                draw(st.lists(st.integers(0, R - 1), min_size=n, max_size=n,
+                              unique=True)), np.int64)))
+        else:   # duplicates, possibly unsorted — honored AS GIVEN
+            n = draw(st.integers(min_value=1, max_value=32))
+            rls.append(np.asarray(
+                draw(st.lists(st.integers(0, R - 1), min_size=n, max_size=n)),
+                np.int64))
+    return rls
+
+
+def _reconstruct(plan, rls, block_n):
+    """The plan's packed-row contract, checked without running the kernel:
+    for every version the starts segment must name exactly its rids (valid
+    rows) padded with the last rid, and run tiles must be consecutive."""
+    for k, rl in enumerate(rls):
+        seg = plan.segment(k, block_n)
+        t0, t1 = int(plan.tile_offsets[k]), int(plan.tile_offsets[k + 1])
+        srow = plan.starts[t0 * block_n:t1 * block_n]
+        n = len(rl)
+        assert seg.stop - seg.start == n
+        np.testing.assert_array_equal(srow[:n], rl)
+        if n:
+            assert np.all(srow[n:] == rl[-1])           # pad = last rid
+        for t in range(t0, t1):
+            chunk = plan.starts[t * block_n:(t + 1) * block_n]
+            if plan.mode[t] == 1 and block_n > 1:
+                assert np.all(np.diff(chunk) == 1)      # runs are runs
+
+
+@given(rlist_waves(), st.sampled_from([1, 4, 8]))
+@settings(max_examples=60, deadline=None)
+def test_plan_batched_covers_every_wave(rls, block_n):
+    plan = plan_batched(rls, block_n=block_n)
+    assert plan.n_tiles == int(plan.tile_offsets[-1])
+    assert len(plan.starts) == plan.n_tiles * block_n
+    assert np.all(np.diff(plan.tile_offsets) >= 0)
+    _reconstruct(plan, rls, block_n)
+    # empty rlists own zero tiles and an empty segment
+    for k, rl in enumerate(rls):
+        if len(rl) == 0:
+            assert plan.tile_offsets[k] == plan.tile_offsets[k + 1]
+            seg = plan.segment(k, block_n)
+            assert seg.start == seg.stop
+
+
+@given(rlist_waves())
+@settings(max_examples=30, deadline=None)
+def test_plan_block_n_one_classifies_every_tile_as_run(rls):
+    """block_n=1: every 1-row chunk is trivially consecutive — all tiles
+    must classify as runs (a run DMA of one row == a row DMA)."""
+    plan = plan_batched(rls, block_n=1)
+    nonempty = [rl for rl in rls if len(rl)]
+    assert plan.n_tiles == sum(len(rl) for rl in nonempty)
+    assert np.all(plan.mode == 1)
+    assert np.all(plan.density[[len(rl) > 0 for rl in rls]] == 1.0)
+    _reconstruct(plan, rls, 1)
+
+
+@given(st.lists(st.integers(0, R - 1), min_size=2, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_plan_duplicate_rids_fall_back_to_row_dmas(rids):
+    """Duplicate/unsorted rids are planned AS GIVEN: never classified as a
+    run (padding or repetition breaks consecutiveness), and the starts
+    segment preserves request order exactly."""
+    rl = np.asarray(rids + [rids[0]], np.int64)        # guarantee a dup
+    plan = plan_batched([rl], block_n=8)
+    _reconstruct(plan, [rl], 8)
+    for t in range(plan.n_tiles):
+        chunk = plan.starts[t * 8:(t + 1) * 8]
+        if not np.all(np.diff(chunk) == 1):
+            assert plan.mode[t] == 0
+
+
+def test_unsorted_input_rejected_where_sorted_is_required():
+    """The SORTED-rlist planners reject unsorted input with a clear error;
+    the entry points sort (checkout_gather_tiled) or reject duplicates."""
+    with pytest.raises(ValueError, match="sorted"):
+        ops.plan_tiles(np.array([5, 3, 1]))
+    data = np.zeros((16, 8), np.int32)
+    with pytest.raises(ValueError, match="duplicate"):
+        ops.checkout_gather_tiled(data, np.array([1, 1, 3]))
+    # plan_batched, by contract, honors unsorted rids instead of rejecting
+    plan = plan_batched([np.array([5, 3, 1])], block_n=4)
+    np.testing.assert_array_equal(plan.starts[:3], [5, 3, 1])
+
+
+@given(st.integers(min_value=1, max_value=6), st.integers(min_value=0, max_value=6))
+@settings(max_examples=40, deadline=None)
+def test_density_exactly_at_threshold_keeps_runs(n_run, n_scatter):
+    """The planner zeroes runs only STRICTLY BELOW the threshold: a wave
+    whose measured density equals ``density_threshold`` keeps its run DMAs."""
+    bn = 4
+    # n_run consecutive chunks + n_scatter scattered chunks, exact density
+    parts = [np.arange(i * 100, i * 100 + bn) for i in range(n_run)]
+    parts += [np.array([1000 + i * 50 + j * 7 for j in range(bn)])
+              for i in range(n_scatter)]
+    rl = np.concatenate(parts).astype(np.int64)
+    t = n_run + n_scatter
+    density = n_run / t
+    plan = plan_batched([rl], block_n=bn, density_threshold=density)
+    assert plan.density[0] == pytest.approx(density)
+    assert plan.mode.sum() == n_run                     # runs survive at ==
+    if n_run:
+        plan_above = plan_batched([rl], block_n=bn,
+                                  density_threshold=density + 1e-9)
+        assert plan_above.mode.sum() == 0               # zeroed strictly below
