@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench bench-multipart bench-all lint
+.PHONY: test bench bench-multipart bench-smoke bench-migration bench-all lint
 
 test:           ## tier-1 verify: the command CI and the roadmap pin
 	$(PY) -m pytest -x -q
@@ -18,6 +18,13 @@ bench:          ## batched checkout perf trajectory (BENCH_batched_checkout.json
 
 bench-multipart: ## cross-partition wave vs P-launch loop (BENCH_multipart_checkout.json)
 	$(PY) -m benchmarks.multipart_checkout
+
+bench-smoke:    ## tiny-shape kernel-path canary (CI): wave engine + online migration
+	BENCH_SMOKE=1 $(PY) -m benchmarks.multipart_checkout
+	BENCH_SMOKE=1 $(PY) -m benchmarks.online_migration
+
+bench-migration: ## incremental vs rebuild migration (BENCH_online_migration.json)
+	$(PY) -m benchmarks.online_migration
 
 bench-all:      ## every paper-figure benchmark
 	$(PY) -m benchmarks.run

@@ -16,10 +16,13 @@ Three measurements per (P, K):
 
 Emits CSV lines (benchmarks/run.py convention) and writes
 ``BENCH_multipart_checkout.json`` next to the repo root.
+``BENCH_SMOKE=1`` (the CI canary, ``make bench-smoke``) shrinks every shape
+and writes ``*.smoke.json`` so the committed full-run artifact survives.
 """
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 
 import numpy as np
@@ -31,11 +34,12 @@ from repro.core.partition import PartitionedCVD
 
 from .common import emit, timeit
 
-PS = (1, 4, 16, 64)
-KS = (4, 16, 64)
-N_VERSIONS = 128
-R, D = 8192, 128
-ROWS_PER_VERSION = 128
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+PS = (1, 4) if SMOKE else (1, 4, 16, 64)
+KS = (4, 8) if SMOKE else (4, 16, 64)
+N_VERSIONS = 32 if SMOKE else 128
+R, D = (1024, 32) if SMOKE else (8192, 128)
+ROWS_PER_VERSION = 32 if SMOKE else 128
 SEED = 0
 
 
@@ -113,8 +117,9 @@ def main() -> None:
              f"rows={sb.n_rows} uploads={sb_now.uploads} "
              f"cache_hit={hit}")
 
-    out_path = pathlib.Path(__file__).resolve().parent.parent / \
-        "BENCH_multipart_checkout.json"
+    name = "BENCH_multipart_checkout.smoke.json" if SMOKE \
+        else "BENCH_multipart_checkout.json"
+    out_path = pathlib.Path(__file__).resolve().parent.parent / name
     out_path.write_text(json.dumps(
         {"config": {"R": R, "D": D, "n_versions": N_VERSIONS,
                     "rows_per_version": ROWS_PER_VERSION,

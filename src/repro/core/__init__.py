@@ -1,16 +1,22 @@
 """OrpheusDB core: CVD storage models, LYRESPLIT partitioning, online
 maintenance, and the versioned query layer."""
-from .checkout import (Superblock, build_superblock, checkout_partitioned,
+from .checkout import (DensityStats, MigrationStats, Superblock,
+                       build_superblock, checkout_partitioned,
                        checkout_partitioned_perpart, checkout_rlists,
                        checkout_versions, checkout_versions_loop,
-                       checkout_wave, get_superblock, plan_wave)
+                       checkout_wave, estimate_superblock_bytes,
+                       evict_superblocks, get_density_stats, get_superblock,
+                       migrate_superblock, plan_wave, take_superblock)
 from .graph import BipartiteGraph, checkout_cost, storage_cost, union_size
 from .version_graph import VersionGraph, WeightedTree, to_tree, edge_weights
 from .datamodels import (ALL_MODELS, CombinedTable, DeltaBased, SplitByRlist,
                          SplitByVlist, TablePerVersion)
 from .lyresplit import lyresplit, lyresplit_for_budget, SplitResult
-from .partition import PartitionedCVD, single_partition, per_version_partitions
-from .online import OnlinePartitioner, replay
+from .partition import (MigrationPlan, PartitionedCVD, SegmentOp,
+                        plan_migration, single_partition,
+                        per_version_partitions)
+from .online import (OnlinePartitioner, RepartitionReport, RepartitionTrigger,
+                     replay)
 from .bench_gen import generate, Workload
 
 __all__ = [
@@ -18,12 +24,15 @@ __all__ = [
     "checkout_partitioned", "checkout_partitioned_perpart",
     "checkout_rlists", "checkout_versions", "checkout_versions_loop",
     "checkout_wave", "Superblock", "build_superblock", "get_superblock",
-    "plan_wave",
+    "plan_wave", "DensityStats", "get_density_stats", "MigrationStats",
+    "migrate_superblock", "estimate_superblock_bytes", "evict_superblocks",
+    "take_superblock",
     "VersionGraph", "WeightedTree", "to_tree", "edge_weights",
     "ALL_MODELS", "CombinedTable", "DeltaBased", "SplitByRlist",
     "SplitByVlist", "TablePerVersion",
     "lyresplit", "lyresplit_for_budget", "SplitResult",
     "PartitionedCVD", "single_partition", "per_version_partitions",
-    "OnlinePartitioner", "replay",
+    "MigrationPlan", "SegmentOp", "plan_migration",
+    "OnlinePartitioner", "RepartitionReport", "RepartitionTrigger", "replay",
     "generate", "Workload",
 ]

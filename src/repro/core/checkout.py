@@ -29,16 +29,52 @@ Data-flow map (kernels -> core -> query/serve)::
 previous one-gather-PER-PARTITION path survives as
 ``checkout_partitioned_perpart`` (the oracle and benchmark baseline), and
 ``checkout_versions_loop`` is the seed per-version gather loop.
+
+Telemetry -> trigger -> migration loop (the online-repartitioning half,
+paper §4.3)::
+
+    checkout_wave                                  (every wave, this module)
+      └─ DensityStats                              [host accumulator on store]
+      │    once an accumulator is attached (RepartitionTrigger attaches
+      │    one; unmonitored stores pay nothing) every planned wave records
+      │    per-vid run density and tile counts (kernel path: straight off
+      │    ``plan_wave``'s plan; host path: ``measure_density`` over the
+      │    same rlists) — sustained row-DMA-dominated waves grow
+      │    ``low_streak``
+      └─ core.online.RepartitionTrigger            [between serve flushes]
+      │    low_streak >= min_waves -> run LYRESPLIT on the version tree,
+      │    emit a ``core.partition.MigrationPlan`` (explicit move/insert
+      │    segments + intelligent-vs-naive cost) when the new partitioning
+      │    is worth adopting
+      └─ PartitionedCVD.apply_migration(plan)      [host, in place]
+      │    morphs the partition blocks segment-by-segment (old blocks are
+      │    the move source, base data only for genuinely new rows), bumps
+      │    the epoch and EAGERLY evicts the stale superblock cache
+      └─ migrate_superblock(store, old_sb, plan)   [device, incremental]
+           rebuilds the superblock as ONE ``kernels.ops.segment_move``
+           pallas_call: untouched BN-aligned tiles are device-to-device
+           copies from the OLD superblock (never re-crossing the host link);
+           only changed tiles ride a small host-uploaded delta — the
+           intelligent-migration analogue of Figs 14-15, applied to the
+           device-resident serve cache
+
+``get_superblock`` also takes an optional ``max_bytes`` budget: a store
+whose ΣR×D superblock would exceed it refuses to pin and routes waves
+through ``checkout_partitioned_perpart`` instead of OOMing.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
+import time
 from typing import Optional, Sequence
 
 import numpy as np
 
 from .graph import BipartiteGraph
+
+logger = logging.getLogger(__name__)
 
 
 @functools.lru_cache(maxsize=1)
@@ -88,6 +124,128 @@ def checkout_versions(graph: BipartiteGraph, data: np.ndarray,
                            use_kernel=use_kernel)
 
 
+# ------------------------------------------------------ density telemetry --
+
+@dataclasses.dataclass
+class DensityStats:
+    """Per-store accumulator of wave gather-mode telemetry.
+
+    Every planned wave records, per requested vid, the measured run density
+    (fraction of BN-row chunks whose rids are consecutive — the fraction of
+    the wave the kernel can serve with run DMAs instead of BN row DMAs).
+    ``low_streak`` counts CONSECUTIVE waves whose aggregate density fell
+    below ``low_threshold``; ``core.online.RepartitionTrigger`` consumes the
+    streak as the repartition signal.
+    """
+    low_threshold: float = 0.5
+    ewma_alpha: float = 0.5
+    waves: int = 0                 # all-time planned waves
+    tiles: int = 0                 # all-time tiles planned
+    run_tiles: float = 0.0         # all-time density-weighted tiles
+    low_streak: int = 0            # consecutive row-DMA-dominated waves
+    last_wave_density: float = 1.0
+    per_vid: dict = dataclasses.field(default_factory=dict)  # vid -> EWMA
+
+    def record(self, vids: Sequence[int], densities: np.ndarray,
+               tiles_per_vid: np.ndarray) -> None:
+        densities = np.asarray(densities, np.float64)
+        tiles_per_vid = np.asarray(tiles_per_vid, np.int64)
+        t = int(tiles_per_vid.sum())
+        self.waves += 1
+        if t == 0:
+            return          # no gather happened: no evidence either way —
+                            # an all-empty wave must not break a streak
+        runs = float((densities * tiles_per_vid).sum())
+        self.tiles += t
+        self.run_tiles += runs
+        wave_d = runs / t
+        self.last_wave_density = wave_d
+        if wave_d < self.low_threshold:
+            self.low_streak += 1
+        else:
+            self.low_streak = 0
+        a = self.ewma_alpha
+        for v, d in zip(vids, densities):
+            prev = self.per_vid.get(int(v))
+            self.per_vid[int(v)] = float(d) if prev is None \
+                else (1.0 - a) * prev + a * float(d)
+
+    @property
+    def mean_density(self) -> float:
+        return self.run_tiles / self.tiles if self.tiles else 1.0
+
+    def reset(self) -> None:
+        """Post-repartition: stale signal — the streak and the per-vid
+        EWMAs describe the OLD layout.  All-time counters survive."""
+        self.low_streak = 0
+        self.last_wave_density = 1.0
+        self.per_vid.clear()
+
+
+def get_density_stats(store, *, create: bool = False
+                      ) -> Optional[DensityStats]:
+    """The store's DensityStats accumulator (attached like the superblock
+    cache; None when absent and ``create`` is False or the store forbids
+    attributes)."""
+    stats = getattr(store, "_density_stats", None)
+    if stats is None and create:
+        stats = DensityStats()
+        try:
+            store._density_stats = stats
+        except AttributeError:
+            return None
+    return stats
+
+
+def measure_density(rlists: Sequence[np.ndarray], block_n: int, *,
+                    density_threshold: float = 0.05
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """(density, tiles) per rlist — the fraction of BN-row tiles the wave
+    engine would serve with a run DMA, without building a plan (host-path
+    telemetry).  Mirrors the planner end to end so every tier records the
+    same number for the same wave: ``plan_batched``'s run classification
+    AND its below-threshold demotion first, then ``plan_wave``'s tail
+    promotion (a ragged final chunk whose valid rids are consecutive is ONE
+    run DMA, so a dense version shorter than a tile measures 1.0)."""
+    dens = np.ones(len(rlists), np.float64)
+    tiles = np.zeros(len(rlists), np.int64)
+    for k, rl in enumerate(rlists):
+        rl = np.asarray(rl, np.int64)
+        n = len(rl)
+        t = -(-n // block_n) if n else 0
+        tiles[k] = t
+        if not t or block_n <= 1:
+            continue
+        pad = t * block_n - n
+        padded = np.concatenate([rl, np.full(pad, rl[-1], np.int64)]) if pad \
+            else rl
+        chunks = padded.reshape(t, block_n)
+        runs = np.all(np.diff(chunks, axis=1) == 1, axis=1)
+        if runs.mean() < density_threshold:
+            runs = np.zeros(t, bool)
+        tail = rl[(t - 1) * block_n:]
+        if len(tail) < block_n and (len(tail) <= 1
+                                    or np.all(np.diff(tail) == 1)):
+            runs[-1] = True
+        dens[k] = float(runs.mean())
+    return dens, tiles
+
+
+def _plan_mode_density(plan) -> tuple[np.ndarray, np.ndarray]:
+    """(density, tiles) per version off a PLANNED wave: the fraction of its
+    tiles actually going out as run DMAs (mode 1) — post tail-promotion,
+    post threshold — i.e. what the kernel will really do."""
+    tiles = np.diff(plan.tile_offsets)
+    dens = np.ones(len(tiles), np.float64)
+    for k in range(len(tiles)):
+        if tiles[k]:
+            t0, t1 = int(plan.tile_offsets[k]), int(plan.tile_offsets[k + 1])
+            dens[k] = float(plan.mode[t0:t1].mean())
+    return dens, tiles
+
+
+
+
 # --------------------------------------------------------------- superblock --
 
 @dataclasses.dataclass
@@ -110,6 +268,7 @@ class Superblock:
     epoch: int                # store.epoch at build time
     _device: object = dataclasses.field(default=None, repr=False)
     uploads: int = 0          # host→device transfers performed
+    cache_key: object = None  # the get_superblock args this is cached under
 
     @property
     def n_rows(self) -> int:
@@ -124,14 +283,14 @@ class Superblock:
         return self._device
 
 
-def build_superblock(store, *, block_n: Optional[int] = None,
-                     block_d: Optional[int] = None) -> Superblock:
-    """Concatenate ``store.partitions`` blocks (padded to a common D) into
-    one Superblock."""
+def _superblock_layout(parts, block_n: Optional[int], block_d: Optional[int]):
+    """The (row_offsets, bounds, d, bd, d_pad, total_rows, dtype) layout a
+    superblock over ``parts`` would have — shared by ``build_superblock``,
+    ``estimate_superblock_bytes`` and ``migrate_superblock`` so all three
+    agree byte-for-byte."""
     from ..kernels.checkout_gather import DEFAULT_BD, DEFAULT_BN
     bn = DEFAULT_BN if block_n is None else block_n
     blk_d = DEFAULT_BD if block_d is None else block_d
-    parts = store.partitions
     d = max((p.block.shape[1] for p in parts), default=0)
     bd = min(blk_d, max(128, d)) if d else blk_d
     d_pad = -(-max(d, 1) // bd) * bd
@@ -139,9 +298,29 @@ def build_superblock(store, *, block_n: Optional[int] = None,
     row_offsets = np.concatenate([[0], np.cumsum(seg)[:-1]]).astype(np.int64) \
         if len(parts) else np.zeros(0, np.int64)
     bounds = row_offsets + seg
-    total = int(seg.sum())
-    dtype = parts[0].block.dtype if parts else np.int32
-    host = np.zeros((max(total, bn), d_pad), dtype=dtype)
+    total = max(int(seg.sum()), bn)
+    dtype = parts[0].block.dtype if parts else np.dtype(np.int32)
+    return bn, row_offsets, bounds, d, bd, d_pad, total, dtype
+
+
+def estimate_superblock_bytes(store, *, block_n: Optional[int] = None,
+                              block_d: Optional[int] = None) -> int:
+    """Host bytes a ``build_superblock`` call would allocate (the device
+    copy pins the same amount), WITHOUT building it — the memory-budget
+    check reads this before committing to the copy."""
+    _, _, _, _, _, d_pad, total, dtype = _superblock_layout(
+        store.partitions, block_n, block_d)
+    return total * d_pad * np.dtype(dtype).itemsize
+
+
+def build_superblock(store, *, block_n: Optional[int] = None,
+                     block_d: Optional[int] = None) -> Superblock:
+    """Concatenate ``store.partitions`` blocks (padded to a common D) into
+    one Superblock."""
+    parts = store.partitions
+    bn, row_offsets, bounds, d, bd, d_pad, total, dtype = _superblock_layout(
+        parts, block_n, block_d)
+    host = np.zeros((total, d_pad), dtype=dtype)
     for p, off in zip(parts, row_offsets):
         r, pd = p.block.shape
         host[off:off + r, :pd] = p.block
@@ -151,13 +330,22 @@ def build_superblock(store, *, block_n: Optional[int] = None,
 
 
 def get_superblock(store, *, block_n: Optional[int] = None,
-                   block_d: Optional[int] = None) -> tuple[Superblock, bool]:
+                   block_d: Optional[int] = None,
+                   max_bytes: Optional[int] = None
+                   ) -> tuple[Optional[Superblock], bool]:
     """Epoch-keyed superblock cache, attached to the store.
 
     Returns (superblock, cache_hit).  A hit means the (host AND any pinned
     device) copy is reused verbatim — consecutive waves skip both the
     concatenation and the host→device transfer.  Bumping ``store.epoch``
     (partition rebuild) invalidates every cached shape.
+
+    ``max_bytes`` is the memory budget: when no epoch-current copy is
+    cached and the would-be superblock exceeds the budget, the call REFUSES
+    to build one and returns (None, False) — callers route the wave through
+    ``checkout_partitioned_perpart`` instead of OOMing.  The refusal is
+    logged once per store.  An already-cached copy is returned regardless
+    (its memory is already paid).
     """
     cache = getattr(store, "_superblock_cache", None)
     if cache is None:
@@ -172,10 +360,77 @@ def get_superblock(store, *, block_n: Optional[int] = None,
         sb = cache.get(key)
         if sb is not None and sb.epoch == epoch:
             return sb, True
+    if max_bytes is not None:
+        need = estimate_superblock_bytes(store, block_n=block_n,
+                                         block_d=block_d)
+        if need > max_bytes:
+            if not getattr(store, "_superblock_budget_logged", False):
+                try:
+                    store._superblock_budget_logged = True
+                except AttributeError:
+                    pass
+                logger.warning(
+                    "superblock needs %d bytes > max_bytes=%d: refusing to "
+                    "pin; waves route through the per-partition engine",
+                    need, max_bytes)
+            return None, False
     sb = build_superblock(store, block_n=block_n, block_d=block_d)
+    sb.cache_key = key
     if cache is not None:
         cache[key] = sb
     return sb, False
+
+
+def evict_superblocks(store) -> int:
+    """Eagerly drop EVERY cached superblock, pinned device copy included.
+
+    ``repartition``/``apply_migration`` call this so a stale device buffer
+    is released the moment the layout changes, instead of lingering until
+    the next ``get_superblock`` happens to overwrite its cache slot (the
+    old behavior leaked one device-resident ΣR×D copy per epoch bump).
+    Returns the eviction count; the all-time count accumulates on
+    ``store._superblock_evictions``.
+    """
+    cache = getattr(store, "_superblock_cache", None)
+    if not cache:
+        return 0
+    n = len(cache)
+    for sb in cache.values():
+        sb._device = None       # hard-release even if a caller kept a ref
+    cache.clear()
+    try:
+        store._superblock_evictions = \
+            getattr(store, "_superblock_evictions", 0) + n
+    except AttributeError:
+        pass
+    return n
+
+
+def take_superblock(store) -> Optional[Superblock]:
+    """Remove and return an epoch-current cached superblock, device copy
+    INTACT — migration consumes the old device buffer as its copy source
+    even as the store stops pinning it.  Stale entries encountered on the
+    way are evicted (counted); returns None when nothing current is
+    cached."""
+    cache = getattr(store, "_superblock_cache", None)
+    if not cache:
+        return None
+    epoch = int(getattr(store, "epoch", 0))
+    taken = None
+    stale = 0
+    for k in list(cache):
+        if taken is None and cache[k].epoch == epoch:
+            taken = cache.pop(k)
+        elif cache[k].epoch != epoch:
+            cache.pop(k)._device = None
+            stale += 1
+    if stale:
+        try:
+            store._superblock_evictions = \
+                getattr(store, "_superblock_evictions", 0) + stale
+        except AttributeError:
+            pass
+    return taken
 
 
 def peek_superblock(store) -> Optional[Superblock]:
@@ -278,9 +533,24 @@ def _validate_vids(store, vids: Sequence[int]) -> list[int]:
     return vids
 
 
+def _local_wave_density(store, vids: Sequence[int],
+                        density_threshold: float):
+    """(density, tiles) off the versions' LOCAL rlists — the telemetry for
+    waves that bypass the superblock (rebasing adds a constant per-version
+    offset, so local and rebased densities are identical).  Imports lazily:
+    only monitored stores pay the kernels (jax) import on the host path."""
+    from ..kernels.checkout_gather import DEFAULT_BN
+    rls = [store.partitions[int(store.vid_to_pid[int(v)])].local_rlist(int(v))
+           for v in vids]
+    return measure_density(rls, DEFAULT_BN,
+                           density_threshold=density_threshold)
+
+
 def checkout_wave(store, vids: Sequence[int], *,
                   use_kernel: Optional[bool] = None,
-                  density_threshold: float = 0.05) -> list[np.ndarray]:
+                  density_threshold: float = 0.05,
+                  max_bytes: Optional[int] = None,
+                  record_density: bool = True) -> list[np.ndarray]:
     """Cross-partition fused checkout: the whole wave, ONE kernel launch.
 
     However many partitions the vids span, the wave executes as a single
@@ -288,31 +558,60 @@ def checkout_wave(store, vids: Sequence[int], *,
     superblock.  The superblock (a padded copy of EVERY partition block) is
     only built when the fusion can pay for it: waves confined to one
     partition with no superblock cached already run as one launch through
-    the per-partition engine, and the host path likewise gathers off a
-    superblock only when one is already cached (free fusion), falling back
-    to per-partition np.takes otherwise."""
+    the per-partition engine, the host path gathers off a superblock only
+    when one is already cached (free fusion), falling back to per-partition
+    np.takes otherwise, and a store whose superblock would exceed
+    ``max_bytes`` (default: ``store.superblock_max_bytes``) refuses the
+    copy and routes through the per-partition engine.
+
+    Every planned wave also records per-vid run-density telemetry into the
+    store's ``DensityStats`` — ONCE an accumulator is attached
+    (``core.online.RepartitionTrigger`` attaches one; so does
+    ``get_density_stats(store, create=True)``).  Stores nobody monitors pay
+    nothing.  ``record_density=False`` opts a call out entirely."""
     vids = _validate_vids(store, vids)
     if not vids:
         return []
     if use_kernel is None:
         use_kernel = _default_use_kernel()
+    if max_bytes is None:
+        max_bytes = getattr(store, "superblock_max_bytes", None)
+    stats = get_density_stats(store) if record_density else None
     sb = peek_superblock(store)
     if not use_kernel:
         # Host tier: reuse an ALREADY-CACHED superblock for the one-take
         # fused gather, but never build one just for numpy — np.take off the
         # per-partition blocks is parity-fast and costs no extra copy.
         if sb is None:
+            if stats:
+                stats.record(vids, *_local_wave_density(
+                    store, vids, density_threshold))
             return checkout_partitioned_perpart(store, vids,
                                                 use_kernel=False)
         rebased, _ = _rebase_wave(store, vids, sb)
+        if stats:
+            stats.record(vids, *measure_density(
+                rebased, sb.block_n, density_threshold=density_threshold))
         return _fused_host_gather(sb.host[:, :sb.d], rebased)
     if sb is None and len({int(store.vid_to_pid[v]) for v in vids}) <= 1:
         # one partition touched = the per-partition engine is already a
         # single launch; don't build+pin a whole-store superblock for it
+        if stats:
+            stats.record(vids, *_local_wave_density(
+                store, vids, density_threshold))
         return checkout_partitioned_perpart(store, vids,
                                             use_kernel=use_kernel)
-    sb, _ = get_superblock(store)
+    if sb is None:
+        sb, _ = get_superblock(store, max_bytes=max_bytes)
+        if sb is None:          # over budget: refuse the copy, go perpart
+            if stats:
+                stats.record(vids, *_local_wave_density(
+                    store, vids, density_threshold))
+            return checkout_partitioned_perpart(store, vids,
+                                                use_kernel=use_kernel)
     wp = plan_wave(store, vids, sb, density_threshold=density_threshold)
+    if stats:
+        stats.record(vids, *_plan_mode_density(wp.plan))
     if wp.n_tiles == 0:
         empty = np.zeros((0, sb.d), dtype=sb.host.dtype)
         return [empty for _ in vids]
@@ -321,6 +620,170 @@ def checkout_wave(store, vids: Sequence[int], *,
                              wp.hi, block_n=sb.block_n, block_d=sb.bd)
     packed = np.asarray(packed)[:, :sb.d]
     return [packed[wp.segment(k, sb.block_n)] for k in range(len(vids))]
+
+
+# ---------------------------------------------------- superblock migration --
+
+@dataclasses.dataclass
+class MigrationStats:
+    """Accounting for one ``migrate_superblock`` call."""
+    n_tiles: int                  # BN-row tiles in the NEW superblock
+    reused_tiles: int             # device-to-device copies from the OLD one
+    delta_tiles: int              # tiles shipped over the host link
+    bytes_uploaded: int           # host->device bytes actually transferred
+    bytes_total: int              # what a rebuild-from-scratch would upload
+    used_device: bool             # device path taken (old device copy live)
+    wall_s: float
+
+    @property
+    def reuse_fraction(self) -> float:
+        return self.reused_tiles / self.n_tiles if self.n_tiles else 1.0
+
+
+def migrate_superblock(store, old_sb: Superblock, plan, *,
+                       use_kernel: Optional[bool] = None,
+                       install: bool = True
+                       ) -> tuple[Superblock, MigrationStats]:
+    """Incremental superblock migration: reuse the OLD device buffer.
+
+    Called AFTER ``store.apply_migration(plan)`` with the PRE-migration
+    superblock (grab it with ``take_superblock`` before applying).  Builds
+    the post-migration superblock without the naive rebuild's full
+    host→device re-upload:
+
+      * every BN-row tile of the new superblock whose rows sit consecutively
+        inside one aligned segment of the OLD superblock is copied
+        device-to-device by the ``kernels.ops.segment_move`` pallas_call
+        (ONE launch for the whole migration) — these tiles never cross the
+        host link again;
+      * only the remaining tiles (rows migration moved across partition
+        boundaries, plus genuinely new rows) are packed into a small delta
+        block and uploaded.
+
+    What is (and is not) delta-proportional: the host→device TRANSFER and
+    the per-delta-tile python work scale with the delta; the host mirror is
+    still assembled in full (one vectorized O(ΣR×D) numpy pass — the same
+    memcpy bound as ``build_superblock``, just sourced from the old host
+    copy + delta so it stays bit-identical to the device result).  Returns
+    (new_superblock, stats); ``install`` slots the result into the store's
+    epoch cache (under the old superblock's cache key) so the next wave
+    hits.
+
+    ``use_kernel=None`` resolves to "is the old device buffer live?" — NOT
+    the backend probe: if a copy is pinned on device (interpret mode
+    included), dropping it for a full re-upload is exactly the naive cost
+    this path exists to avoid; if none is pinned (host-tier store), there
+    is nothing to reuse and the migration stays host-side."""
+    t0 = time.perf_counter()
+    if use_kernel is None:
+        use_kernel = old_sb._device is not None
+    parts = store.partitions
+    bn, row_offsets, bounds, d, bd, d_pad, total, dtype = _superblock_layout(
+        parts, old_sb.block_n, old_sb.bd)
+    if d != old_sb.d or bd != old_sb.bd or bn != old_sb.block_n:
+        raise ValueError(
+            f"migration changed the superblock tiling (d {old_sb.d}->{d}, "
+            f"bd {old_sb.bd}->{bd}, bn {old_sb.block_n}->{bn}) — rebuild "
+            "with build_superblock instead")
+    n_tiles = total // bn
+    sel = np.ones(n_tiles, np.int32)          # default: delta
+    starts = np.zeros(n_tiles, np.int32)
+    host = np.zeros((total, d_pad), dtype=dtype)
+    delta_rows: list[np.ndarray] = []
+    n_old_bounds = len(old_sb.bounds)
+
+    for i, (p, off) in enumerate(zip(parts, row_offsets)):
+        r = p.block.shape[0]
+        t = int((bounds[i] - off) // bn)
+        if t == 0:
+            continue
+        # per-row source position in the OLD superblock (-1 = not there)
+        src = np.full(t * bn, -1, np.int64)
+        spid = np.asarray(plan.src_pid_rows[i])
+        sloc = np.asarray(plan.src_loc_rows[i])
+        hit = spid >= 0
+        if hit.any():
+            src[:r][hit] = old_sb.row_offsets[spid[hit]] + sloc[hit]
+        # tail-pad continuation: the padding rows of the last tile carry no
+        # data, so extend the final run — the tile qualifies for a run copy
+        # whose trailing reads land in the sliced-off region
+        pad = t * bn - r
+        if pad and r and src[r - 1] >= 0:
+            src[r:] = src[r - 1] + 1 + np.arange(pad)
+        chunks = src.reshape(t, bn)
+        ok = chunks[:, 0] >= 0
+        if bn > 1:
+            ok &= np.all(np.diff(chunks, axis=1) == 1, axis=1)
+        if n_old_bounds:
+            s0 = chunks[:, 0]
+            opid = np.clip(np.searchsorted(old_sb.bounds, s0, side="right"),
+                           0, n_old_bounds - 1)
+            # the whole BN-row run must stay inside ONE aligned old segment
+            ok &= s0 + bn <= old_sb.bounds[opid]
+        else:
+            ok[:] = False
+        t_base = int(off) // bn
+        ok_idx = np.flatnonzero(ok)
+        if len(ok_idx):
+            # reused tiles: one vectorized numpy gather (python-level work
+            # stays proportional to the delta loop below)
+            sel[t_base + ok_idx] = 0
+            starts[t_base + ok_idx] = chunks[ok_idx, 0]
+            src_rows = (chunks[ok_idx, 0][:, None]
+                        + np.arange(bn)).reshape(-1)
+            dst_rows = (int(off) + ok_idx[:, None] * bn
+                        + np.arange(bn)).reshape(-1)
+            host[dst_rows] = old_sb.host[src_rows]
+        for k in np.flatnonzero(~ok):
+            dst = slice(int(off) + k * bn, int(off) + (k + 1) * bn)
+            rows = np.zeros((bn, d_pad), dtype=dtype)
+            lo = int(k) * bn
+            valid = min(bn, r - lo) if r > lo else 0
+            if valid > 0:
+                rows[:valid, :d] = p.block[lo:lo + valid]
+            starts[t_base + k] = len(delta_rows) * bn
+            delta_rows.append(rows)
+            host[dst] = rows
+
+    delta = np.concatenate(delta_rows, axis=0) if delta_rows else None
+    reused = int((sel == 0).sum())
+    n_delta = n_tiles - reused
+    bytes_uploaded = 0
+
+    new_sb = Superblock(host=host, row_offsets=row_offsets, bounds=bounds,
+                        d=d, bd=bd, block_n=bn,
+                        epoch=int(getattr(store, "epoch", 0)))
+    used_device = bool(use_kernel) and old_sb._device is not None
+    if used_device:
+        import jax.numpy as jnp
+        from ..kernels import ops as K
+        if delta is None:       # all tiles reused: the kernel still needs a
+            # delta operand, but a device-side fill uploads nothing
+            delta_dev = jnp.zeros((bn, d_pad), dtype=dtype)
+        else:
+            delta_dev = jnp.asarray(delta)
+            bytes_uploaded = delta.nbytes
+        new_sb._device = K.segment_move(old_sb._device, delta_dev,
+                                        sel, starts, block_n=bn, block_d=bd)
+        new_sb.uploads = 1 if bytes_uploaded else 0
+
+    if install:
+        key = getattr(old_sb, "cache_key", None) or (None, None)
+        new_sb.cache_key = key
+        cache = getattr(store, "_superblock_cache", None)
+        if cache is None:
+            cache = {}
+            try:
+                store._superblock_cache = cache
+            except AttributeError:
+                cache = None
+        if cache is not None:
+            cache[key] = new_sb
+    stats = MigrationStats(
+        n_tiles=n_tiles, reused_tiles=reused, delta_tiles=n_delta,
+        bytes_uploaded=int(bytes_uploaded), bytes_total=int(host.nbytes),
+        used_device=used_device, wall_s=time.perf_counter() - t0)
+    return new_sb, stats
 
 
 # ------------------------------------------------------------- entry points --

@@ -186,6 +186,127 @@ class OnlinePartitioner:
         self.part_versions = [len(s) for s in new_sets]
 
 
+# -- density-triggered online repartitioning ----------------------------------
+
+@dataclasses.dataclass
+class RepartitionReport:
+    """One fired trigger: what it cost and what it bought."""
+    at_wave: int                   # DensityStats.waves when the trigger fired
+    trigger_density: float         # the wave density that tripped it
+    n_partitions_before: int
+    n_partitions_after: int
+    cost_intelligent: int          # MigrationPlan record-row cost (morph)
+    cost_naive: int                # MigrationPlan record-row cost (scratch)
+    c_avg_before: float            # store checkout cost before/after
+    c_avg_after: float
+    superblock: object             # checkout.MigrationStats | None
+    wall_s: float
+
+
+class RepartitionTrigger:
+    """Closes the telemetry loop: sustained low-density (row-DMA-dominated)
+    waves -> LYRESPLIT -> incremental migration (§4.3 applied online).
+
+    ``core.checkout.checkout_wave`` records per-wave run density into the
+    store's ``DensityStats``; ``observe()`` — run between serve flushes —
+    fires once the low-density streak reaches ``min_waves``, computes a
+    fresh LYRESPLIT partitioning of the version tree under the γ-factor
+    storage budget, and adopts it only when it actually changes the
+    partitioning and improves the estimated checkout cost by
+    ``min_gain``.  Adoption is the intelligent path end to end:
+    ``plan_migration`` -> ``apply_migration`` (morph the blocks in place)
+    -> ``migrate_superblock`` (reuse the old device buffer, upload only
+    the delta).  Firing resets the stats, so re-triggering needs a fresh
+    ``min_waves`` streak under the NEW layout.
+    """
+
+    def __init__(self, store, tree: WeightedTree, *,
+                 gamma_factor: float = 2.0, min_waves: int = 3,
+                 low_density: float = 0.5, min_gain: float = 1.02,
+                 lyresplit_iters: int = 12,
+                 use_kernel: Optional[bool] = None):
+        from .checkout import get_density_stats
+        if tree.n != store.graph.n_versions:
+            raise ValueError(
+                f"tree has {tree.n} versions, store has "
+                f"{store.graph.n_versions}")
+        self.store = store
+        self.tree = tree
+        self.gamma_factor = gamma_factor
+        self.min_waves = min_waves
+        self.min_gain = min_gain
+        self.lyresplit_iters = lyresplit_iters
+        self.use_kernel = use_kernel
+        self.reports: list[RepartitionReport] = []
+        stats = get_density_stats(store, create=True)
+        if stats is not None:
+            stats.low_threshold = low_density
+
+    def should_fire(self) -> bool:
+        from .checkout import get_density_stats
+        stats = get_density_stats(self.store)
+        return stats is not None and stats.low_streak >= self.min_waves
+
+    def observe(self) -> Optional[RepartitionReport]:
+        """Run between waves: repartition if the density signal warrants it.
+        Returns the report when a migration happened, else None."""
+        from .checkout import (get_density_stats, migrate_superblock,
+                               take_superblock)
+        from .partition import plan_migration
+        stats = get_density_stats(self.store, create=True)
+        if stats is None or stats.low_streak < self.min_waves:
+            return None
+        t0 = time.perf_counter()
+        gamma = self.gamma_factor * self.store.graph.n_records
+        sr = lyresplit_for_budget(self.tree, gamma,
+                                  max_iters=self.lyresplit_iters)
+        new_assignment = sr.best.assignment
+        if _same_partitioning(new_assignment, self.store.assignment):
+            stats.reset()           # nothing to gain at this budget
+            return None
+        c_before = self.store.avg_checkout_cost()
+        if c_before < self.min_gain * max(sr.best.est_checkout, 1e-9):
+            stats.reset()
+            return None
+        at_wave = stats.waves
+        trigger_density = stats.last_wave_density
+        n_before = len(self.store.partitions)
+        plan = plan_migration(self.store, new_assignment)
+        old_sb = take_superblock(self.store)
+        self.store.apply_migration(plan)
+        mstats = None
+        if old_sb is not None:
+            _, mstats = migrate_superblock(self.store, old_sb, plan,
+                                           use_kernel=self.use_kernel)
+        stats.reset()
+        report = RepartitionReport(
+            at_wave=at_wave, trigger_density=trigger_density,
+            n_partitions_before=n_before,
+            n_partitions_after=len(self.store.partitions),
+            cost_intelligent=plan.cost_intelligent,
+            cost_naive=plan.cost_naive,
+            c_avg_before=c_before, c_avg_after=self.store.avg_checkout_cost(),
+            superblock=mstats, wall_s=time.perf_counter() - t0)
+        self.reports.append(report)
+        return report
+
+
+def _same_partitioning(a: np.ndarray, b: np.ndarray) -> bool:
+    """Two assignments induce the same partitioning iff they are equal up to
+    label renaming (canonicalize by first-occurrence order)."""
+    a, b = np.asarray(a), np.asarray(b)
+    if a.shape != b.shape:
+        return False
+
+    def canon(x: np.ndarray) -> np.ndarray:
+        _, first, inv = np.unique(x, return_index=True, return_inverse=True)
+        rank = np.empty(len(first), np.int64)
+        rank[np.argsort(first)] = np.arange(len(first))
+        return rank[inv]
+
+    return bool(np.array_equal(canon(a), canon(b)))
+
+
 def replay(graph: BipartiteGraph, tree: WeightedTree, gamma_factor: float = 2.0,
            mu: float = 1.5, every: int = 1) -> OnlineTrace:
     """Stream an existing workload's versions through the online partitioner."""

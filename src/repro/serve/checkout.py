@@ -23,6 +23,14 @@ Request flow (the serve half of the checkout data-flow map in
 Under heavy multi-user traffic this turns N concurrent checkouts into ONE
 kernel launch per wave instead of N — the serving analogue of LyreSplit's
 checkout-latency headline, applied to batches.
+
+Pass a ``core.online.RepartitionTrigger`` as ``trigger`` and the server
+closes the paper's online-maintenance loop: every flushed wave records run
+density, and BETWEEN flushes the trigger re-clusters hot scattered versions
+with LYRESPLIT + incremental migration (``apply_migration`` +
+``migrate_superblock``), so the run-DMA path recovers without a serving
+stall — the superblock migrates device-side, only changed tiles re-cross
+the host link.
 """
 from __future__ import annotations
 
@@ -46,6 +54,7 @@ class CheckoutStats:
     requests: int = 0
     unique_versions: int = 0
     rows_served: int = 0
+    repartitions: int = 0      # density-triggered online repartitions fired
     # sliding window (deque, maxlen) — unbounded growth would leak on a
     # long-running server; `requests` keeps the all-time count
     ticket_latency_s: collections.deque = dataclasses.field(
@@ -73,17 +82,29 @@ class BatchedCheckoutServer:
     engine:     "wave" (default) = one fused cross-partition launch per
                 flush; "perpart" = the previous one-launch-per-partition
                 path.
+    trigger:    optional ``core.online.RepartitionTrigger`` — its
+                ``observe()`` runs after every flush (between waves, never
+                inside one), so sustained low-density traffic repartitions
+                the store online; fired repartitions are counted in
+                ``stats.repartitions``.
     """
 
     def __init__(self, store, *, use_kernel: Optional[bool] = None,
                  engine: str = "wave", max_wave: Optional[int] = None,
                  deadline_s: Optional[float] = None,
+                 trigger=None,
                  clock: Callable[[], float] = time.monotonic):
+        if trigger is not None and engine != "wave":
+            # density is only recorded by the wave engine; a trigger on the
+            # perpart engine would silently never fire
+            raise ValueError(
+                f"RepartitionTrigger requires engine='wave', got {engine!r}")
         self.store = store
         self.use_kernel = use_kernel
         self.engine = engine
         self.max_wave = max_wave
         self.deadline_s = deadline_s
+        self.trigger = trigger
         self._clock = clock
         self._pending: list[tuple[int, int, float]] = []  # (ticket, vid, t)
         self._next_ticket = 0
@@ -159,6 +180,11 @@ class BatchedCheckoutServer:
         self.stats.requests += len(wave)
         self.stats.unique_versions += len(uniq)
         self.stats.rows_served += sum(len(m) for m in out)
+        # between flushes: let the density trigger repartition the store
+        # (already-flushed results above are untouched; the NEXT wave sees
+        # the new layout and a freshly migrated superblock)
+        if self.trigger is not None and self.trigger.observe() is not None:
+            self.stats.repartitions += 1
         return out
 
     def result(self, ticket: int) -> np.ndarray:
@@ -178,10 +204,15 @@ class BatchedCheckoutServer:
         engine's host tier only ever reuses a cached superblock, it never
         builds one implicitly — see ``core.checkout.peek_superblock``) and,
         for kernel-path servers only, uploads + pins the device copy so the
-        first request doesn't pay the host→device transfer."""
-        sb, _ = get_superblock(self.store)
-        if self.use_kernel or (self.use_kernel is None
-                               and _default_use_kernel()):
+        first request doesn't pay the host→device transfer.  A store whose
+        ``superblock_max_bytes`` budget refuses the copy warms nothing —
+        waves will route through the per-partition engine."""
+        sb, _ = get_superblock(
+            self.store,
+            max_bytes=getattr(self.store, "superblock_max_bytes", None))
+        if sb is not None and (self.use_kernel
+                               or (self.use_kernel is None
+                                   and _default_use_kernel())):
             sb.device()
 
     def serve(self, vids: Sequence[int]) -> list[np.ndarray]:
