@@ -4,10 +4,25 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench bench-multipart bench-smoke bench-migration bench-all lint
+.PHONY: test test-cov bench bench-multipart bench-smoke bench-migration \
+	bench-group bench-all lint
+
+# Line-coverage floor for src/repro/core (the CI gate behind `make test-cov`).
+# Baseline'd under the current suite; ratchet UP as coverage grows, never down.
+COV_FLOOR ?= 80
 
 test:           ## tier-1 verify: the command CI and the roadmap pin
 	$(PY) -m pytest -x -q
+
+test-cov:       ## tier-1 + line-coverage floor on src/repro/core (CI gate)
+	@if $(PY) -c "import pytest_cov" >/dev/null 2>&1; then \
+	  $(PY) -m pytest -x -q --cov=repro.core \
+	    --cov-report=term-missing:skip-covered \
+	    --cov-fail-under=$(COV_FLOOR); \
+	else \
+	  echo "pytest-cov not installed - running plain tier-1 suite"; \
+	  $(PY) -m pytest -x -q; \
+	fi
 
 lint:           ## syntax/undefined-name gate (no style bikeshed)
 	$(PY) -m pyflakes src/repro benchmarks tests || \
@@ -22,9 +37,13 @@ bench-multipart: ## cross-partition wave vs P-launch loop (BENCH_multipart_check
 bench-smoke:    ## tiny-shape kernel-path canary (CI): wave engine + online migration
 	BENCH_SMOKE=1 $(PY) -m benchmarks.multipart_checkout
 	BENCH_SMOKE=1 $(PY) -m benchmarks.online_migration
+	BENCH_SMOKE=1 $(PY) -m benchmarks.group_superblock
 
 bench-migration: ## incremental vs rebuild migration (BENCH_online_migration.json)
 	$(PY) -m benchmarks.online_migration
+
+bench-group:    ## budget-aware partial fusion vs perpart fallback (BENCH_group_superblock.json)
+	$(PY) -m benchmarks.group_superblock
 
 bench-all:      ## every paper-figure benchmark
 	$(PY) -m benchmarks.run

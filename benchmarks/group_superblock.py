@@ -1,0 +1,190 @@
+"""Partition-group superblocks: budget-aware partial fusion under served
+scattered traffic.
+
+The store's whole superblock is 4x OVER the device budget
+(``superblock_max_bytes`` = 25% of the full ΣR×D copy), so the pre-group
+engine would refuse to pin anything and every wave would fall back to the
+per-partition engine — one kernel launch per touched partition.  The group
+layer instead packs the partition set into budget-fitting groups (hot
+partitions first, ranked by the ``HotSetPolicy`` wave-touch EWMA), pins the
+hot groups under the budget with LRU eviction, and serves each wave as ONE
+fused ``checkout_wave`` launch per touched group.
+
+Streamed scenario: every wave draws K scattered vids from a HOT subset of
+partitions (the RStore hot/cold skew).  Phases:
+
+  1. cold serve through the grouped engine — heat accumulates, LRU pulls
+     the hot groups in;
+  2. ``regroup()`` — consolidate the hot set into dense co-resident groups;
+  3. steady state — measured: mean wave latency, fused launches per wave
+     (== touched groups), pinned bytes vs budget;
+  4. the same stream through the PERPART fallback server (what an
+     over-budget store did before the group layer) — measured identically;
+  5. reference: an UNBUDGETED store pinning the whole superblock (the
+     fusion ceiling the budget forbids).
+
+Emits CSV lines (benchmarks/run.py convention) and writes
+``BENCH_group_superblock.json`` at the repo root; ``BENCH_SMOKE=1`` (the CI
+canary, ``make bench-smoke``) shrinks shapes and writes ``*.smoke.json``.
+The canary ASSERTS the headline: grouped waves beat the perpart fallback
+and launch exactly one fused kernel per touched pinned group.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.checkout import (estimate_superblock_bytes,
+                                 get_superblock, get_superblock_groups)
+from repro.core.graph import BipartiteGraph
+from repro.core.partition import PartitionedCVD
+from repro.serve.checkout import BatchedCheckoutServer
+
+from .common import emit
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+SEED = 11
+
+P = 32 if SMOKE else 64                 # partitions
+VERSIONS_PER_P = 2 if SMOKE else 4
+R, D = (2048, 16) if SMOKE else (8192, 32)
+ROWS_PER_VERSION = 16 if SMOKE else 64
+N_HOT = 6 if SMOKE else 12              # hot partitions (the served subset)
+WAVE_K = 8 if SMOKE else 16             # vids per wave
+N_WAVES = 6 if SMOKE else 12            # distinct wave shapes in the cycle
+BUDGET_FRAC = 4                         # budget = full superblock bytes / 4
+MEASURE_PASSES = 3
+
+
+def _make_store(rng) -> PartitionedCVD:
+    """Scattered rlists (row-DMA traffic) assigned v -> v%P."""
+    n_versions = P * VERSIONS_PER_P
+    rls = [np.sort(rng.choice(R, ROWS_PER_VERSION, replace=False))
+           .astype(np.int64) for _ in range(n_versions)]
+    graph = BipartiteGraph.from_rlists(rls, n_records=R)
+    data = rng.integers(0, 1 << 20, (R, D)).astype(np.int32)
+    return PartitionedCVD(graph, data, np.arange(n_versions) % P)
+
+
+def _hot_waves(rng, hot_pids) -> list[list[int]]:
+    """K scattered vids per wave, all from the hot partition subset."""
+    hot_vids = [v for v in range(P * VERSIONS_PER_P) if v % P in hot_pids]
+    return [[int(v) for v in rng.choice(hot_vids, WAVE_K, replace=False)]
+            for _ in range(N_WAVES)]
+
+
+def _serve_stream(srv, waves, passes: int) -> float:
+    """Mean wall time per wave over ``passes`` full cycles."""
+    t0 = time.perf_counter()
+    for _ in range(passes):
+        for vids in waves:
+            srv.serve(vids)
+    return (time.perf_counter() - t0) / (passes * len(waves))
+
+
+def main() -> None:
+    rng = np.random.default_rng(SEED)
+    hot_pids = sorted(int(q) for q in rng.choice(P, N_HOT, replace=False))
+    waves = _hot_waves(rng, hot_pids)
+    oracle_store = _make_store(np.random.default_rng(SEED))
+    oracle = {tuple(vids): [oracle_store.checkout(v) for v in vids]
+              for vids in map(tuple, waves)}
+
+    # -- grouped engine under the budget -------------------------------------
+    store = _make_store(np.random.default_rng(SEED))
+    need = estimate_superblock_bytes(store)
+    store.superblock_max_bytes = need // BUDGET_FRAC
+    srv = BatchedCheckoutServer(store, use_kernel=True)
+    _serve_stream(srv, waves, 1)                  # cold: heat + LRU pull-in
+    mgr = get_superblock_groups(store)
+    mgr.regroup()                                 # consolidate the hot set
+    _serve_stream(srv, waves, 1)                  # re-pin + warm jit caches
+    t_grouped = _serve_stream(srv, waves, MEASURE_PASSES)
+    for vids in waves:                            # correctness, not just speed
+        for m, want in zip(srv.serve(vids), oracle[tuple(vids)]):
+            np.testing.assert_array_equal(np.asarray(m), want)
+    launches_per_wave = mgr.last_wave.launches
+    touched_groups = mgr.last_wave.groups_touched
+    stragglers_steady = mgr.last_wave.straggler_vids
+    grouped_stats = {
+        "wave_s": t_grouped,
+        "launches_per_wave": launches_per_wave,
+        "groups_touched_per_wave": touched_groups,
+        "straggler_vids_steady": stragglers_steady,
+        "pinned_bytes": mgr.pinned_bytes,
+        "budget_bytes": mgr.budget,
+        "full_superblock_bytes": need,
+        "pinned_groups": len(mgr.groups),
+        "group_evictions_total": mgr.evictions,
+        "serve_group_waves": srv.stats.group_waves,
+        "serve_group_launches": srv.stats.group_launches,
+    }
+
+    # -- the perpart fallback (pre-group over-budget behavior) ---------------
+    store_pp = _make_store(np.random.default_rng(SEED))
+    store_pp.superblock_max_bytes = need // BUDGET_FRAC
+    srv_pp = BatchedCheckoutServer(store_pp, use_kernel=True,
+                                   engine="perpart")
+    _serve_stream(srv_pp, waves, 2)               # warm jit caches
+    t_perpart = _serve_stream(srv_pp, waves, MEASURE_PASSES)
+    touched_parts = len({v % P for vids in waves for v in vids})
+
+    # -- reference: unbudgeted whole-superblock fusion ceiling ---------------
+    store_full = _make_store(np.random.default_rng(SEED))
+    srv_full = BatchedCheckoutServer(store_full, use_kernel=True)
+    srv_full.warmup()
+    get_superblock(store_full)[0].device()
+    _serve_stream(srv_full, waves, 2)
+    t_full = _serve_stream(srv_full, waves, MEASURE_PASSES)
+
+    res = {
+        "config": {"smoke": SMOKE, "seed": SEED, "p": P, "r": R, "d": D,
+                   "versions": P * VERSIONS_PER_P,
+                   "rows_per_version": ROWS_PER_VERSION,
+                   "hot_partitions": hot_pids, "wave_k": WAVE_K,
+                   "n_waves": N_WAVES, "budget_frac": f"1/{BUDGET_FRAC}"},
+        "grouped": grouped_stats,
+        "perpart_fallback": {"wave_s": t_perpart,
+                             "launches_per_wave_approx": min(WAVE_K,
+                                                             len(hot_pids)),
+                             "partitions_touched_stream": touched_parts},
+        "full_superblock_reference": {"wave_s": t_full,
+                                      "pinned_bytes": need},
+        "grouped_vs_perpart_speedup": t_perpart / max(t_grouped, 1e-12),
+        "full_vs_grouped_ratio": t_grouped / max(t_full, 1e-12),
+    }
+    name = "BENCH_group_superblock.smoke.json" if SMOKE \
+        else "BENCH_group_superblock.json"
+    out_path = pathlib.Path(__file__).resolve().parent.parent / name
+    out_path.write_text(json.dumps(res, indent=2))
+    print(f"wrote {out_path}")
+    emit("group_superblock_grouped", t_grouped * 1e6,
+         f"perpart_us={t_perpart * 1e6:.1f} "
+         f"speedup={res['grouped_vs_perpart_speedup']:.2f} "
+         f"launches={launches_per_wave} budget=1/{BUDGET_FRAC}")
+    emit("group_superblock_full_ref", t_full * 1e6,
+         f"grouped_over_full={res['full_vs_grouped_ratio']:.2f}")
+
+    # CI canary: deterministic structural properties only — the group layer
+    # must FUSE (launches < touched partitions, no steady-state stragglers)
+    # under the budget invariant
+    assert stragglers_steady == 0, \
+        "steady-state hot traffic still routed vids perpart"
+    assert launches_per_wave <= touched_groups
+    assert launches_per_wave < min(WAVE_K, N_HOT), \
+        f"no fusion: {launches_per_wave} launches for {N_HOT} hot partitions"
+    assert grouped_stats["pinned_bytes"] <= grouped_stats["budget_bytes"]
+    if not SMOKE:
+        # wall-clock headline asserted on the full run only: smoke shapes on
+        # a shared CI runner are too small to gate on timing without flakes
+        assert res["grouped_vs_perpart_speedup"] > 1.0, \
+            (f"grouped waves ({t_grouped * 1e6:.1f}us) must beat the "
+             f"perpart fallback ({t_perpart * 1e6:.1f}us)")
+
+
+if __name__ == "__main__":
+    main()

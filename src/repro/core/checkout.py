@@ -59,11 +59,41 @@ paper §4.3)::
            device-resident serve cache
 
 ``get_superblock`` also takes an optional ``max_bytes`` budget: a store
-whose ΣR×D superblock would exceed it refuses to pin and routes waves
-through ``checkout_partitioned_perpart`` instead of OOMing.
+whose ΣR×D superblock would exceed it refuses to pin the whole-store copy
+— but over-budget stores do NOT lose fusion.  The partition-group layer
+(budget-aware partial fusion)::
+
+    over-budget wave                               core.checkout (this module)
+      └─ SuperblockGroups                          [store-level group cache]
+      │    the partition set is packed into budget-fitting GROUPS, hot
+      │    partitions first (``core.online.HotSetPolicy``: per-partition
+      │    wave-touch EWMA blended with the per-vid run-density EWMA from
+      │    ``DensityStats``); each group gets its own ``Superblock`` over
+      │    just its partitions (same BN/lane-tile layout, a ``pids`` slot
+      │    map instead of the identity), pinned ON DEMAND under the shared
+      │    ``max_bytes`` budget with LRU eviction of cold groups
+      └─ _grouped_wave                             [wave routing/splitting]
+      │    the wave's vids split by group; each TOUCHED PINNED group runs
+      │    as ONE fused ``checkout_wave`` pallas_call over that group's
+      │    superblock (launches == touched pinned groups); only genuinely
+      │    unpinned stragglers (partitions bigger than the whole budget, or
+      │    groups the LRU could not co-pin this wave) route through the
+      │    per-partition engine
+      └─ migration: an epoch bump migrates or evicts PER GROUP —
+           ``PartitionedCVD.apply_migration`` detaches the pinned group
+           superblocks (device copies intact), morphs the store, then
+           ``migrate_groups`` maps each group's partitions through
+           ``plan.matched_old`` and replays ``migrate_superblock`` per
+           group (device tiles reused, delta-only upload) instead of
+           nuking the whole cache
+
+The single-superblock fast path is the one-group degenerate case: a store
+whose full superblock fits the budget (or has none) never builds the group
+layer, and its wave path is unchanged.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import logging
@@ -258,10 +288,15 @@ class Superblock:
     in p), and D is padded to the lane-tile multiple so the kernel consumes
     the array as-is.  ``device()`` uploads once and pins the copy; the
     epoch captured at build keys cache invalidation.
+
+    A whole-store superblock covers every partition (``pids`` is None and
+    segment i belongs to partition i); a PARTITION-GROUP superblock covers
+    the subset ``pids`` — segment i belongs to partition ``pids[i]`` and
+    ``slot`` maps a pid back to its segment.
     """
     host: np.ndarray          # (R_pad, D_pad) zero-padded concatenation
-    row_offsets: np.ndarray   # (P,) int64 — first superblock row of partition p
-    bounds: np.ndarray        # (P,) int64 — aligned exclusive end of partition p
+    row_offsets: np.ndarray   # (P,) int64 — first superblock row of segment p
+    bounds: np.ndarray        # (P,) int64 — aligned exclusive end of segment p
     d: int                    # original feature width (pre-padding)
     bd: int                   # lane-tile width the feature axis is padded to
     block_n: int              # row alignment of the partition segments
@@ -269,10 +304,22 @@ class Superblock:
     _device: object = dataclasses.field(default=None, repr=False)
     uploads: int = 0          # host→device transfers performed
     cache_key: object = None  # the get_superblock args this is cached under
+    pids: Optional[np.ndarray] = None   # group members (None = all partitions)
+    _slot_of: Optional[dict] = dataclasses.field(default=None, repr=False)
 
     @property
     def n_rows(self) -> int:
         return self.host.shape[0]
+
+    def slot(self, pid: int) -> int:
+        """Segment index of partition ``pid`` in this superblock — the pid
+        itself for a whole-store superblock, the group-local position for a
+        partition-group one, -1 when the partition is not covered."""
+        if self.pids is None:
+            return pid if 0 <= pid < len(self.row_offsets) else -1
+        if self._slot_of is None:
+            self._slot_of = {int(p): i for i, p in enumerate(self.pids)}
+        return self._slot_of.get(int(pid), -1)
 
     def device(self):
         """The device-resident copy — uploaded on first use, then pinned."""
@@ -303,21 +350,57 @@ def _superblock_layout(parts, block_n: Optional[int], block_d: Optional[int]):
     return bn, row_offsets, bounds, d, bd, d_pad, total, dtype
 
 
+def _select_parts(store, pids):
+    if pids is None:
+        return store.partitions
+    return [store.partitions[int(q)] for q in pids]
+
+
 def estimate_superblock_bytes(store, *, block_n: Optional[int] = None,
-                              block_d: Optional[int] = None) -> int:
+                              block_d: Optional[int] = None,
+                              pids: Optional[Sequence[int]] = None) -> int:
     """Host bytes a ``build_superblock`` call would allocate (the device
     copy pins the same amount), WITHOUT building it — the memory-budget
-    check reads this before committing to the copy."""
+    check reads this before committing to the copy.  ``pids`` restricts the
+    estimate to a partition group."""
     _, _, _, _, _, d_pad, total, dtype = _superblock_layout(
-        store.partitions, block_n, block_d)
+        _select_parts(store, pids), block_n, block_d)
     return total * d_pad * np.dtype(dtype).itemsize
 
 
+def _cached_superblock_need(store) -> int:
+    """``estimate_superblock_bytes`` under the DEFAULT tiling, memoized per
+    epoch on the store — the over-budget wave path consults it on EVERY
+    kernel wave and the value only changes on an epoch bump (O(P) python
+    otherwise, paid on the latency-critical serve path)."""
+    epoch = int(getattr(store, "epoch", 0))
+    cached = getattr(store, "_superblock_need", None)
+    if cached is not None and cached[0] == epoch:
+        return cached[1]
+    need = estimate_superblock_bytes(store)
+    try:
+        store._superblock_need = (epoch, need)
+    except AttributeError:
+        pass
+    return need
+
+
+def partition_segment_bytes(store, *, block_n: Optional[int] = None,
+                            block_d: Optional[int] = None) -> np.ndarray:
+    """Per-partition BN-aligned segment bytes under the superblock layout —
+    the additive unit the group former packs against the budget (a group's
+    superblock is the concatenation of its members' segments)."""
+    _, row_offsets, bounds, _, _, d_pad, _, dtype = _superblock_layout(
+        store.partitions, block_n, block_d)
+    return (bounds - row_offsets) * d_pad * np.dtype(dtype).itemsize
+
+
 def build_superblock(store, *, block_n: Optional[int] = None,
-                     block_d: Optional[int] = None) -> Superblock:
+                     block_d: Optional[int] = None,
+                     pids: Optional[Sequence[int]] = None) -> Superblock:
     """Concatenate ``store.partitions`` blocks (padded to a common D) into
-    one Superblock."""
-    parts = store.partitions
+    one Superblock — all of them, or the partition group ``pids``."""
+    parts = _select_parts(store, pids)
     bn, row_offsets, bounds, d, bd, d_pad, total, dtype = _superblock_layout(
         parts, block_n, block_d)
     host = np.zeros((total, d_pad), dtype=dtype)
@@ -326,7 +409,9 @@ def build_superblock(store, *, block_n: Optional[int] = None,
         host[off:off + r, :pd] = p.block
     return Superblock(host=host, row_offsets=row_offsets, bounds=bounds,
                       d=d, bd=bd, block_n=bn,
-                      epoch=int(getattr(store, "epoch", 0)))
+                      epoch=int(getattr(store, "epoch", 0)),
+                      pids=None if pids is None
+                      else np.asarray(list(pids), np.int64))
 
 
 def get_superblock(store, *, block_n: Optional[int] = None,
@@ -364,21 +449,36 @@ def get_superblock(store, *, block_n: Optional[int] = None,
         need = estimate_superblock_bytes(store, block_n=block_n,
                                          block_d=block_d)
         if need > max_bytes:
-            if not getattr(store, "_superblock_budget_logged", False):
-                try:
-                    store._superblock_budget_logged = True
-                except AttributeError:
-                    pass
-                logger.warning(
-                    "superblock needs %d bytes > max_bytes=%d: refusing to "
-                    "pin; waves route through the per-partition engine",
-                    need, max_bytes)
+            _log_budget_refusal(store, need, max_bytes, epoch)
             return None, False
     sb = build_superblock(store, block_n=block_n, block_d=block_d)
     sb.cache_key = key
     if cache is not None:
         cache[key] = sb
+    # the whole-store copy supersedes the partial-fusion layer: release any
+    # pinned partition-group superblocks so the two never double-pin
+    mgr = getattr(store, "_superblock_groups", None)
+    if mgr is not None:
+        mgr.evict_all()
     return sb, False
+
+
+def _log_budget_refusal(store, need: int, max_bytes: int, epoch: int) -> None:
+    """Log a whole-store superblock budget refusal ONCE per store — re-armed
+    whenever the budget value or the epoch changes (a one-shot flag would go
+    silent forever after the first refusal, hiding later layout/budget
+    changes from the operator)."""
+    state = (int(epoch), int(max_bytes))
+    if getattr(store, "_superblock_budget_logged", None) == state:
+        return
+    try:
+        store._superblock_budget_logged = state
+    except AttributeError:
+        pass
+    logger.warning(
+        "superblock needs %d bytes > max_bytes=%d: refusing to pin the "
+        "whole store; waves route through partition-group superblocks "
+        "(per-partition engine for unpinned stragglers)", need, max_bytes)
 
 
 def evict_superblocks(store) -> int:
@@ -388,9 +488,16 @@ def evict_superblocks(store) -> int:
     is released the moment the layout changes, instead of lingering until
     the next ``get_superblock`` happens to overwrite its cache slot (the
     old behavior leaked one device-resident ΣR×D copy per epoch bump).
+    Any pinned partition-GROUP superblocks are dropped too (their eviction
+    count accumulates on the group manager, not here) — the incremental
+    path detaches them FIRST with ``take_group_superblocks`` and migrates
+    them per group via ``migrate_groups``.
     Returns the eviction count; the all-time count accumulates on
     ``store._superblock_evictions``.
     """
+    mgr = getattr(store, "_superblock_groups", None)
+    if mgr is not None:
+        mgr.evict_all()
     cache = getattr(store, "_superblock_cache", None)
     if not cache:
         return 0
@@ -448,6 +555,360 @@ def peek_superblock(store) -> Optional[Superblock]:
     return None
 
 
+# ----------------------------------------------- partition-group superblocks --
+
+GROUP_FANOUT = 4   # soft co-residency target: per-group cap = budget/FANOUT,
+                   # so ~FANOUT hot groups can stay pinned simultaneously
+                   # (a single partition bigger than the cap still gets its
+                   # own group as long as it fits the whole budget)
+
+
+@dataclasses.dataclass
+class GroupWaveReport:
+    """Accounting for ONE wave routed through the group layer."""
+    groups_touched: int = 0    # distinct groups the wave's vids map to
+    launches: int = 0          # fused kernel launches (== pinned groups that
+                               # actually gathered tiles)
+    pinned: int = 0            # groups (re)pinned by this wave
+    evictions: int = 0         # LRU evictions this wave forced
+    straggler_vids: int = 0    # vids routed through the per-partition engine
+
+
+class SuperblockGroups:
+    """Budget-aware partition-group superblock cache: the partial-fusion
+    layer for stores whose whole-store superblock exceeds ``max_bytes``.
+
+    The partition set is packed into groups, hot partitions first (the
+    ``core.online.HotSetPolicy`` ranking when one is attached, partition
+    order otherwise); each group's superblock is built and pinned ON DEMAND
+    the first time a wave touches it, under the SHARED byte budget —
+    pinning a new group LRU-evicts cold ones (never a group the current
+    wave still needs).  Partitions bigger than the whole budget are
+    permanent stragglers and always route through the per-partition
+    engine.
+
+    Invariants the leak tests hold us to: ``pinned_bytes`` equals the sum
+    of the pinned groups' host bytes and never exceeds ``budget``;
+    ``pins - evictions == len(groups)``; every superblock that leaves the
+    cache has its device copy released (unless explicitly taken for
+    migration, in which case ``migrate_groups`` releases it)."""
+
+    def __init__(self, store, budget: int, *,
+                 block_n: Optional[int] = None,
+                 block_d: Optional[int] = None):
+        self.store = store
+        self.budget = int(budget)
+        self.block_n = block_n
+        self.block_d = block_d
+        self.epoch = int(getattr(store, "epoch", 0))
+        # pinned group superblocks, LRU order (oldest first)
+        self.groups: "collections.OrderedDict[tuple, Superblock]" = \
+            collections.OrderedDict()
+        self.pid_to_group: dict[int, tuple] = {}
+        self.group_bytes: dict[tuple, int] = {}
+        self.straggler_pids: set[int] = set()
+        self.planned: list[tuple] = []      # group keys, hot order
+        self.pinned_bytes = 0
+        # all-time counters (the serve stats and the leak test read these)
+        self.pins = 0
+        self.evictions = 0
+        self.launches = 0
+        self.waves = 0
+        self.groups_touched = 0
+        self.straggler_requests = 0
+        self.last_wave: Optional[GroupWaveReport] = None
+        self._plan_epoch = -1
+
+    # -- group formation ----------------------------------------------------
+    def _hot_order(self, n_partitions: int) -> list[int]:
+        pol = getattr(self.store, "_hot_set_policy", None)
+        if pol is None:
+            return list(range(n_partitions))
+        return [int(q) for q in pol.rank(self.store, n_partitions)]
+
+    def plan_groups(self) -> None:
+        """(Re)partition the partition set into budget-fitting groups.
+
+        Epoch-current PINNED groups keep their membership (their memory is
+        already paid — regrouping must not thrash them); the remaining
+        partitions are packed greedily in hot order against the per-group
+        cap.  A partition bigger than the whole budget becomes a straggler
+        (permanently perpart-routed)."""
+        store = self.store
+        self.epoch = int(getattr(store, "epoch", 0))
+        seg = partition_segment_bytes(store, block_n=self.block_n,
+                                      block_d=self.block_d)
+        n = len(seg)
+        self.pid_to_group.clear()
+        self.straggler_pids.clear()
+        self.group_bytes.clear()
+        self.planned = []
+        for key in list(self.groups):
+            sb = self.groups[key]
+            if sb.epoch != self.epoch or any(q >= n for q in key):
+                self._evict(key)
+                continue
+            self.group_bytes[key] = int(sb.host.nbytes)
+            self.planned.append(key)
+            for q in key:
+                self.pid_to_group[q] = key
+        cap = max(self.budget // GROUP_FANOUT, 1)
+        cur: list[int] = []
+        cur_bytes = 0
+
+        def close() -> None:
+            nonlocal cur, cur_bytes
+            if cur:
+                key = tuple(sorted(cur))
+                self.group_bytes[key] = estimate_superblock_bytes(
+                    self.store, block_n=self.block_n, block_d=self.block_d,
+                    pids=key)
+                self.planned.append(key)
+                for q in cur:
+                    self.pid_to_group[q] = key
+            cur, cur_bytes = [], 0
+
+        for q in self._hot_order(n):
+            if q in self.pid_to_group:
+                continue                    # already kept via a pinned group
+            b = int(seg[q])
+            if b > self.budget:
+                self.straggler_pids.add(q)
+                continue
+            if cur and cur_bytes + b > cap:
+                close()
+            cur.append(q)
+            cur_bytes += b
+        close()
+        self._plan_epoch = self.epoch
+
+    def ensure_plan(self) -> None:
+        if (self._plan_epoch != int(getattr(self.store, "epoch", 0))
+                or (not self.pid_to_group and not self.straggler_pids
+                    and len(self.store.partitions))):
+            self.plan_groups()
+
+    def set_budget(self, budget: int) -> None:
+        """Budget changes re-form the groups from scratch (the cap moved);
+        counters survive."""
+        budget = int(budget)
+        if budget == self.budget:
+            return
+        self.budget = budget
+        self.evict_all()
+        self._plan_epoch = -1
+
+    def regroup(self) -> None:
+        """Drop every pin and re-form the groups from the CURRENT hot
+        ranking — the explicit consolidation knob for traffic shifts.
+        The implicit replans (epoch bump, budget change) KEEP pinned
+        groups, so heat that accumulated after the first plan can leave
+        hot partitions scattered across cold-order groups; this one
+        starts clean, so the hot set packs into dense co-resident groups
+        (fewer launches per wave).  Costs a full re-pin on the next
+        waves."""
+        self.evict_all()
+        self._plan_epoch = -1
+        self.ensure_plan()
+
+    # -- pin / evict ---------------------------------------------------------
+    def _evict(self, key: tuple) -> None:
+        sb = self.groups.pop(key)
+        sb._device = None                   # hard-release the device copy
+        self.pinned_bytes -= int(sb.host.nbytes)
+        self.evictions += 1
+
+    def evict_all(self) -> int:
+        n = len(self.groups)
+        for key in list(self.groups):
+            self._evict(key)
+        return n
+
+    def take_all(self) -> list[Superblock]:
+        """Detach every pinned group, device copies INTACT — migration
+        consumes them as copy sources.  Counted as evictions (the cache no
+        longer owns the memory); ``migrate_groups`` releases the old
+        buffers once the per-group migration has replayed them."""
+        out = []
+        for key in list(self.groups):
+            sb = self.groups.pop(key)
+            self.pinned_bytes -= int(sb.host.nbytes)
+            self.evictions += 1
+            out.append(sb)
+        return out
+
+    def _make_room(self, need: int, protected: frozenset | set) -> bool:
+        """LRU-evict cold (non-``protected``) groups until ``need`` bytes
+        fit under the budget; False when they cannot (oversize ``need`` or
+        only protected groups left to evict)."""
+        if need > self.budget:
+            return False
+        while self.pinned_bytes + need > self.budget:
+            victim = next((k for k in self.groups if k not in protected),
+                          None)
+            if victim is None:
+                return False
+            self._evict(victim)
+        return True
+
+    def peek(self, key: tuple) -> Optional[Superblock]:
+        """An already-pinned, epoch-current group superblock — or None,
+        WITHOUT building one (the host tier's free-fusion check)."""
+        sb = self.groups.get(key)
+        if sb is None or sb.epoch != int(getattr(self.store, "epoch", 0)):
+            return None
+        self.groups.move_to_end(key)
+        return sb
+
+    def pin(self, key: tuple, protected: frozenset | set = frozenset()
+            ) -> Optional[Superblock]:
+        """The group's superblock, pinned — building it (and LRU-evicting
+        cold groups to make room) if needed.  ``protected`` groups (the
+        current wave's) are never evicted; returns None when the group
+        cannot fit without evicting one of them."""
+        sb = self.peek(key)
+        if sb is not None:
+            return sb
+        if key in self.groups:              # stale epoch: rebuild below
+            self._evict(key)
+        need = self.group_bytes.get(key)
+        if need is None:
+            need = estimate_superblock_bytes(
+                self.store, block_n=self.block_n, block_d=self.block_d,
+                pids=key)
+            self.group_bytes[key] = need
+        if not self._make_room(need, protected):
+            return None
+        sb = build_superblock(self.store, block_n=self.block_n,
+                              block_d=self.block_d, pids=key)
+        sb.cache_key = key
+        self.groups[key] = sb
+        self.pinned_bytes += int(sb.host.nbytes)
+        self.pins += 1
+        return sb
+
+    def install(self, sb: Superblock,
+                protected: frozenset | set = frozenset()) -> bool:
+        """Pin an externally built (migrated) group superblock under the
+        budget, LRU-evicting cold groups to fit; on False the superblock's
+        device copy is released (it could not be kept)."""
+        key = tuple(int(q) for q in np.asarray(sb.pids))
+        need = int(sb.host.nbytes)
+        if not self._make_room(need, protected):
+            sb._device = None
+            return False
+        sb.cache_key = key
+        self.groups[key] = sb
+        self.group_bytes[key] = need
+        for q in key:
+            self.pid_to_group[q] = key
+        self.pinned_bytes += need
+        self.pins += 1
+        return True
+
+    def warm(self, *, device: bool) -> int:
+        """Pin planned groups, hot order first, until the budget is full —
+        the serve-layer warmup analogue of ``Superblock.device()``.  A
+        group that cannot fit is SKIPPED (not a stop): smaller, colder
+        groups further down the plan may still fill the remaining
+        budget."""
+        self.ensure_plan()
+        n = 0
+        for key in list(self.planned):
+            sb = self.pin(key, protected=set(self.groups))
+            if sb is None:
+                continue
+            if device:
+                sb.device()
+            n += 1
+        return n
+
+
+def get_superblock_groups(store, *, budget: Optional[int] = None,
+                          create: bool = False
+                          ) -> Optional[SuperblockGroups]:
+    """The store's group-superblock manager (attached like the superblock
+    cache; None when absent and ``create`` is False or the store forbids
+    attributes).  A ``budget`` differing from the manager's re-forms the
+    groups; creation also attaches a ``core.online.HotSetPolicy`` so the
+    group former has a hot ranking to consume."""
+    mgr = getattr(store, "_superblock_groups", None)
+    if mgr is None and create:
+        if budget is None:
+            raise ValueError("creating SuperblockGroups needs a budget")
+        mgr = SuperblockGroups(store, budget)
+        try:
+            store._superblock_groups = mgr
+        except AttributeError:
+            return None
+        from .online import get_hot_set_policy   # lazy: no cycle at import
+        get_hot_set_policy(store, create=True)
+    elif mgr is not None and budget is not None:
+        mgr.set_budget(int(budget))
+    return mgr
+
+
+def take_group_superblocks(store) -> list[Superblock]:
+    """Detach every pinned group superblock (device copies intact) ahead of
+    a migration — ``migrate_groups`` replays them under the new layout."""
+    mgr = getattr(store, "_superblock_groups", None)
+    return mgr.take_all() if mgr is not None else []
+
+
+def migrate_groups(store, plan, taken: Sequence[Superblock], *,
+                   use_kernel: Optional[bool] = None) -> int:
+    """Per-group epoch-bump migration: re-pin each detached pre-migration
+    group superblock under the NEW layout instead of nuking the cache.
+
+    Each old group's partitions map through ``plan.matched_old`` to the new
+    partitions that morphed out of them; the group superblock migrates
+    incrementally (``migrate_superblock(pids=...)`` — device tiles reused,
+    delta-only upload) and re-pins under the budget.  Groups that dissolved
+    (no new partition morphed from them), changed tiling, or no longer fit
+    are evicted (device released).  Returns the migrated-group count."""
+    mgr = getattr(store, "_superblock_groups", None)
+    if mgr is None:
+        for sb in taken:
+            sb._device = None
+        return 0
+    matched = np.asarray(plan.matched_old, np.int64)
+    migrated = 0
+    kept: set[tuple] = set()    # groups migrated THIS call are protected:
+    # installing a later group must not LRU-evict an earlier one whose
+    # segment_move work was just paid (hot-order taken first)
+    for old_sb in taken:
+        old_pids = set(
+            int(q) for q in (old_sb.pids if old_sb.pids is not None
+                             else np.arange(len(old_sb.row_offsets))))
+        new_pids = sorted(int(i) for i in np.flatnonzero(matched >= 0)
+                          if int(matched[i]) in old_pids)
+        if not new_pids:
+            old_sb._device = None
+            continue
+        # don't pay segment_move for a group that cannot be kept: every
+        # group pinned during this call is protected, so the fit test is
+        # exactly "does it fit in the remaining budget"
+        est = estimate_superblock_bytes(store, block_n=mgr.block_n,
+                                        block_d=mgr.block_d, pids=new_pids)
+        if mgr.pinned_bytes + est > mgr.budget:
+            old_sb._device = None
+            continue
+        try:
+            new_sb, _ = migrate_superblock(store, old_sb, plan,
+                                           pids=new_pids,
+                                           use_kernel=use_kernel,
+                                           install=False)
+        except ValueError:          # tiling changed: rebuild on next touch
+            old_sb._device = None
+            continue
+        old_sb._device = None
+        if mgr.install(new_sb, protected=kept):
+            kept.add(tuple(int(q) for q in np.asarray(new_sb.pids)))
+            migrated += 1
+    mgr.plan_groups()               # regroup leftovers around the survivors
+    return migrated
+
+
 # ---------------------------------------------------------------- wave plan --
 
 @dataclasses.dataclass(frozen=True)
@@ -473,17 +934,24 @@ class WavePlan:
 def _rebase_wave(store, vids: Sequence[int], sb: Superblock
                  ) -> tuple[list[np.ndarray], list[int]]:
     """Rebase each version's LOCAL rlist into superblock coordinates (local
-    rid + partition row offset).  The host path gathers straight off this;
-    the kernel path plans it with ``plan_wave``."""
+    rid + the partition SEGMENT's row offset — segment == pid for a
+    whole-store superblock, the group slot for a partition-group one).
+    The host path gathers straight off this; the kernel path plans it with
+    ``plan_wave``.  Returns (rebased rlists, per-vid segment slots)."""
     rebased: list[np.ndarray] = []
-    pids: list[int] = []
+    slots: list[int] = []
     for v in vids:
         pid = int(store.vid_to_pid[int(v)])
+        s = sb.slot(pid)
+        if s < 0:
+            raise ValueError(
+                f"version {int(v)}'s partition {pid} is not covered by "
+                f"this superblock (group {None if sb.pids is None else list(sb.pids)})")
         p = store.partitions[pid]
         rebased.append(np.asarray(p.local_rlist(int(v)), np.int64)
-                       + int(sb.row_offsets[pid]))
-        pids.append(pid)
-    return rebased, pids
+                       + int(sb.row_offsets[s]))
+        slots.append(s)
+    return rebased, slots
 
 
 def plan_wave(store, vids: Sequence[int], sb: Superblock, *,
@@ -504,16 +972,16 @@ def plan_wave(store, vids: Sequence[int], sb: Superblock, *,
     """
     from ..kernels.checkout_batched import plan_batched
     bn = sb.block_n
-    rebased, pids = _rebase_wave(store, vids, sb)
+    rebased, slots = _rebase_wave(store, vids, sb)
     plan = plan_batched(rebased, block_n=bn,
                         density_threshold=density_threshold)
     hi = np.zeros(plan.n_tiles, np.int32)
     mode = plan.mode.copy()
-    for k, (rl, pid) in enumerate(zip(rebased, pids)):
+    for k, (rl, s) in enumerate(zip(rebased, slots)):
         t0, t1 = int(plan.tile_offsets[k]), int(plan.tile_offsets[k + 1])
         if t1 == t0:
             continue
-        hi[t0:t1] = int(sb.bounds[pid])
+        hi[t0:t1] = int(sb.bounds[s])
         # tail promotion: valid rids of the last chunk are consecutive
         tail = rl[(t1 - t0 - 1) * bn:]
         if len(tail) < bn and (len(tail) <= 1
@@ -531,6 +999,19 @@ def _validate_vids(store, vids: Sequence[int]) -> list[int]:
         raise ValueError(f"unknown version id(s) {bad}: store has "
                          f"{n_versions} versions (0..{n_versions - 1})")
     return vids
+
+
+def _perpart_fallback(store, vids: Sequence[int],
+                      stats: Optional[DensityStats], use_kernel,
+                      density_threshold: float) -> list[np.ndarray]:
+    """Route a whole wave through the per-partition engine, recording the
+    wave's density telemetry off the local rlists first (rebasing is a
+    constant per-version offset, so local density == superblock density) —
+    the shared tail of every wave-engine fallback branch."""
+    if stats:
+        stats.record(vids, *_local_wave_density(store, vids,
+                                                density_threshold))
+    return checkout_partitioned_perpart(store, vids, use_kernel=use_kernel)
 
 
 def _local_wave_density(store, vids: Sequence[int],
@@ -559,16 +1040,20 @@ def checkout_wave(store, vids: Sequence[int], *,
     only built when the fusion can pay for it: waves confined to one
     partition with no superblock cached already run as one launch through
     the per-partition engine, the host path gathers off a superblock only
-    when one is already cached (free fusion), falling back to per-partition
-    np.takes otherwise, and a store whose superblock would exceed
-    ``max_bytes`` (default: ``store.superblock_max_bytes``) refuses the
-    copy and routes through the per-partition engine.
+    when one is already cached (free fusion), and a store whose superblock
+    would exceed ``max_bytes`` (default: ``store.superblock_max_bytes``)
+    refuses the whole-store copy and routes through the PARTITION-GROUP
+    layer instead — one fused launch per touched pinned group
+    (``SuperblockGroups``), the per-partition engine only for genuinely
+    unpinned stragglers.
 
     Every planned wave also records per-vid run-density telemetry into the
     store's ``DensityStats`` — ONCE an accumulator is attached
     (``core.online.RepartitionTrigger`` attaches one; so does
     ``get_density_stats(store, create=True)``).  Stores nobody monitors pay
-    nothing.  ``record_density=False`` opts a call out entirely."""
+    nothing.  ``record_density=False`` opts a call out entirely.  An
+    attached ``HotSetPolicy`` likewise observes every wave's touched
+    partitions (the group former's heat signal)."""
     vids = _validate_vids(store, vids)
     if not vids:
         return []
@@ -577,49 +1062,177 @@ def checkout_wave(store, vids: Sequence[int], *,
     if max_bytes is None:
         max_bytes = getattr(store, "superblock_max_bytes", None)
     stats = get_density_stats(store) if record_density else None
+    pol = getattr(store, "_hot_set_policy", None)
+    if pol is not None:
+        pol.touch([int(store.vid_to_pid[int(v)]) for v in vids])
     sb = peek_superblock(store)
     if not use_kernel:
         # Host tier: reuse an ALREADY-CACHED superblock for the one-take
         # fused gather, but never build one just for numpy — np.take off the
         # per-partition blocks is parity-fast and costs no extra copy.
         if sb is None:
-            if stats:
-                stats.record(vids, *_local_wave_density(
-                    store, vids, density_threshold))
-            return checkout_partitioned_perpart(store, vids,
-                                                use_kernel=False)
+            mgr = getattr(store, "_superblock_groups", None)
+            if mgr is not None and mgr.groups:
+                # free fusion off already-pinned group superblocks
+                return _grouped_wave(store, vids, mgr, use_kernel=False,
+                                     stats=stats,
+                                     density_threshold=density_threshold)
+            return _perpart_fallback(store, vids, stats, False,
+                                     density_threshold)
         rebased, _ = _rebase_wave(store, vids, sb)
         if stats:
             stats.record(vids, *measure_density(
                 rebased, sb.block_n, density_threshold=density_threshold))
         return _fused_host_gather(sb.host[:, :sb.d], rebased)
+    if sb is None and max_bytes is not None:
+        need = _cached_superblock_need(store)
+        if need > max_bytes:
+            # over budget: refuse the whole-store copy, run the wave through
+            # the partition-group layer (partial fusion under the budget)
+            _log_budget_refusal(store, need, max_bytes,
+                                int(getattr(store, "epoch", 0)))
+            store_budget = getattr(store, "superblock_max_bytes", None)
+            mgr = get_superblock_groups(store)
+            if mgr is None:
+                # the SHARED manager is sized by the store-level budget; a
+                # per-call max_bytes only seeds it when no store-level
+                # budget exists at all
+                mgr = get_superblock_groups(
+                    store, create=True,
+                    budget=store_budget if store_budget is not None
+                    else max_bytes)
+            elif max_bytes == store_budget:
+                # a store-level budget change re-forms the shared manager;
+                # a per-call max_bytes override only bounds THIS wave's
+                # whole-store build decision — mutating the shared budget
+                # would evict every other caller's pinned groups
+                mgr.set_budget(max_bytes)
+            if mgr is not None:
+                return _grouped_wave(store, vids, mgr, use_kernel=True,
+                                     stats=stats,
+                                     density_threshold=density_threshold)
+            # store forbids attributes: no group cache possible
+            return _perpart_fallback(store, vids, stats, use_kernel,
+                                     density_threshold)
     if sb is None and len({int(store.vid_to_pid[v]) for v in vids}) <= 1:
         # one partition touched = the per-partition engine is already a
         # single launch; don't build+pin a whole-store superblock for it
-        if stats:
-            stats.record(vids, *_local_wave_density(
-                store, vids, density_threshold))
-        return checkout_partitioned_perpart(store, vids,
-                                            use_kernel=use_kernel)
+        return _perpart_fallback(store, vids, stats, use_kernel,
+                                 density_threshold)
     if sb is None:
         sb, _ = get_superblock(store, max_bytes=max_bytes)
-        if sb is None:          # over budget: refuse the copy, go perpart
-            if stats:
-                stats.record(vids, *_local_wave_density(
-                    store, vids, density_threshold))
-            return checkout_partitioned_perpart(store, vids,
-                                                use_kernel=use_kernel)
-    wp = plan_wave(store, vids, sb, density_threshold=density_threshold)
+        if sb is None:          # refused (store forbade caching): perpart
+            return _perpart_fallback(store, vids, stats, use_kernel,
+                                     density_threshold)
+    mats, _, dt = _gather_off_superblock(
+        store, vids, sb, use_kernel=True,
+        density_threshold=density_threshold, want_density=stats is not None)
     if stats:
-        stats.record(vids, *_plan_mode_density(wp.plan))
+        stats.record(vids, *dt)
+    return mats
+
+
+def _gather_off_superblock(store, gvids: Sequence[int], sb: Superblock, *,
+                           use_kernel: bool, density_threshold: float,
+                           want_density: bool = False
+                           ) -> tuple[list[np.ndarray], bool, Optional[tuple]]:
+    """One fused gather for ``gvids`` over ``sb`` (whole-store or group).
+    Returns (per-vid blocks, launched, density) — ``launched`` is True iff
+    a kernel launch actually happened (an all-empty wave gathers nothing);
+    ``density`` is the per-vid (densities, tiles) telemetry when
+    ``want_density`` (read off the plan the gather needs anyway — no extra
+    rlist pass), else None."""
+    if not use_kernel:
+        rebased, _ = _rebase_wave(store, gvids, sb)
+        dt = measure_density(rebased, sb.block_n,
+                             density_threshold=density_threshold) \
+            if want_density else None
+        return _fused_host_gather(sb.host[:, :sb.d], rebased), False, dt
+    wp = plan_wave(store, gvids, sb, density_threshold=density_threshold)
+    dt = _plan_mode_density(wp.plan) if want_density else None
     if wp.n_tiles == 0:
         empty = np.zeros((0, sb.d), dtype=sb.host.dtype)
-        return [empty for _ in vids]
+        return [empty for _ in gvids], False, dt
     from ..kernels import ops as K
     packed = K.checkout_wave(sb.device(), wp.plan.starts, wp.plan.mode,
                              wp.hi, block_n=sb.block_n, block_d=sb.bd)
     packed = np.asarray(packed)[:, :sb.d]
-    return [packed[wp.segment(k, sb.block_n)] for k in range(len(vids))]
+    return [packed[wp.segment(k, sb.block_n)]
+            for k in range(len(gvids))], True, dt
+
+
+def _grouped_wave(store, vids: Sequence[int], mgr: SuperblockGroups, *,
+                  use_kernel: bool, stats: Optional[DensityStats],
+                  density_threshold: float) -> list[np.ndarray]:
+    """Route one wave through the partition-group layer.
+
+    The wave's vids split by group; every touched group that is (or can
+    be) pinned runs as ONE fused ``checkout_wave`` pallas_call over its
+    group superblock — kernel launches == touched pinned groups.  Groups
+    this wave touches are protected from intra-wave LRU eviction (pinning
+    group B must not thrash group A mid-wave); vids whose group cannot
+    co-pin, plus straggler partitions bigger than the whole budget, route
+    through the per-partition engine in one batch.  The host tier only
+    uses groups that are ALREADY pinned (free fusion — numpy never pays a
+    superblock build)."""
+    mgr.ensure_plan()
+    by_group: dict[tuple, list[int]] = {}
+    stragglers: list[int] = []
+    for i, v in enumerate(vids):
+        key = mgr.pid_to_group.get(int(store.vid_to_pid[int(v)]))
+        if key is None:
+            stragglers.append(i)
+        else:
+            by_group.setdefault(key, []).append(i)
+    # density telemetry rides the per-group plans the gathers need anyway;
+    # only straggler vids pay a separate local-rlist measurement
+    dens = np.ones(len(vids), np.float64) if stats else None
+    tiles = np.zeros(len(vids), np.int64) if stats else None
+    report = GroupWaveReport(groups_touched=len(by_group))
+    pins0, ev0 = mgr.pins, mgr.evictions
+    protected = set(by_group)
+    out: list[Optional[np.ndarray]] = [None] * len(vids)
+    for key, idxs in by_group.items():
+        sb = mgr.pin(key, protected=protected) if use_kernel \
+            else mgr.peek(key)
+        if sb is None:
+            stragglers.extend(idxs)
+            continue
+        gvids = [vids[i] for i in idxs]
+        mats, launched, dt = _gather_off_superblock(
+            store, gvids, sb, use_kernel=use_kernel,
+            density_threshold=density_threshold,
+            want_density=stats is not None)
+        if launched:
+            report.launches += 1
+            mgr.launches += 1
+        for i, m in zip(idxs, mats):
+            out[i] = m
+        if dt is not None:
+            d_g, t_g = dt
+            for j, i in enumerate(idxs):
+                dens[i], tiles[i] = d_g[j], t_g[j]
+    if stragglers:
+        stragglers.sort()
+        svids = [vids[i] for i in stragglers]
+        mats = checkout_partitioned_perpart(store, svids,
+                                            use_kernel=use_kernel)
+        for i, m in zip(stragglers, mats):
+            out[i] = m
+        if stats:
+            d_s, t_s = _local_wave_density(store, svids, density_threshold)
+            for j, i in enumerate(stragglers):
+                dens[i], tiles[i] = d_s[j], t_s[j]
+    if stats:
+        stats.record(vids, dens, tiles)
+    report.pinned = mgr.pins - pins0
+    report.evictions = mgr.evictions - ev0
+    report.straggler_vids = len(stragglers)
+    mgr.waves += 1
+    mgr.groups_touched += report.groups_touched
+    mgr.straggler_requests += len(stragglers)
+    mgr.last_wave = report
+    return out  # type: ignore[return-value]
 
 
 # ---------------------------------------------------- superblock migration --
@@ -642,14 +1255,19 @@ class MigrationStats:
 
 def migrate_superblock(store, old_sb: Superblock, plan, *,
                        use_kernel: Optional[bool] = None,
-                       install: bool = True
+                       install: bool = True,
+                       pids: Optional[Sequence[int]] = None
                        ) -> tuple[Superblock, MigrationStats]:
     """Incremental superblock migration: reuse the OLD device buffer.
 
     Called AFTER ``store.apply_migration(plan)`` with the PRE-migration
     superblock (grab it with ``take_superblock`` before applying).  Builds
     the post-migration superblock without the naive rebuild's full
-    host→device re-upload:
+    host→device re-upload.  ``pids`` migrates a partition GROUP instead of
+    the whole store: the new superblock covers exactly those (new)
+    partitions, and rows whose source partition lies outside the old group
+    superblock ride the delta (``install`` is ignored for groups — the
+    group manager owns their pinning via ``SuperblockGroups.install``):
 
       * every BN-row tile of the new superblock whose rows sit consecutively
         inside one aligned segment of the OLD superblock is copied
@@ -677,7 +1295,9 @@ def migrate_superblock(store, old_sb: Superblock, plan, *,
     t0 = time.perf_counter()
     if use_kernel is None:
         use_kernel = old_sb._device is not None
-    parts = store.partitions
+    parts = _select_parts(store, pids)
+    plan_idx = list(range(len(parts))) if pids is None \
+        else [int(q) for q in pids]
     bn, row_offsets, bounds, d, bd, d_pad, total, dtype = _superblock_layout(
         parts, old_sb.block_n, old_sb.bd)
     if d != old_sb.d or bd != old_sb.bd or bn != old_sb.block_n:
@@ -691,19 +1311,32 @@ def migrate_superblock(store, old_sb: Superblock, plan, *,
     host = np.zeros((total, d_pad), dtype=dtype)
     delta_rows: list[np.ndarray] = []
     n_old_bounds = len(old_sb.bounds)
+    # old pid -> old superblock segment slot (identity for a whole-store
+    # superblock; source pids OUTSIDE a group superblock become inserts)
+    if old_sb.pids is None:
+        old_slot_map = np.arange(n_old_bounds, dtype=np.int64)
+    else:
+        old_pids = np.asarray(old_sb.pids, np.int64)
+        old_slot_map = np.full(int(old_pids.max()) + 1 if len(old_pids)
+                               else 0, -1, np.int64)
+        old_slot_map[old_pids] = np.arange(len(old_pids))
 
-    for i, (p, off) in enumerate(zip(parts, row_offsets)):
+    for g, (p, off) in enumerate(zip(parts, row_offsets)):
+        i = plan_idx[g]
         r = p.block.shape[0]
-        t = int((bounds[i] - off) // bn)
+        t = int((bounds[g] - off) // bn)
         if t == 0:
             continue
         # per-row source position in the OLD superblock (-1 = not there)
         src = np.full(t * bn, -1, np.int64)
         spid = np.asarray(plan.src_pid_rows[i])
         sloc = np.asarray(plan.src_loc_rows[i])
-        hit = spid >= 0
+        sslot = np.full(len(spid), -1, np.int64)
+        in_map = (spid >= 0) & (spid < len(old_slot_map))
+        sslot[in_map] = old_slot_map[spid[in_map]]
+        hit = sslot >= 0
         if hit.any():
-            src[:r][hit] = old_sb.row_offsets[spid[hit]] + sloc[hit]
+            src[:r][hit] = old_sb.row_offsets[sslot[hit]] + sloc[hit]
         # tail-pad continuation: the padding rows of the last tile carry no
         # data, so extend the final run — the tile qualifies for a run copy
         # whose trailing reads land in the sliced-off region
@@ -752,7 +1385,9 @@ def migrate_superblock(store, old_sb: Superblock, plan, *,
 
     new_sb = Superblock(host=host, row_offsets=row_offsets, bounds=bounds,
                         d=d, bd=bd, block_n=bn,
-                        epoch=int(getattr(store, "epoch", 0)))
+                        epoch=int(getattr(store, "epoch", 0)),
+                        pids=None if pids is None
+                        else np.asarray(plan_idx, np.int64))
     used_device = bool(use_kernel) and old_sb._device is not None
     if used_device:
         import jax.numpy as jnp
@@ -767,7 +1402,7 @@ def migrate_superblock(store, old_sb: Superblock, plan, *,
                                         sel, starts, block_n=bn, block_d=bd)
         new_sb.uploads = 1 if bytes_uploaded else 0
 
-    if install:
+    if install and pids is None:
         key = getattr(old_sb, "cache_key", None) or (None, None)
         new_sb.cache_key = key
         cache = getattr(store, "_superblock_cache", None)

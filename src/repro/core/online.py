@@ -186,6 +186,114 @@ class OnlinePartitioner:
         self.part_versions = [len(s) for s in new_sets]
 
 
+# -- hot-set extraction --------------------------------------------------------
+
+class HotSetPolicy:
+    """Hot-partition ranking for the partition-group superblock former
+    (``core.checkout.SuperblockGroups``).
+
+    Two O(P) signals, blended lexicographically:
+
+      * a per-partition WAVE-TOUCH EWMA — ``core.checkout.checkout_wave``
+        reports every wave's touched partitions via ``touch``; partitions
+        absent from a wave decay, so the ranking tracks the served hot set
+        rather than all-time popularity;
+      * the per-vid run-density EWMA ``DensityStats.per_vid`` (recorded
+        since the telemetry PR but unused until now), aggregated to each
+        vid's partition — between two equally-touched partitions the
+        DENSER one ranks hotter: its tiles fuse into run DMAs, so pinning
+        it buys more than pinning a row-DMA-bound one.
+
+    Partition indices change meaning across a migration: ``remap`` carries
+    the heat through ``MigrationPlan.matched_old`` (a new partition
+    inherits the old partition it morphed from; from-scratch partitions
+    start cold), and ``reset`` drops everything (naive ``repartition``).
+
+    Decay is LAZY: ``touch`` only writes the wave's touched partitions
+    (O(K), not O(tracked set) — it runs on every serve wave) and stores
+    (ewma-at-last-touch, wave-seen); readers apply the pending
+    ``(1-alpha)^(waves - seen)`` decay on the fly, and ``rank`` prunes
+    fully-cooled entries so the dict stays bounded by the live hot set."""
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = alpha
+        # pid -> (EWMA value at last touch, wave it was touched)
+        self.touch_ewma: dict[int, tuple[float, int]] = {}
+        self.waves = 0
+
+    def weight(self, pid: int) -> float:
+        """The partition's touch EWMA as of the current wave."""
+        v = self.touch_ewma.get(int(pid))
+        if v is None:
+            return 0.0
+        val, seen = v
+        return val * (1.0 - self.alpha) ** (self.waves - seen)
+
+    def touch(self, pids) -> None:
+        """Record one wave's touched partitions (duplicates collapse).
+        O(touched), the untouched entries decay lazily on read."""
+        self.waves += 1
+        a = self.alpha
+        for p in {int(q) for q in pids}:
+            self.touch_ewma[p] = (self.weight(p) + a, self.waves)
+
+    def partition_density(self, store) -> dict[int, float]:
+        """Mean per-vid density EWMA per partition (empty when the store
+        has no ``DensityStats`` or it was reset by a migration)."""
+        from .checkout import get_density_stats
+        stats = get_density_stats(store)
+        if stats is None or not stats.per_vid:
+            return {}
+        n = len(store.vid_to_pid)
+        acc: dict[int, list[float]] = {}
+        for v, d in stats.per_vid.items():
+            if 0 <= int(v) < n:
+                pid = int(store.vid_to_pid[int(v)])
+                if pid >= 0:
+                    acc.setdefault(pid, []).append(float(d))
+        return {p: sum(ds) / len(ds) for p, ds in acc.items()}
+
+    def rank(self, store, n_partitions: int) -> np.ndarray:
+        """Partitions sorted hot -> cold: touch EWMA first, density EWMA
+        as the tiebreak, partition index last (deterministic).  Fully
+        cooled entries are pruned here (rank runs at group-forming time,
+        not per wave) so the tracked set stays bounded."""
+        for p in list(self.touch_ewma):
+            if self.weight(p) < 1e-9:
+                del self.touch_ewma[p]
+        t = np.array([self.weight(p) for p in range(n_partitions)],
+                     np.float64)
+        dens = self.partition_density(store)
+        d = np.array([dens.get(p, 0.0)
+                      for p in range(n_partitions)], np.float64)
+        return np.lexsort((np.arange(n_partitions), -d, -t))
+
+    def remap(self, matched_old) -> None:
+        new: dict[int, tuple[float, int]] = {}
+        for i, j in enumerate(np.asarray(matched_old)):
+            w = self.weight(int(j)) if int(j) >= 0 else 0.0
+            if w > 1e-9:
+                new[int(i)] = (w, self.waves)
+        self.touch_ewma = new
+
+    def reset(self) -> None:
+        self.touch_ewma.clear()
+
+
+def get_hot_set_policy(store, *, create: bool = False
+                       ) -> Optional[HotSetPolicy]:
+    """The store's HotSetPolicy (attached like ``DensityStats``; None when
+    absent and ``create`` is False or the store forbids attributes)."""
+    pol = getattr(store, "_hot_set_policy", None)
+    if pol is None and create:
+        pol = HotSetPolicy()
+        try:
+            store._hot_set_policy = pol
+        except AttributeError:
+            return None
+    return pol
+
+
 # -- density-triggered online repartitioning ----------------------------------
 
 @dataclasses.dataclass
@@ -218,6 +326,15 @@ class RepartitionTrigger:
     -> ``migrate_superblock`` (reuse the old device buffer, upload only
     the delta).  Firing resets the stats, so re-triggering needs a fresh
     ``min_waves`` streak under the NEW layout.
+
+    Interplay with the partition-group layer: ``apply_migration`` itself
+    detaches pinned GROUP superblocks first and migrates-or-evicts them
+    per group (``core.checkout.migrate_groups``), and any attached
+    ``HotSetPolicy`` heat is remapped through ``plan.matched_old`` — so a
+    fired trigger keeps an over-budget store's partial fusion warm instead
+    of cold-starting every group.  The per-vid density EWMA is cleared by
+    ``stats.reset()`` (it described the OLD layout); the hot ranking falls
+    back to the remapped touch counters until new waves repopulate it.
     """
 
     def __init__(self, store, tree: WeightedTree, *,

@@ -81,14 +81,20 @@ class PartitionedCVD:
 
     def repartition(self, assignment: np.ndarray) -> None:
         """Rebuild under a new assignment from scratch (naive migration);
-        bumps the epoch and EAGERLY evicts cached superblocks so the stale
-        pinned device copy is released immediately.  The incremental path
-        is ``apply_migration`` + ``core.checkout.migrate_superblock``."""
+        bumps the epoch and EAGERLY evicts cached superblocks — pinned
+        partition-GROUP superblocks included — so stale device copies are
+        released immediately.  Any attached hot-set ranking is dropped too
+        (partition indices changed meaning with no morph map to carry the
+        heat through).  The incremental path is ``apply_migration`` +
+        ``core.checkout.migrate_superblock``."""
         from .checkout import evict_superblocks
         self.assignment = np.asarray(assignment, dtype=np.int64)
         self.vid_to_pid = np.full(self.graph.n_versions, -1, np.int64)
         self._build()
         evict_superblocks(self)
+        pol = getattr(self, "_hot_set_policy", None)
+        if pol is not None:
+            pol.reset()
 
     def apply_migration(self, plan: "MigrationPlan") -> None:
         """Adopt a ``plan_migration`` plan IN PLACE: morph the partition set
@@ -97,14 +103,21 @@ class PartitionedCVD:
         Rows the plan sourced from an existing partition are block-copied
         out of the OLD partition blocks (the morph half of the paper's
         intelligent migration); only genuinely new rows gather from the
-        base data.  Bumps the epoch and eagerly evicts cached superblocks —
-        grab the old one with ``core.checkout.take_superblock`` FIRST if
-        you intend to migrate it incrementally."""
-        from .checkout import evict_superblocks
+        base data.  Bumps the epoch and eagerly evicts cached WHOLE-STORE
+        superblocks — grab the old one with ``core.checkout.take_superblock``
+        FIRST if you intend to migrate it incrementally.  Pinned
+        partition-GROUP superblocks are NOT nuked: they are detached before
+        the morph and migrated-or-evicted PER GROUP afterwards
+        (``core.checkout.migrate_groups`` — device tiles reused, delta-only
+        upload), and any attached hot-set ranking is remapped through
+        ``plan.matched_old``."""
+        from .checkout import (evict_superblocks, migrate_groups,
+                               take_group_superblocks)
         if len(plan.assignment) != self.graph.n_versions:
             raise ValueError(
                 f"plan covers {len(plan.assignment)} versions, store has "
                 f"{self.graph.n_versions}")
+        taken_groups = take_group_superblocks(self)
         old_parts = self.partitions
         data = self.data
         new_parts: list[Partition] = []
@@ -138,6 +151,11 @@ class PartitionedCVD:
         self.vid_to_pid = vid_to_pid
         self.epoch += 1
         evict_superblocks(self)
+        pol = getattr(self, "_hot_set_policy", None)
+        if pol is not None:
+            pol.remap(plan.matched_old)
+        if taken_groups:
+            migrate_groups(self, plan, taken_groups)
 
     # -- paper cost model ----------------------------------------------------
     def storage_cost(self) -> int:

@@ -133,6 +133,12 @@ def checkout_batched(data, rlists, *, block_n: int = _cg.DEFAULT_BN,
         return [empty for _ in rls], plan
     bd = min(block_d, max(128, d))
     padded = _pad_axis(data, bd, axis=1)
+    if padded.shape[0] < block_n:
+        # a block shorter than one row tile cannot even TRACE the kernel
+        # (the run-DMA dynamic_slice is statically (block_n, bd)); pad rows
+        # up to the tile — runs only fire on consecutive REAL rids, so the
+        # pad rows are never addressed
+        padded = _pad_axis(padded, block_n, axis=0)
     packed = _cb.checkout_batched(
         padded, jnp.asarray(plan.starts), jnp.asarray(plan.mode),
         block_n=block_n, block_d=bd,

@@ -22,7 +22,11 @@ Request flow (the serve half of the checkout data-flow map in
 
 Under heavy multi-user traffic this turns N concurrent checkouts into ONE
 kernel launch per wave instead of N — the serving analogue of LyreSplit's
-checkout-latency headline, applied to batches.
+checkout-latency headline, applied to batches.  A store whose whole
+superblock exceeds ``superblock_max_bytes`` serves through the
+partition-group layer instead (one fused launch per touched pinned group;
+``CheckoutStats`` carries groups touched, fused launches and LRU
+evictions per flush — see ``core.checkout.SuperblockGroups``).
 
 Pass a ``core.online.RepartitionTrigger`` as ``trigger`` and the server
 closes the paper's online-maintenance loop: every flushed wave records run
@@ -42,7 +46,8 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from ..core.checkout import (_default_use_kernel, _validate_vids,
-                             checkout_partitioned, get_superblock)
+                             checkout_partitioned, get_superblock,
+                             get_superblock_groups)
 
 LATENCY_WINDOW = 65536     # per-ticket latencies kept for the percentiles
 RETAIN_RESULTS = 256       # unclaimed ticket results kept before eviction
@@ -55,6 +60,13 @@ class CheckoutStats:
     unique_versions: int = 0
     rows_served: int = 0
     repartitions: int = 0      # density-triggered online repartitions fired
+    # partition-group layer (waves an over-budget store served through
+    # pinned group superblocks — see core.checkout.SuperblockGroups)
+    group_waves: int = 0           # flushes routed through the group layer
+    groups_touched: int = 0        # Σ distinct groups touched per group wave
+    group_launches: int = 0        # fused kernel launches those waves paid
+    group_evictions: int = 0       # LRU evictions the budget forced
+    straggler_requests: int = 0    # vids that fell through to perpart
     # sliding window (deque, maxlen) — unbounded growth would leak on a
     # long-running server; `requests` keeps the all-time count
     ticket_latency_s: collections.deque = dataclasses.field(
@@ -154,6 +166,9 @@ class BatchedCheckoutServer:
         vids = [v for _, v, _ in wave]
         uniq = sorted(set(vids))
         slot = {v: i for i, v in enumerate(uniq)}
+        mgr = get_superblock_groups(self.store)
+        g0 = (mgr.waves, mgr.groups_touched, mgr.launches, mgr.evictions,
+              mgr.straggler_requests) if mgr is not None else (0, 0, 0, 0, 0)
         try:
             mats = checkout_partitioned(self.store, uniq,
                                         use_kernel=self.use_kernel,
@@ -185,6 +200,17 @@ class BatchedCheckoutServer:
         # the new layout and a freshly migrated superblock)
         if self.trigger is not None and self.trigger.observe() is not None:
             self.stats.repartitions += 1
+        # group-layer accounting AFTER the trigger: the manager may have
+        # been created during this flush (first over-budget wave), and a
+        # fired trigger's migrate_groups evictions/pins belong to this
+        # flush's delta, not nobody's
+        mgr = get_superblock_groups(self.store)
+        if mgr is not None:
+            self.stats.group_waves += mgr.waves - g0[0]
+            self.stats.groups_touched += mgr.groups_touched - g0[1]
+            self.stats.group_launches += mgr.launches - g0[2]
+            self.stats.group_evictions += mgr.evictions - g0[3]
+            self.stats.straggler_requests += mgr.straggler_requests - g0[4]
         return out
 
     def result(self, ticket: int) -> np.ndarray:
@@ -205,15 +231,24 @@ class BatchedCheckoutServer:
         builds one implicitly — see ``core.checkout.peek_superblock``) and,
         for kernel-path servers only, uploads + pins the device copy so the
         first request doesn't pay the host→device transfer.  A store whose
-        ``superblock_max_bytes`` budget refuses the copy warms nothing —
-        waves will route through the per-partition engine."""
-        sb, _ = get_superblock(
-            self.store,
-            max_bytes=getattr(self.store, "superblock_max_bytes", None))
-        if sb is not None and (self.use_kernel
-                               or (self.use_kernel is None
-                                   and _default_use_kernel())):
-            sb.device()
+        ``superblock_max_bytes`` budget refuses the whole-store copy warms
+        the PARTITION-GROUP layer instead: groups pin hot-first until the
+        budget is full, so the first waves hit pre-pinned group
+        superblocks rather than paying cold builds."""
+        budget = getattr(self.store, "superblock_max_bytes", None)
+        kernel_tier = bool(self.use_kernel
+                           or (self.use_kernel is None
+                               and _default_use_kernel()))
+        sb, _ = get_superblock(self.store, max_bytes=budget)
+        if sb is not None:
+            if kernel_tier:
+                sb.device()
+            return
+        if budget is not None:
+            mgr = get_superblock_groups(self.store, budget=budget,
+                                        create=True)
+            if mgr is not None:
+                mgr.warm(device=kernel_tier)
 
     def serve(self, vids: Sequence[int]) -> list[np.ndarray]:
         """submit+flush in one call — results in request order, correct even

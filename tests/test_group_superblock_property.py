@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) for the partition-group superblock
+layer: for RANDOM stores × budgets (including 0, exact-fit and unlimited) ×
+duplicate/unsorted vid waves, grouped-wave checkout must be bit-identical
+to the ``checkout_partitioned_perpart`` oracle on both tiers, and the
+reported fused-launch count must equal the number of touched pinned groups.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.checkout import (checkout_partitioned_perpart, checkout_wave,
+                                 estimate_superblock_bytes,
+                                 get_superblock_groups)
+from repro.core.graph import BipartiteGraph
+from repro.core.partition import PartitionedCVD
+
+R = 192   # rid universe (small: the kernel runs in interpret mode off-TPU)
+D = 5
+
+
+@st.composite
+def stores_and_waves(draw):
+    """A random partitioned store, a budget across the whole spectrum, and
+    a wave with duplicates/unsorted vids."""
+    n_versions = draw(st.integers(min_value=1, max_value=10))
+    p = draw(st.integers(min_value=1, max_value=5))
+    seed = draw(st.integers(min_value=0, max_value=2 ** 16))
+    rng = np.random.default_rng(seed)
+    rls = []
+    for v in range(n_versions):
+        kind = draw(st.sampled_from(["empty", "run", "scatter"]))
+        if kind == "empty":
+            rls.append(np.zeros(0, np.int64))
+        elif kind == "run":
+            n = draw(st.integers(min_value=1, max_value=48))
+            s = draw(st.integers(min_value=0, max_value=R - n))
+            rls.append(np.arange(s, s + n, dtype=np.int64))
+        else:
+            n = draw(st.integers(min_value=1, max_value=32))
+            rls.append(np.sort(rng.choice(R, n, replace=False))
+                       .astype(np.int64))
+    graph = BipartiteGraph.from_rlists(rls, n_records=R)
+    data = rng.integers(0, 1 << 20, (R, D)).astype(np.int32)
+    assignment = np.asarray(
+        [draw(st.integers(min_value=0, max_value=p - 1))
+         for _ in range(n_versions)], np.int64)
+    store = PartitionedCVD(graph, data, assignment)
+    need = estimate_superblock_bytes(store)
+    budget = draw(st.sampled_from(
+        ["zero", "tiny", "third", "half", "exact", "unlimited"]))
+    store.superblock_max_bytes = {
+        "zero": 0, "tiny": max(need // 16, 1), "third": need // 3,
+        "half": need // 2, "exact": need, "unlimited": None}[budget]
+    k = draw(st.integers(min_value=1, max_value=8))
+    vids = [draw(st.integers(min_value=0, max_value=n_versions - 1))
+            for _ in range(k)]          # duplicates and unsorted: as drawn
+    return store, vids
+
+
+@settings(max_examples=25, deadline=None)
+@given(stores_and_waves())
+def test_grouped_wave_bit_identical_to_perpart_oracle(case):
+    store, vids = case
+    oracle = checkout_partitioned_perpart(store, vids, use_kernel=False)
+    for use_kernel in (True, False, True, False):   # cold, then pinned replay
+        got = checkout_wave(store, vids, use_kernel=use_kernel)
+        assert len(got) == len(oracle)
+        for g, b in zip(got, oracle):
+            np.testing.assert_array_equal(np.asarray(g), b)
+            assert np.asarray(g).dtype == b.dtype
+
+
+@settings(max_examples=25, deadline=None)
+@given(stores_and_waves())
+def test_launch_count_equals_touched_pinned_groups(case):
+    store, vids = case
+    checkout_wave(store, vids, use_kernel=True)     # cold pass pins groups
+    got = checkout_wave(store, vids, use_kernel=True)
+    mgr = get_superblock_groups(store)
+    if mgr is None:                 # within budget: whole-store fast path
+        assert store.superblock_max_bytes is None \
+            or estimate_superblock_bytes(store) <= store.superblock_max_bytes
+        return
+    rep = mgr.last_wave
+    # touched pinned groups that actually had rows to gather == launches
+    expect = 0
+    for key in {mgr.pid_to_group.get(int(store.vid_to_pid[int(v)]))
+                for v in vids}:
+        if key is None or key not in mgr.groups:
+            continue
+        rows = sum(
+            len(store.partitions[int(store.vid_to_pid[int(v)])
+                                 ].local_rlist(int(v)))
+            for v in vids
+            if mgr.pid_to_group.get(int(store.vid_to_pid[int(v)])) == key)
+        if rows:
+            expect += 1
+    assert rep.launches == expect
+    assert rep.groups_touched >= rep.launches
+    assert mgr.pinned_bytes <= mgr.budget
+    assert mgr.pins - mgr.evictions == len(mgr.groups)
+    oracle = checkout_partitioned_perpart(store, vids, use_kernel=False)
+    for g, b in zip(got, oracle):
+        np.testing.assert_array_equal(np.asarray(g), b)
