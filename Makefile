@@ -5,7 +5,7 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test test-cov bench bench-multipart bench-smoke bench-migration \
-	bench-group bench-all lint
+	bench-group bench-serve bench-all lint
 
 # Line-coverage floor for src/repro/core (the CI gate behind `make test-cov`).
 # Baseline'd under the current suite; ratchet UP as coverage grows, never down.
@@ -38,12 +38,16 @@ bench-smoke:    ## tiny-shape kernel-path canary (CI): wave engine + online migr
 	BENCH_SMOKE=1 $(PY) -m benchmarks.multipart_checkout
 	BENCH_SMOKE=1 $(PY) -m benchmarks.online_migration
 	BENCH_SMOKE=1 $(PY) -m benchmarks.group_superblock
+	BENCH_SMOKE=1 $(PY) -m benchmarks.pipelined_serve
 
 bench-migration: ## incremental vs rebuild migration (BENCH_online_migration.json)
 	$(PY) -m benchmarks.online_migration
 
 bench-group:    ## budget-aware partial fusion vs perpart fallback (BENCH_group_superblock.json)
 	$(PY) -m benchmarks.group_superblock
+
+bench-serve:    ## pipelined vs synchronous serve stream (BENCH_pipelined_serve.json)
+	$(PY) -m benchmarks.pipelined_serve
 
 bench-all:      ## every paper-figure benchmark
 	$(PY) -m benchmarks.run

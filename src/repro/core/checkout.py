@@ -24,6 +24,15 @@ Data-flow map (kernels -> core -> query/serve)::
       │                  otherwise (numpy pays no launch cost, so host-only
       │                  processes skip the superblock copy entirely)
       └─ reassemble per-version blocks in request order
+           ``device_out=True`` DEFERS this last hop: the wave comes back as
+           a ``WaveResult`` handle holding the device-resident packed
+           gather plus its split plan (host/perpart tiers: pre-materialized
+           blocks behind the same handle) — ``materialize()`` performs the
+           device→host transfer and the per-version split later, so the
+           serve layer can DISPATCH wave N+1 (plan + launch) while wave N
+           is still in flight and run N's host split under N+1's kernel
+           (``serve.checkout.BatchedCheckoutServer``'s dispatch/deliver
+           pipeline)
 
 ``checkout_partitioned`` routes through this wave engine by default; the
 previous one-gather-PER-PARTITION path survives as
@@ -94,9 +103,11 @@ layer, and its wave path is unchanged.
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 import functools
 import logging
+import os
 import time
 from typing import Optional, Sequence
 
@@ -274,6 +285,147 @@ def _plan_mode_density(plan) -> tuple[np.ndarray, np.ndarray]:
     return dens, tiles
 
 
+# ------------------------------------------------------------- wave results --
+
+_wave_executor: Optional[concurrent.futures.ThreadPoolExecutor] = None
+
+DEFER_MIN_TILES = 128   # worker-thread launches only for waves at least this
+                        # big: two GIL-contended thread handoffs cost more
+                        # than a tiny kernel hides
+WAVE_WORKER_ENV = "REPRO_WAVE_WORKER"   # "1" opts inline-dispatch backends
+                                        # into worker-thread launches
+
+
+def _defer_via_worker(n_tiles: int) -> bool:
+    """Should a deferred (device_out) launch ride the worker thread?
+
+    On TPU never: the jitted call already returns with the kernel in
+    flight (JAX async dispatch) — a worker adds nothing but handoff
+    latency.  On inline-dispatch backends (interpret-mode CPU) the worker
+    emulates the in-flight kernel, but the emulation only pays on hosts
+    with CPU to spare — python/XLA contention on small machines costs more
+    than the overlap buys — so it is OPT-IN via ``REPRO_WAVE_WORKER=1``
+    and gated to waves big enough to outweigh the handoffs.  The default
+    inline path still defers the device→host transfer and per-ticket
+    split (the pipeline's deliver stage); only the kernel itself runs at
+    dispatch."""
+    from ..kernels.ops import _on_tpu
+    if _on_tpu():
+        return False
+    if os.environ.get(WAVE_WORKER_ENV, "") != "1":
+        return False
+    return n_tiles >= DEFER_MIN_TILES
+
+
+def _wave_launcher() -> concurrent.futures.ThreadPoolExecutor:
+    """The single-worker executor deferred (``device_out``) kernel gathers
+    launch on.
+
+    On a real accelerator JAX async dispatch already returns before the
+    kernel finishes, but interpret-mode backends (the CPU emulation) execute
+    the pallas_call INLINE at dispatch — launching through the worker gives
+    device_out waves the same in-flight semantics everywhere (XLA execution
+    releases the GIL, so the caller keeps planning/splitting under the
+    running kernel).  ONE worker by design: launches retire in submission
+    order, like a device stream, and concurrent waves cannot race the
+    backend.  Only the functionally pure jitted call runs here — all store
+    mutation (planning, telemetry, superblock pins) stays on the caller's
+    thread."""
+    global _wave_executor
+    if _wave_executor is None:
+        _wave_executor = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="checkout-wave")
+    return _wave_executor
+
+
+@dataclasses.dataclass
+class _WavePart:
+    """One contiguous gather of a wave: either a still-device-resident
+    packed block plus its per-vid split plan, or pre-materialized host
+    blocks (host tier, per-partition stragglers).  ``idxs`` are the wave
+    positions the part's blocks land in."""
+    idxs: Sequence[int]
+    mats: Optional[list] = None         # pre-materialized per-idx blocks
+    packed: object = None               # device-resident packed gather (a
+                                        # jax array, or a Future of one when
+                                        # the launch rode _wave_launcher)
+    segments: Optional[list] = None     # per-idx row slices of ``packed``
+    d: int = 0                          # valid feature width of ``packed``
+
+    def split(self) -> list:
+        """Force this part to host blocks: join the in-flight launch, ONE
+        device→host transfer of the packed gather, then per-vid zero-copy
+        views."""
+        if self.mats is None:
+            packed = self.packed
+            if isinstance(packed, concurrent.futures.Future):
+                packed = packed.result()
+            arr = np.asarray(packed)[:, :self.d]
+            self.mats = [arr[seg] for seg in self.segments]
+            self.packed = None          # release the device handle
+            self.segments = None
+        return self.mats
+
+
+@dataclasses.dataclass
+class WaveResult:
+    """Handle to one wave's per-vid results, possibly still in flight.
+
+    The kernel tier's ``checkout_wave(..., device_out=True)`` returns the
+    launched pallas_call's output WITHOUT blocking (JAX async dispatch keeps
+    the kernel in flight); ``materialize()`` later performs the device→host
+    transfer and the per-vid split — the deliver half of the serve
+    pipeline.  Host/perpart tiers return pre-materialized blocks through
+    the same handle (``ready()`` is immediately True), so callers drive
+    every tier identically.  ``materialize()`` is idempotent and caches its
+    result; it is bit-identical to the eager (``device_out=False``) path,
+    which is literally this handle materialized at once."""
+    n: int                              # wave length (vids requested)
+    parts: list                         # _WavePart covering positions 0..n-1
+    _mats: Optional[list] = dataclasses.field(default=None, repr=False)
+
+    @classmethod
+    def from_mats(cls, mats: Sequence) -> "WaveResult":
+        wr = cls(n=len(mats), parts=[])
+        wr._mats = list(mats)
+        return wr
+
+    @property
+    def delivered(self) -> bool:
+        return self._mats is not None
+
+    def ready(self) -> bool:
+        """True when ``materialize()`` would not block on the device — the
+        in-flight kernel(s) have finished (host-resident parts are always
+        ready; a backend without ``is_ready`` conservatively reports
+        True)."""
+        if self._mats is not None:
+            return True
+        for p in self.parts:
+            if p.mats is not None or p.packed is None:
+                continue
+            obj = p.packed
+            if isinstance(obj, concurrent.futures.Future):
+                if not obj.done():
+                    return False
+                if obj.exception() is not None:
+                    continue        # ready to FAIL: materialize() raises it
+                obj = obj.result()
+            is_ready = getattr(obj, "is_ready", None)
+            if is_ready is not None and not is_ready():
+                return False
+        return True
+
+    def materialize(self) -> list:
+        """Per-vid blocks in request order (device→host + split on first
+        call, cached after)."""
+        if self._mats is None:
+            out: list = [None] * self.n
+            for p in self.parts:
+                for i, m in zip(p.idxs, p.split()):
+                    out[i] = m
+            self._mats = out
+        return self._mats
 
 
 # --------------------------------------------------------------- superblock --
@@ -306,6 +458,11 @@ class Superblock:
     cache_key: object = None  # the get_superblock args this is cached under
     pids: Optional[np.ndarray] = None   # group members (None = all partitions)
     _slot_of: Optional[dict] = dataclasses.field(default=None, repr=False)
+    # wave-plan memo (see plan_wave_cached): keyed by the requested vid
+    # tuple; safe because a superblock is immutable and epoch-bound — the
+    # cache dies with it on eviction/migration
+    _plan_cache: Optional["collections.OrderedDict"] = \
+        dataclasses.field(default=None, repr=False)
 
     @property
     def n_rows(self) -> int:
@@ -975,30 +1132,79 @@ def plan_wave(store, vids: Sequence[int], sb: Superblock, *,
     rebased, slots = _rebase_wave(store, vids, sb)
     plan = plan_batched(rebased, block_n=bn,
                         density_threshold=density_threshold)
-    hi = np.zeros(plan.n_tiles, np.int32)
+    # vectorized like plan_batched itself (this runs on the serve host
+    # thread under the previous wave's in-flight kernel): per-tile bounds
+    # by one repeat, tail promotion read off the flat padded plan
+    t_per = np.diff(plan.tile_offsets)
+    hi = np.repeat(np.asarray(sb.bounds)[np.asarray(slots, np.int64)],
+                   t_per).astype(np.int32)
     mode = plan.mode.copy()
-    for k, (rl, s) in enumerate(zip(rebased, slots)):
-        t0, t1 = int(plan.tile_offsets[k]), int(plan.tile_offsets[k + 1])
-        if t1 == t0:
-            continue
-        hi[t0:t1] = int(sb.bounds[s])
-        # tail promotion: valid rids of the last chunk are consecutive
-        tail = rl[(t1 - t0 - 1) * bn:]
-        if len(tail) < bn and (len(tail) <= 1
-                               or np.all(np.diff(tail) == 1)):
-            mode[t1 - 1] = 1
+    if bn > 1 and plan.n_tiles:
+        nz = np.flatnonzero(t_per)
+        # tail promotion: a ragged final chunk whose VALID rids are
+        # consecutive goes out as one run DMA (padding repeats the last
+        # rid, so only the first tail_len-1 plan diffs must equal 1)
+        last_idx = (plan.tile_offsets[1:] - 1)[nz]
+        tail_len = plan.n_rows[nz] - (t_per[nz] - 1) * bn
+        cand = tail_len < bn
+        if cand.any():
+            chunks = plan.starts.reshape(-1, bn)[last_idx[cand]] \
+                .astype(np.int64)
+            consec = np.cumprod(np.diff(chunks, axis=1) == 1, axis=1)
+            tl = tail_len[cand]
+            ok = (tl <= 1) | consec[np.arange(len(tl)),
+                                    np.maximum(tl - 2, 0)].astype(bool)
+            mode[last_idx[cand][ok]] = 1
     plan = dataclasses.replace(plan, mode=mode)
     return WavePlan(plan=plan, hi=hi, rebased=rebased)
 
 
+PLAN_CACHE_MAX = 64     # memoized wave plans kept per superblock (LRU)
+
+
+def plan_wave_cached(store, vids: Sequence[int], sb: Superblock, *,
+                     density_threshold: float = 0.05) -> WavePlan:
+    """``plan_wave`` memoized on the superblock, keyed by the requested vid
+    tuple.
+
+    Steady serve traffic repeats hot wave shapes; replanning an identical
+    wave is pure host overhead — and on the pipelined serve path it runs
+    UNDER the previous wave's in-flight kernel, where it costs twice.  The
+    memo is correct by construction: a plan is a deterministic function of
+    (layout, vids, tiling), the layout only changes with the epoch, and the
+    epoch-bound superblock carrying the cache is evicted on every epoch
+    bump.  LRU-bounded at ``PLAN_CACHE_MAX`` entries."""
+    key = (tuple(int(v) for v in vids), density_threshold)
+    cache = sb._plan_cache
+    if cache is None:
+        cache = sb._plan_cache = collections.OrderedDict()
+    wp = cache.get(key)
+    if wp is not None:
+        cache.move_to_end(key)
+        return wp
+    wp = plan_wave(store, vids, sb, density_threshold=density_threshold)
+    cache[key] = wp
+    while len(cache) > PLAN_CACHE_MAX:
+        cache.popitem(last=False)
+    return wp
+
+
 def _validate_vids(store, vids: Sequence[int]) -> list[int]:
-    vids = [int(v) for v in vids]
+    if not isinstance(vids, (np.ndarray, list, tuple)):
+        vids = list(vids)           # generators/iterators were always valid
+    arr = np.asarray(vids, dtype=np.int64)
+    if arr.ndim != 1:
+        # the pre-vectorization int(v)-per-element loop raised on nested
+        # input; silently flattening would serve a malformed request
+        raise TypeError(
+            f"vids must be a flat sequence of ints, got shape {arr.shape}")
     n_versions = len(store.vid_to_pid)
-    bad = [v for v in vids if not 0 <= v < n_versions]
-    if bad:
+    oob = (arr < 0) | (arr >= n_versions)
+    if oob.any():
+        bad = [int(v) for v in arr[oob]]
         raise ValueError(f"unknown version id(s) {bad}: store has "
                          f"{n_versions} versions (0..{n_versions - 1})")
-    return vids
+    return arr.tolist()
 
 
 def _perpart_fallback(store, vids: Sequence[int],
@@ -1031,7 +1237,8 @@ def checkout_wave(store, vids: Sequence[int], *,
                   use_kernel: Optional[bool] = None,
                   density_threshold: float = 0.05,
                   max_bytes: Optional[int] = None,
-                  record_density: bool = True) -> list[np.ndarray]:
+                  record_density: bool = True,
+                  device_out: bool = False):
     """Cross-partition fused checkout: the whole wave, ONE kernel launch.
 
     However many partitions the vids span, the wave executes as a single
@@ -1053,10 +1260,32 @@ def checkout_wave(store, vids: Sequence[int], *,
     ``get_density_stats(store, create=True)``).  Stores nobody monitors pay
     nothing.  ``record_density=False`` opts a call out entirely.  An
     attached ``HotSetPolicy`` likewise observes every wave's touched
-    partitions (the group former's heat signal)."""
+    partitions (the group former's heat signal).
+
+    ``device_out=True`` returns a ``WaveResult`` handle instead of host
+    blocks: kernel-tier gathers stay DEVICE-resident and in flight (the
+    launch returns without blocking — natively via JAX async dispatch, and
+    through the ``_wave_launcher`` worker on backends whose dispatch
+    executes inline), host/perpart tiers come back pre-materialized behind
+    the same handle — ``materialize()`` later is bit-identical to the
+    eager path."""
+    res = _wave_result(store, vids, use_kernel=use_kernel,
+                       density_threshold=density_threshold,
+                       max_bytes=max_bytes, record_density=record_density,
+                       defer=device_out)
+    return res if device_out else res.materialize()
+
+
+def _wave_result(store, vids: Sequence[int], *,
+                 use_kernel: Optional[bool],
+                 density_threshold: float,
+                 max_bytes: Optional[int],
+                 record_density: bool,
+                 defer: bool = False) -> WaveResult:
+    """``checkout_wave``'s body: route the wave, return a WaveResult."""
     vids = _validate_vids(store, vids)
     if not vids:
-        return []
+        return WaveResult.from_mats([])
     if use_kernel is None:
         use_kernel = _default_use_kernel()
     if max_bytes is None:
@@ -1077,13 +1306,14 @@ def checkout_wave(store, vids: Sequence[int], *,
                 return _grouped_wave(store, vids, mgr, use_kernel=False,
                                      stats=stats,
                                      density_threshold=density_threshold)
-            return _perpart_fallback(store, vids, stats, False,
-                                     density_threshold)
+            return WaveResult.from_mats(_perpart_fallback(
+                store, vids, stats, False, density_threshold))
         rebased, _ = _rebase_wave(store, vids, sb)
         if stats:
             stats.record(vids, *measure_density(
                 rebased, sb.block_n, density_threshold=density_threshold))
-        return _fused_host_gather(sb.host[:, :sb.d], rebased)
+        return WaveResult.from_mats(
+            _fused_host_gather(sb.host[:, :sb.d], rebased))
     if sb is None and max_bytes is not None:
         need = _cached_superblock_need(store)
         if need > max_bytes:
@@ -1110,71 +1340,92 @@ def checkout_wave(store, vids: Sequence[int], *,
             if mgr is not None:
                 return _grouped_wave(store, vids, mgr, use_kernel=True,
                                      stats=stats,
-                                     density_threshold=density_threshold)
+                                     density_threshold=density_threshold,
+                                     defer=defer)
             # store forbids attributes: no group cache possible
-            return _perpart_fallback(store, vids, stats, use_kernel,
-                                     density_threshold)
+            return WaveResult.from_mats(_perpart_fallback(
+                store, vids, stats, use_kernel, density_threshold))
     if sb is None and len({int(store.vid_to_pid[v]) for v in vids}) <= 1:
         # one partition touched = the per-partition engine is already a
         # single launch; don't build+pin a whole-store superblock for it
-        return _perpart_fallback(store, vids, stats, use_kernel,
-                                 density_threshold)
+        return WaveResult.from_mats(_perpart_fallback(
+            store, vids, stats, use_kernel, density_threshold))
     if sb is None:
         sb, _ = get_superblock(store, max_bytes=max_bytes)
         if sb is None:          # refused (store forbade caching): perpart
-            return _perpart_fallback(store, vids, stats, use_kernel,
-                                     density_threshold)
-    mats, _, dt = _gather_off_superblock(
+            return WaveResult.from_mats(_perpart_fallback(
+                store, vids, stats, use_kernel, density_threshold))
+    part, _, dt = _gather_off_superblock(
         store, vids, sb, use_kernel=True,
-        density_threshold=density_threshold, want_density=stats is not None)
+        density_threshold=density_threshold, want_density=stats is not None,
+        defer=defer)
     if stats:
         stats.record(vids, *dt)
-    return mats
+    return WaveResult(n=len(vids), parts=[part])
 
 
 def _gather_off_superblock(store, gvids: Sequence[int], sb: Superblock, *,
                            use_kernel: bool, density_threshold: float,
-                           want_density: bool = False
-                           ) -> tuple[list[np.ndarray], bool, Optional[tuple]]:
+                           want_density: bool = False, defer: bool = False
+                           ) -> tuple[_WavePart, bool, Optional[tuple]]:
     """One fused gather for ``gvids`` over ``sb`` (whole-store or group).
-    Returns (per-vid blocks, launched, density) — ``launched`` is True iff
-    a kernel launch actually happened (an all-empty wave gathers nothing);
+    Returns (part, launched, density) — ``part`` is a ``_WavePart`` over
+    positions 0..len(gvids)-1 (kernel tier: the DEVICE-resident packed
+    gather + split plan, the device→host transfer deferred to ``split()``;
+    host tier: pre-materialized blocks); ``launched`` is True iff a kernel
+    launch actually happened (an all-empty wave gathers nothing);
     ``density`` is the per-vid (densities, tiles) telemetry when
     ``want_density`` (read off the plan the gather needs anyway — no extra
-    rlist pass), else None."""
+    rlist pass), else None.  ``defer=True`` launches the jitted gather on
+    the ``_wave_launcher`` worker so the call returns with the kernel in
+    flight even on inline-dispatch backends; planning and the ``device()``
+    pin stay on this thread."""
+    idxs = list(range(len(gvids)))
     if not use_kernel:
         rebased, _ = _rebase_wave(store, gvids, sb)
         dt = measure_density(rebased, sb.block_n,
                              density_threshold=density_threshold) \
             if want_density else None
-        return _fused_host_gather(sb.host[:, :sb.d], rebased), False, dt
-    wp = plan_wave(store, gvids, sb, density_threshold=density_threshold)
+        return _WavePart(idxs=idxs, mats=_fused_host_gather(
+            sb.host[:, :sb.d], rebased)), False, dt
+    wp = plan_wave_cached(store, gvids, sb,
+                          density_threshold=density_threshold)
     dt = _plan_mode_density(wp.plan) if want_density else None
     if wp.n_tiles == 0:
         empty = np.zeros((0, sb.d), dtype=sb.host.dtype)
-        return [empty for _ in gvids], False, dt
+        return _WavePart(idxs=idxs, mats=[empty for _ in gvids]), False, dt
     from ..kernels import ops as K
-    packed = K.checkout_wave(sb.device(), wp.plan.starts, wp.plan.mode,
-                             wp.hi, block_n=sb.block_n, block_d=sb.bd)
-    packed = np.asarray(packed)[:, :sb.d]
-    return [packed[wp.segment(k, sb.block_n)]
-            for k in range(len(gvids))], True, dt
+    dev = sb.device()           # upload/pin on the CALLER's thread
+    if defer and _defer_via_worker(wp.n_tiles):
+        packed = _wave_launcher().submit(
+            K.checkout_wave, dev, wp.plan.starts, wp.plan.mode, wp.hi,
+            block_n=sb.block_n, block_d=sb.bd)
+    else:
+        packed = K.checkout_wave(dev, wp.plan.starts, wp.plan.mode, wp.hi,
+                                 block_n=sb.block_n, block_d=sb.bd)
+    return _WavePart(idxs=idxs, packed=packed,
+                     segments=[wp.segment(k, sb.block_n)
+                               for k in range(len(gvids))],
+                     d=sb.d), True, dt
 
 
 def _grouped_wave(store, vids: Sequence[int], mgr: SuperblockGroups, *,
                   use_kernel: bool, stats: Optional[DensityStats],
-                  density_threshold: float) -> list[np.ndarray]:
+                  density_threshold: float, defer: bool = False
+                  ) -> WaveResult:
     """Route one wave through the partition-group layer.
 
     The wave's vids split by group; every touched group that is (or can
     be) pinned runs as ONE fused ``checkout_wave`` pallas_call over its
-    group superblock — kernel launches == touched pinned groups.  Groups
-    this wave touches are protected from intra-wave LRU eviction (pinning
-    group B must not thrash group A mid-wave); vids whose group cannot
-    co-pin, plus straggler partitions bigger than the whole budget, route
-    through the per-partition engine in one batch.  The host tier only
-    uses groups that are ALREADY pinned (free fusion — numpy never pays a
-    superblock build)."""
+    group superblock — kernel launches == touched pinned groups, and every
+    launched gather stays device-resident inside the returned
+    ``WaveResult`` (the per-group device→host transfers all defer to
+    ``materialize()``).  Groups this wave touches are protected from
+    intra-wave LRU eviction (pinning group B must not thrash group A
+    mid-wave); vids whose group cannot co-pin, plus straggler partitions
+    bigger than the whole budget, route through the per-partition engine
+    in one batch.  The host tier only uses groups that are ALREADY pinned
+    (free fusion — numpy never pays a superblock build)."""
     mgr.ensure_plan()
     by_group: dict[tuple, list[int]] = {}
     stragglers: list[int] = []
@@ -1191,7 +1442,7 @@ def _grouped_wave(store, vids: Sequence[int], mgr: SuperblockGroups, *,
     report = GroupWaveReport(groups_touched=len(by_group))
     pins0, ev0 = mgr.pins, mgr.evictions
     protected = set(by_group)
-    out: list[Optional[np.ndarray]] = [None] * len(vids)
+    parts: list[_WavePart] = []
     for key, idxs in by_group.items():
         sb = mgr.pin(key, protected=protected) if use_kernel \
             else mgr.peek(key)
@@ -1199,15 +1450,14 @@ def _grouped_wave(store, vids: Sequence[int], mgr: SuperblockGroups, *,
             stragglers.extend(idxs)
             continue
         gvids = [vids[i] for i in idxs]
-        mats, launched, dt = _gather_off_superblock(
+        part, launched, dt = _gather_off_superblock(
             store, gvids, sb, use_kernel=use_kernel,
             density_threshold=density_threshold,
-            want_density=stats is not None)
+            want_density=stats is not None, defer=defer)
         if launched:
             report.launches += 1
             mgr.launches += 1
-        for i, m in zip(idxs, mats):
-            out[i] = m
+        parts.append(dataclasses.replace(part, idxs=idxs))
         if dt is not None:
             d_g, t_g = dt
             for j, i in enumerate(idxs):
@@ -1217,8 +1467,7 @@ def _grouped_wave(store, vids: Sequence[int], mgr: SuperblockGroups, *,
         svids = [vids[i] for i in stragglers]
         mats = checkout_partitioned_perpart(store, svids,
                                             use_kernel=use_kernel)
-        for i, m in zip(stragglers, mats):
-            out[i] = m
+        parts.append(_WavePart(idxs=list(stragglers), mats=list(mats)))
         if stats:
             d_s, t_s = _local_wave_density(store, svids, density_threshold)
             for j, i in enumerate(stragglers):
@@ -1232,7 +1481,7 @@ def _grouped_wave(store, vids: Sequence[int], mgr: SuperblockGroups, *,
     mgr.groups_touched += report.groups_touched
     mgr.straggler_requests += len(stragglers)
     mgr.last_wave = report
-    return out  # type: ignore[return-value]
+    return WaveResult(n=len(vids), parts=parts)
 
 
 # ---------------------------------------------------- superblock migration --
@@ -1425,19 +1674,26 @@ def migrate_superblock(store, old_sb: Superblock, plan, *,
 
 def checkout_partitioned(store, vids: Sequence[int], *,
                          use_kernel: Optional[bool] = None,
-                         engine: str = "wave") -> list[np.ndarray]:
+                         engine: str = "wave",
+                         device_out: bool = False):
     """Batched checkout over a PartitionedCVD, results in request order.
 
     engine="wave" (default): ONE fused gather for the whole wave via the
     device-resident superblock — a single pallas_call regardless of how many
     partitions the vids span.  engine="perpart": the previous one fused
     gather PER PARTITION (kept as oracle and benchmark baseline).
+
+    ``device_out=True`` returns a ``WaveResult`` handle (kernel-tier wave
+    gathers stay device-resident and in flight; perpart/host results ride
+    the handle pre-materialized) — the serve pipeline's dispatch hook.
     """
     if engine == "wave":
-        return checkout_wave(store, vids, use_kernel=use_kernel)
+        return checkout_wave(store, vids, use_kernel=use_kernel,
+                             device_out=device_out)
     if engine == "perpart":
-        return checkout_partitioned_perpart(store, vids,
+        mats = checkout_partitioned_perpart(store, vids,
                                             use_kernel=use_kernel)
+        return WaveResult.from_mats(mats) if device_out else mats
     raise ValueError(f"unknown engine {engine!r} (use 'wave' or 'perpart')")
 
 

@@ -316,7 +316,9 @@ class RepartitionTrigger:
     waves -> LYRESPLIT -> incremental migration (§4.3 applied online).
 
     ``core.checkout.checkout_wave`` records per-wave run density into the
-    store's ``DensityStats``; ``observe()`` — run between serve flushes —
+    store's ``DensityStats``; ``observe()`` — run between DELIVERED serve
+    waves, and gated on no wave being in flight (``store._inflight_waves``,
+    maintained by the serve pipeline) —
     fires once the low-density streak reaches ``min_waves``, computes a
     fresh LYRESPLIT partitioning of the version tree under the γ-factor
     storage budget, and adopts it only when it actually changes the
@@ -365,11 +367,19 @@ class RepartitionTrigger:
         return stats is not None and stats.low_streak >= self.min_waves
 
     def observe(self) -> Optional[RepartitionReport]:
-        """Run between waves: repartition if the density signal warrants it.
-        Returns the report when a migration happened, else None."""
+        """Run between DELIVERED waves: repartition if the density signal
+        warrants it.  Returns the report when a migration happened, else
+        None.  Refuses (returns None, streak preserved) while the store
+        carries an in-flight wave marker (``store._inflight_waves`` —
+        maintained by the serve pipeline's dispatch/deliver slots): a
+        migration morphs the partition blocks and swaps the superblock
+        under the epoch bump, which must never race a launched-but-not-yet
+        -delivered kernel."""
         from .checkout import (get_density_stats, migrate_superblock,
                                take_superblock)
         from .partition import plan_migration
+        if int(getattr(self.store, "_inflight_waves", 0) or 0) > 0:
+            return None
         stats = get_density_stats(self.store, create=True)
         if stats is None or stats.low_streak < self.min_waves:
             return None

@@ -89,7 +89,58 @@ def plan_batched(rlists, block_n: int = DEFAULT_BN,
     the consecutive chunks go out as single run DMAs (tile-gather); below it
     every chunk uses row DMAs — mixed-mode bookkeeping isn't worth it when
     runs almost never happen.
-    """
+
+    Vectorized across versions: one flat padded rid array, one diff pass,
+    one segment reduction — no per-version python work.  On the serve
+    pipeline the plan runs on the host thread UNDER the previous wave's
+    in-flight kernel, so python-loop churn here would convoy the kernel's
+    runtime; ``plan_batched_loop`` keeps the per-version original as the
+    oracle."""
+    k_total = len(rlists)
+    rls = [np.asarray(rl, dtype=np.int64) for rl in rlists]
+    n_rows = np.fromiter((len(rl) for rl in rls), np.int64, k_total)
+    t_per = -(-n_rows // block_n)
+    tile_offsets = np.zeros(k_total + 1, np.int64)
+    np.cumsum(t_per, out=tile_offsets[1:])
+    total = int(tile_offsets[-1]) * block_n
+    if total == 0:
+        return BatchedPlan(starts=np.zeros(0, np.int32),
+                           mode=np.zeros(0, np.int32),
+                           tile_offsets=tile_offsets, n_rows=n_rows,
+                           density=np.zeros(k_total, np.float64))
+    # flat padded rids: init every slot to its version's LAST rid (padding
+    # repeats it, so a padded tail can never appear consecutive), then
+    # scatter the valid rids over the prefix of each version's segment
+    last = np.fromiter((rl[-1] if len(rl) else 0 for rl in rls),
+                       np.int64, k_total)
+    flat = np.repeat(last, t_per * block_n)
+    valid = np.concatenate([rl for rl in rls if len(rl)]) if n_rows.any() \
+        else np.zeros(0, np.int64)
+    row0 = np.concatenate([[0], np.cumsum(n_rows)[:-1]])
+    flat_idx = np.repeat(tile_offsets[:-1] * block_n - row0, n_rows) \
+        + np.arange(len(valid))
+    flat[flat_idx] = valid
+    chunks = flat.reshape(-1, block_n)
+    # a chunk is a run iff its rids are consecutive
+    runs = np.all(np.diff(chunks, axis=1) == 1, axis=1) if block_n > 1 \
+        else np.ones(len(chunks), bool)
+    rsum = np.concatenate([[0], np.cumsum(runs)])
+    per_version = (rsum[tile_offsets[1:]]
+                   - rsum[tile_offsets[:-1]]).astype(np.float64)
+    density = np.divide(per_version, t_per, out=np.zeros(k_total, np.float64),
+                        where=t_per > 0)
+    # below-threshold versions demote every chunk to row DMAs
+    runs &= np.repeat(density >= density_threshold, t_per)
+    return BatchedPlan(starts=flat.astype(np.int32),
+                       mode=runs.astype(np.int32),
+                       tile_offsets=tile_offsets, n_rows=n_rows,
+                       density=density)
+
+
+def plan_batched_loop(rlists, block_n: int = DEFAULT_BN,
+                      density_threshold: float = 0.05) -> BatchedPlan:
+    """The original per-version planning loop — the oracle
+    ``plan_batched``'s vectorization is property-tested against."""
     starts_parts: list[np.ndarray] = []
     mode_parts: list[np.ndarray] = []
     tile_offsets = np.zeros(len(rlists) + 1, np.int64)
@@ -107,8 +158,6 @@ def plan_batched(rlists, block_n: int = DEFAULT_BN,
         padded = np.concatenate([rl, np.full(pad, rl[-1], np.int64)]) if pad \
             else rl
         chunks = padded.reshape(t, block_n)
-        # a chunk is a run iff its rids are consecutive (padding repeats the
-        # last rid, so a padded tail can never appear consecutive)
         runs = np.all(np.diff(chunks, axis=1) == 1, axis=1) if block_n > 1 \
             else np.ones(t, bool)
         density[k] = float(runs.mean())

@@ -1,5 +1,5 @@
 """Serve-side batched checkout: coalesce concurrent version requests into
-fused multi-version gathers.
+fused multi-version gathers, PIPELINED across waves.
 
 Request flow (the serve half of the checkout data-flow map in
 ``core/checkout.py``)::
@@ -11,30 +11,49 @@ Request flow (the serve half of the checkout data-flow map in
                 │                    — size-triggered   (>= max_wave pending),
                 │                    — deadline-triggered (oldest pending
                 │                      waited >= deadline_s; checked by poll())
-                └─ core.checkout.checkout_wave
-                     ONE cross-partition ``checkout_wave`` pallas_call for
-                     the whole wave, however many partitions (and however
-                     many versions) it spans, over the store's epoch-cached
-                     device-resident superblock — repeated waves skip the
-                     host→device transfer entirely
-                └─ per-ticket results (identical vids share one gather;
-                   per-ticket submit→result latency lands in CheckoutStats)
+                ├─ DISPATCH          — plan + launch the fused
+                │    ``core.checkout.checkout_wave`` (device_out=True): ONE
+                │    cross-partition pallas_call for the whole wave over the
+                │    store's epoch-cached device-resident superblock, left
+                │    IN FLIGHT behind a ``WaveResult`` handle (JAX async
+                │    dispatch; host/perpart tiers ride the same handle
+                │    pre-materialized)
+                └─ DELIVER           — device→host transfer + per-ticket
+                     split + latency stamping of the PREVIOUS wave, run
+                     UNDER the freshly launched kernel: wave N's host split
+                     overlaps wave N+1's device time.  ``poll()`` drives
+                     delivery opportunistically (only when the device
+                     result is ready); ``result(ticket)`` and ``flush()``
+                     force it.  ``pipeline=False`` restores the strictly
+                     serial dispatch-then-deliver-own-wave loop (the
+                     benchmark baseline).
 
 Under heavy multi-user traffic this turns N concurrent checkouts into ONE
-kernel launch per wave instead of N — the serving analogue of LyreSplit's
-checkout-latency headline, applied to batches.  A store whose whole
-superblock exceeds ``superblock_max_bytes`` serves through the
-partition-group layer instead (one fused launch per touched pinned group;
-``CheckoutStats`` carries groups touched, fused launches and LRU
-evictions per flush — see ``core.checkout.SuperblockGroups``).
+kernel launch per wave instead of N — and the two-stage pipeline keeps the
+device busy while the host does per-ticket bookkeeping, the serving
+analogue of RStore's keep-the-retrieval-pipeline-full observation.  A
+store whose whole superblock exceeds ``superblock_max_bytes`` serves
+through the partition-group layer instead (one fused launch per touched
+pinned group; ``CheckoutStats`` carries groups touched, fused launches and
+LRU evictions per flush — see ``core.checkout.SuperblockGroups``).
 
 Pass a ``core.online.RepartitionTrigger`` as ``trigger`` and the server
-closes the paper's online-maintenance loop: every flushed wave records run
-density, and BETWEEN flushes the trigger re-clusters hot scattered versions
-with LYRESPLIT + incremental migration (``apply_migration`` +
-``migrate_superblock``), so the run-DMA path recovers without a serving
-stall — the superblock migrates device-side, only changed tiles re-cross
-the host link.
+closes the paper's online-maintenance loop: every dispatched wave records
+run density, and BETWEEN DELIVERED waves — never while a wave is in
+flight, so a migration can never race a launched kernel — the trigger
+re-clusters hot scattered versions with LYRESPLIT + incremental migration
+(``apply_migration`` + ``migrate_superblock``), so the run-DMA path
+recovers without a serving stall.  The server mirrors its in-flight state
+onto ``store._inflight_waves`` so the trigger's own guard holds even for
+out-of-band ``observe()`` calls.
+
+Failure paths (all regression-tested): a failed dispatch OR delivery
+re-queues the whole coalesced wave (tickets stay serviceable) and rolls
+back its dispatch accounting; a re-queued wave is gated off the deadline
+flusher until the next submit or explicit ``flush()`` (no hot loop
+re-firing a failing gather from ``poll()``); ``serve()`` releases its
+eviction-exempt reservations whenever it raises, so a long-running server
+cannot accrete permanently reserved tickets.
 """
 from __future__ import annotations
 
@@ -55,32 +74,72 @@ RETAIN_RESULTS = 256       # unclaimed ticket results kept before eviction
 
 @dataclasses.dataclass
 class CheckoutStats:
-    waves: int = 0
+    waves: int = 0             # dispatched (and not rolled-back) waves
+    waves_delivered: int = 0   # waves whose results reached the host split
     requests: int = 0
     unique_versions: int = 0
     rows_served: int = 0
+    requeues: int = 0          # waves re-queued by a failed dispatch/delivery
     repartitions: int = 0      # density-triggered online repartitions fired
     # partition-group layer (waves an over-budget store served through
-    # pinned group superblocks — see core.checkout.SuperblockGroups)
+    # pinned group superblocks — see core.checkout.SuperblockGroups);
+    # counted when the wave DELIVERS, off the delta its dispatch captured
     group_waves: int = 0           # flushes routed through the group layer
     groups_touched: int = 0        # Σ distinct groups touched per group wave
     group_launches: int = 0        # fused kernel launches those waves paid
     group_evictions: int = 0       # LRU evictions the budget forced
     straggler_requests: int = 0    # vids that fell through to perpart
     # sliding window (deque, maxlen) — unbounded growth would leak on a
-    # long-running server; `requests` keeps the all-time count
+    # long-running server; `requests` keeps the all-time count.  Append via
+    # ``record_latency`` (it invalidates the percentile cache).
     ticket_latency_s: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+    _lat_cache: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def record_latency(self, dt: float) -> None:
+        self.ticket_latency_s.append(dt)
+        self._lat_cache = None
+
+    def record_latencies(self, dts) -> None:
+        """Bulk append (one C-level extend — the deliver stage stamps a
+        whole wave at once while the next wave's kernel is in flight)."""
+        self.ticket_latency_s.extend(dts)
+        self._lat_cache = None
+
+    def _latency_summary(self) -> tuple:
+        # cached (p50, max): the properties are read per scrape on a serve
+        # hot loop, and a fresh O(LATENCY_WINDOW) copy per read (the old
+        # np.median(list(...))) is 65536 float boxes each time
+        if self._lat_cache is None:
+            dq = self.ticket_latency_s
+            if not dq:
+                self._lat_cache = (0.0, 0.0)
+            else:
+                arr = np.fromiter(dq, np.float64, len(dq))
+                self._lat_cache = (float(np.median(arr)), float(arr.max()))
+        return self._lat_cache
 
     @property
     def p50_latency_s(self) -> float:
-        return float(np.median(list(self.ticket_latency_s))) \
-            if self.ticket_latency_s else 0.0
+        return self._latency_summary()[0]
 
     @property
     def max_latency_s(self) -> float:
-        return float(max(self.ticket_latency_s)) \
-            if self.ticket_latency_s else 0.0
+        return self._latency_summary()[1]
+
+
+@dataclasses.dataclass
+class _InflightWave:
+    """One dispatched wave awaiting delivery."""
+    tickets: list                  # (ticket, vid, t_submit) triples
+    ticket_ids: frozenset          # for result()'s "rides this wave?" check
+    uniq: list                     # sorted unique vids the gather ran over
+    handle: object                 # core.checkout.WaveResult
+    group_delta: tuple             # group-manager counter delta at dispatch
+
+
+_GROUP_COUNTER_ZERO = (0, 0, 0, 0, 0)
 
 
 class BatchedCheckoutServer:
@@ -94,17 +153,25 @@ class BatchedCheckoutServer:
     engine:     "wave" (default) = one fused cross-partition launch per
                 flush; "perpart" = the previous one-launch-per-partition
                 path.
+    pipeline:   True (default) = two-stage dispatch/deliver pipeline:
+                ``flush()`` launches the wave and returns after delivering
+                the PREVIOUS one, so wave N's host split runs under wave
+                N+1's kernel.  False = strictly serial (each flush delivers
+                its own wave before returning — the pre-pipeline behavior
+                and the benchmark baseline).
     trigger:    optional ``core.online.RepartitionTrigger`` — its
-                ``observe()`` runs after every flush (between waves, never
-                inside one), so sustained low-density traffic repartitions
-                the store online; fired repartitions are counted in
-                ``stats.repartitions``.
+                ``observe()`` runs after a wave DELIVERS and only while no
+                other wave is in flight (a migration must never race a
+                launched kernel); a PENDING fire (``should_fire()``) opens
+                a one-wave pipeline bubble at the next flush so an
+                unbroken stream cannot starve the migration; fired
+                repartitions are counted in ``stats.repartitions``.
     """
 
     def __init__(self, store, *, use_kernel: Optional[bool] = None,
                  engine: str = "wave", max_wave: Optional[int] = None,
                  deadline_s: Optional[float] = None,
-                 trigger=None,
+                 trigger=None, pipeline: bool = True,
                  clock: Callable[[], float] = time.monotonic):
         if trigger is not None and engine != "wave":
             # density is only recorded by the wave engine; a trigger on the
@@ -117,9 +184,18 @@ class BatchedCheckoutServer:
         self.max_wave = max_wave
         self.deadline_s = deadline_s
         self.trigger = trigger
+        self.pipeline = pipeline
         self._clock = clock
         self._pending: list[tuple[int, int, float]] = []  # (ticket, vid, t)
         self._next_ticket = 0
+        self._inflight: Optional[_InflightWave] = None
+        self._marked = 0    # this server's contribution to the store-level
+                            # _inflight_waves count (see _sync_inflight_marker)
+        # a wave re-queued by a failed flush must NOT be re-fired by the
+        # deadline flusher on the very next poll() (its timestamps are
+        # already past deadline — that's a hot loop hammering a failing
+        # gather); the next submit, or an explicit flush(), re-arms it
+        self._deadline_armed = True
         # unclaimed results, FIFO-evicted beyond RETAIN_RESULTS so a caller
         # that only consumes flush()'s return value cannot leak the server;
         # reserved tickets (serve()'s in-flight wave) are eviction-exempt
@@ -133,7 +209,8 @@ class BatchedCheckoutServer:
         """Queue a checkout request; returns its ticket.  Tickets are global
         and monotonically increasing — they stay valid across flushes (claim
         the result with ``result(ticket)``).  May trigger a size-based
-        flush."""
+        flush.  Re-arms the deadline flusher for a previously failed
+        (re-queued) wave: new traffic is the retry signal."""
         # validate HERE so a bad vid raises in the offending client's call
         # instead of poisoning a coalesced flush that carries other clients'
         # requests
@@ -141,86 +218,223 @@ class BatchedCheckoutServer:
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append((ticket, vid, self._clock()))
+        self._deadline_armed = True
         if self.max_wave is not None and len(self._pending) >= self.max_wave:
             self.flush()
         return ticket
 
+    def submit_many(self, vids: Sequence[int]) -> list[int]:
+        """Bulk ``submit``: one vectorized validation, one timestamp, one
+        C-level queue extend — the RPC-batch ingest path (per-ticket python
+        here would convoy an in-flight wave's kernel).  Validation raises
+        BEFORE any ticket is assigned, so a bad vid in the batch queues
+        nothing.  A size-triggered flush fires once at the end (the
+        coalesced wave may exceed ``max_wave`` — by design: it was one
+        ingest).  Returns the tickets in request order."""
+        vids = _validate_vids(self.store, vids)
+        if not vids:
+            return []
+        t = self._clock()
+        base = self._next_ticket
+        self._next_ticket = base + len(vids)
+        tickets = list(range(base, self._next_ticket))
+        self._pending.extend(zip(tickets, vids, [t] * len(vids)))
+        self._deadline_armed = True
+        if self.max_wave is not None and len(self._pending) >= self.max_wave:
+            self.flush()
+        return tickets
+
     def poll(self) -> bool:
-        """Deadline flusher hook: flush iff the oldest pending request has
-        waited ``deadline_s``.  Returns whether a wave was flushed."""
+        """Event-loop hook: deliver the in-flight wave if its device result
+        is ready (never blocks on the device), then deadline-flush iff the
+        oldest pending request has waited ``deadline_s``.  Returns whether
+        a wave was flushed.  A wave re-queued by a failed flush does not
+        re-fire here until a submit or explicit flush() re-arms it."""
+        if self._inflight is not None and self._inflight.handle.ready():
+            self.deliver()
         if (self._pending and self.deadline_s is not None
+                and self._deadline_armed
                 and self._clock() - self._pending[0][2] >= self.deadline_s):
             self.flush()
             return True
         return False
 
     def flush(self) -> list[np.ndarray]:
-        """Serve every pending request in one fused wave (a single
-        cross-partition gather); duplicate vids share one gather.  Results
-        come back in TICKET (insertion) order for this wave and are also
-        retained for ``result(ticket)``."""
+        """DISPATCH every pending request as one fused wave (a single
+        cross-partition gather left in flight; duplicate vids share one
+        gather), then DELIVER the previously in-flight wave — its host
+        split runs under the kernel just launched.
+
+        Returns the per-ticket results (ticket/insertion order) of the wave
+        this call DELIVERED: the previous wave in pipelined mode (``[]``
+        when none was in flight), the just-dispatched wave itself when
+        ``pipeline=False``.  Every result is also retained for
+        ``result(ticket)`` — ticket-oriented callers are mode-agnostic."""
         wave = self._pending
         self._pending = []
-        if not wave:
+        dispatched = None
+        bubbled: list[np.ndarray] = []
+        if wave:
+            # a PENDING trigger fire opens a one-wave pipeline bubble: an
+            # unbroken flush-driven stream otherwise always has a successor
+            # in flight at delivery time, and the migration would starve
+            # forever.  Draining here lets observe() run (nothing in
+            # flight) and the dispatch below ride the NEW layout.
+            fire = getattr(self.trigger, "should_fire", None)
+            if (fire is not None and self._inflight is not None
+                    and fire()):
+                try:
+                    bubbled = self.deliver()
+                except BaseException:
+                    # the bubble's delivery failure re-queued only the
+                    # in-flight wave — restore THIS flush's detached wave
+                    # too (global ticket order restored by sorting)
+                    self._pending = sorted(self._pending + wave)
+                    raise
+            uniq = sorted({v for _, v, _ in wave})
+            g0 = self._group_counters()
+            try:
+                handle = checkout_partitioned(
+                    self.store, uniq, use_kernel=self.use_kernel,
+                    engine=self.engine, device_out=True)
+            except BaseException:
+                # a failed gather must not destroy the coalesced wave:
+                # re-queue every request so the tickets stay serviceable,
+                # and gate the deadline retry (see _deadline_armed)
+                self._pending = wave + self._pending
+                self._deadline_armed = False
+                self.stats.requeues += 1
+                raise
+            g1 = self._group_counters()
+            dispatched = _InflightWave(
+                tickets=wave,
+                ticket_ids=frozenset(t for t, _, _ in wave),
+                uniq=uniq, handle=handle,
+                group_delta=tuple(b - a for a, b in zip(g0, g1)))
+            self.stats.waves += 1
+            self.stats.requests += len(wave)
+            self.stats.unique_versions += len(uniq)
+        prev, self._inflight = self._inflight, dispatched
+        if dispatched is not None:
+            # raise the store-level count for the new wave NOW; on the
+            # dispatched-None path the count must keep covering ``prev``
+            # until its delivery join completes (_deliver_wave's finally
+            # owns that decrement)
+            self._sync_inflight_marker()
+        out = self._deliver_wave(prev) if prev is not None else bubbled
+        if not self.pipeline and self._inflight is not None:
+            out = self.deliver()
+        return out
+
+    def deliver(self) -> list[np.ndarray]:
+        """Force delivery of the in-flight wave (device→host transfer +
+        per-ticket split + latency stamping); no-op ``[]`` when nothing is
+        in flight.  ``poll()`` calls this when the device result is ready;
+        ``result()`` and ``flush()`` call it to force completion."""
+        wave, self._inflight = self._inflight, None
+        if wave is None:
             return []
-        vids = [v for _, v, _ in wave]
-        uniq = sorted(set(vids))
-        slot = {v: i for i, v in enumerate(uniq)}
-        mgr = get_superblock_groups(self.store)
-        g0 = (mgr.waves, mgr.groups_touched, mgr.launches, mgr.evictions,
-              mgr.straggler_requests) if mgr is not None else (0, 0, 0, 0, 0)
+        return self._deliver_wave(wave)
+
+    def result(self, ticket: int) -> np.ndarray:
+        """Claim (and drop) a flushed ticket's materialized version,
+        forcing delivery first when the ticket rides the in-flight wave.
+        An unreserved ticket older than the RETAIN_RESULTS most recent
+        unclaimed ones has been evicted and raises KeyError; a still-pending
+        ticket also raises and KEEPS its eviction-exempt reservation."""
+        if (ticket not in self._results and self._inflight is not None
+                and ticket in self._inflight.ticket_ids):
+            self.deliver()
+        out = self._results.pop(ticket)
+        self._reserved.discard(ticket)
+        return out
+
+    # -- delivery plane --------------------------------------------------------
+    def _deliver_wave(self, wave: _InflightWave) -> list[np.ndarray]:
+        """The deliver stage for one (already detached) wave.  A delivery
+        failure re-queues the wave's tickets and rolls back its dispatch
+        accounting, exactly like a dispatch failure."""
         try:
-            mats = checkout_partitioned(self.store, uniq,
-                                        use_kernel=self.use_kernel,
-                                        engine=self.engine)
+            mats = wave.handle.materialize()
         except BaseException:
-            # a failed gather must not destroy the coalesced wave: re-queue
-            # every request so the tickets stay serviceable
-            self._pending = wave + self._pending
+            self._pending = wave.tickets + self._pending
+            self._deadline_armed = False
+            self.stats.waves -= 1
+            self.stats.requests -= len(wave.tickets)
+            self.stats.unique_versions -= len(wave.uniq)
+            self.stats.requeues += 1
             raise
+        finally:
+            # only NOW is the wave's kernel no longer in flight (joined or
+            # dead) — dropping the store-level count before materialize()
+            # would open a window where an out-of-band observe() migrates
+            # under a still-running kernel
+            self._sync_inflight_marker()
         done = self._clock()
-        out = []
-        for ticket, v, t0 in wave:
-            m = mats[slot[v]]
-            self._results[ticket] = m
-            self.stats.ticket_latency_s.append(done - t0)
-            out.append(m)
+        slot = {v: i for i, v in enumerate(wave.uniq)}
+        # per-ticket split/stamp, bulk-shaped: this stage runs UNDER the
+        # next wave's in-flight kernel, so python-loop churn here would
+        # convoy it — one comprehension, one C-level dict update, one
+        # C-level latency extend
+        out = [mats[slot[v]] for _, v, _ in wave.tickets]
+        self._results.update(zip((t for t, _, _ in wave.tickets), out))
+        self.stats.record_latencies([done - t0 for _, _, t0 in wave.tickets])
         if len(self._results) > RETAIN_RESULTS:
             for t in list(self._results):
                 if len(self._results) <= RETAIN_RESULTS:
                     break
                 if t not in self._reserved:
                     del self._results[t]
-        self.stats.waves += 1
-        self.stats.requests += len(wave)
-        self.stats.unique_versions += len(uniq)
+        self.stats.waves_delivered += 1
         self.stats.rows_served += sum(len(m) for m in out)
-        # between flushes: let the density trigger repartition the store
-        # (already-flushed results above are untouched; the NEXT wave sees
-        # the new layout and a freshly migrated superblock)
-        if self.trigger is not None and self.trigger.observe() is not None:
-            self.stats.repartitions += 1
-        # group-layer accounting AFTER the trigger: the manager may have
-        # been created during this flush (first over-budget wave), and a
-        # fired trigger's migrate_groups evictions/pins belong to this
-        # flush's delta, not nobody's
-        mgr = get_superblock_groups(self.store)
-        if mgr is not None:
-            self.stats.group_waves += mgr.waves - g0[0]
-            self.stats.groups_touched += mgr.groups_touched - g0[1]
-            self.stats.group_launches += mgr.launches - g0[2]
-            self.stats.group_evictions += mgr.evictions - g0[3]
-            self.stats.straggler_requests += mgr.straggler_requests - g0[4]
+        # group-layer accounting lands at DELIVERY, off the delta this
+        # wave's dispatch captured — a concurrent in-flight dispatch can
+        # never bleed into it
+        self._apply_group_delta(wave.group_delta)
+        # the density trigger runs BETWEEN DELIVERED waves only: when
+        # flush() already put the next wave in flight, migrating now would
+        # race its launched kernel — observe() runs at THAT wave's
+        # delivery instead.  Migration evictions/pins a fired trigger
+        # causes belong to this delivery's delta.
+        if self.trigger is not None and self._inflight is None:
+            g0 = self._group_counters()
+            if self.trigger.observe() is not None:
+                self.stats.repartitions += 1
+            g1 = self._group_counters()
+            self._apply_group_delta(tuple(b - a for a, b in zip(g0, g1)))
         return out
 
-    def result(self, ticket: int) -> np.ndarray:
-        """Claim (and drop) a flushed ticket's materialized version.  An
-        unreserved ticket older than the RETAIN_RESULTS most recent
-        unclaimed ones has been evicted and raises KeyError; a still-pending
-        ticket also raises and KEEPS its eviction-exempt reservation."""
-        out = self._results.pop(ticket)
-        self._reserved.discard(ticket)
-        return out
+    def _group_counters(self) -> tuple:
+        mgr = get_superblock_groups(self.store)
+        if mgr is None:
+            return _GROUP_COUNTER_ZERO
+        return (mgr.waves, mgr.groups_touched, mgr.launches,
+                mgr.evictions, mgr.straggler_requests)
+
+    def _apply_group_delta(self, d: tuple) -> None:
+        self.stats.group_waves += d[0]
+        self.stats.groups_touched += d[1]
+        self.stats.group_launches += d[2]
+        self.stats.group_evictions += d[3]
+        self.stats.straggler_requests += d[4]
+
+    def _sync_inflight_marker(self) -> None:
+        """Mirror the in-flight state onto the store so the trigger's own
+        no-wave-in-flight guard (``core.online.RepartitionTrigger``) holds
+        even for out-of-band observe() calls.  ``_inflight_waves`` is a
+        COUNT, adjusted by this server's own contribution only — several
+        servers fronting one store must not clear each other's marker."""
+        mark = 0 if self._inflight is None else 1
+        delta = mark - self._marked
+        if not delta:
+            return
+        try:
+            self.store._inflight_waves = max(
+                0, int(getattr(self.store, "_inflight_waves", 0) or 0)
+                + delta)
+        except AttributeError:
+            return
+        self._marked = mark
 
     # -- convenience -----------------------------------------------------------
     def warmup(self) -> None:
@@ -251,22 +465,33 @@ class BatchedCheckoutServer:
                 mgr.warm(device=kernel_tier)
 
     def serve(self, vids: Sequence[int]) -> list[np.ndarray]:
-        """submit+flush in one call — results in request order, correct even
-        when a size-based flush fires mid-submit (collected by ticket, not
-        by wave position).  Tickets are reserved before submission so a
-        wave larger than RETAIN_RESULTS cannot evict its own results."""
-        tickets = []
+        """submit+flush+claim in one call — results in request order,
+        correct even when a size-based flush fires mid-submit (collected by
+        ticket, not by wave position), fully delivered on return.  Tickets
+        are reserved before submission so a wave larger than RETAIN_RESULTS
+        cannot evict its own results; ANY failure — a bad vid, a failed
+        dispatch or delivery, even inside an auto-flush — releases every
+        reservation this call made (the caller won't claim them, so they
+        must stay subject to normal eviction; failed-gather tickets are
+        re-queued and still serviceable)."""
+        reserved: list[int] = []
         try:
+            tickets = []
             for v in vids:
-                self._reserved.add(self._next_ticket)  # submit assigns this
+                # submit() assigns exactly this id — track the reservation
+                # BEFORE the call, so a failure anywhere inside submit
+                # (validation, or a size-triggered auto-flush that raises
+                # AFTER the ticket was assigned) still releases it
+                nxt = self._next_ticket
+                self._reserved.add(nxt)
+                reserved.append(nxt)
                 tickets.append(self.submit(v))
+            self.flush()
+            return [self.result(t) for t in tickets]
         except BaseException:
-            # drop the speculative reservation (the id was never assigned)
-            # and this wave's earlier ones — the caller won't claim them, so
-            # they must stay subject to normal eviction
-            self._reserved.discard(self._next_ticket)
-            for t in tickets:
+            # release every reservation this call made (claimed tickets
+            # already dropped theirs) — including tickets a failed flush
+            # re-queued, and ids that were never assigned at all
+            for t in reserved:
                 self._reserved.discard(t)
             raise
-        self.flush()
-        return [self.result(t) for t in tickets]

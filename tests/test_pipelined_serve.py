@@ -1,0 +1,627 @@
+"""Pipelined serve: the dispatch/deliver two-stage flush (wave N's host
+split under wave N+1's kernel), pipelined ≡ synchronous bit-identity
+across every engine tier, the trigger's between-delivered-waves gate, and
+the serve-layer failure-path fixes — reservation release on flush failure,
+the deadline-retry gate, re-queue on mid-flight delivery failure, and the
+O(1)-amortized latency percentile cache."""
+import numpy as np
+import pytest
+
+import repro.serve.checkout as sc
+from repro.core import generate
+from repro.core.checkout import (WaveResult, checkout_wave,
+                                 estimate_superblock_bytes,
+                                 get_density_stats, get_superblock)
+from repro.core.graph import BipartiteGraph
+from repro.core.online import RepartitionTrigger
+from repro.core.partition import PartitionedCVD
+from repro.core.version_graph import WeightedTree
+from repro.serve.checkout import BatchedCheckoutServer, CheckoutStats
+
+
+def _store(rng, n_versions=24, n_partitions=4, seed=3, n_attrs=12):
+    w = generate("SCI", n_versions=n_versions, inserts=100, n_branches=4,
+                 n_attrs=n_attrs, seed=seed)
+    assignment = rng.permutation(np.arange(w.n_versions) % n_partitions)
+    return PartitionedCVD(w.graph, w.data, assignment), w
+
+
+def _scattered_store(rng, n_versions=12, n_records=512, size=24, n_attrs=8):
+    rls = [np.sort(rng.choice(n_records, size, replace=False)).astype(np.int64)
+           for _ in range(n_versions)]
+    graph = BipartiteGraph.from_rlists(rls, n_records=n_records)
+    data = rng.integers(0, 1 << 20, (n_records, n_attrs)).astype(np.int32)
+    store = PartitionedCVD(graph, data, np.zeros(n_versions, np.int64))
+    tree = WeightedTree(
+        parent=np.concatenate([[-1], np.zeros(n_versions - 1, np.int64)]),
+        n_records=np.array([len(r) for r in rls], np.int64),
+        edge_w=np.zeros(n_versions, np.int64))
+    return store, tree, graph, data
+
+
+# ------------------------------------------------------------ the pipeline --
+def test_flush_leaves_wave_in_flight_and_result_forces_delivery(rng):
+    """Pipelined flush() returns with the wave still in flight (dispatch
+    accounting done, delivery pending); result() forces the delivery and
+    stamps latency with the DELIVERY-time clock."""
+    store, w = _store(rng)
+    now = [0.0]
+    srv = BatchedCheckoutServer(store, use_kernel=False,
+                                clock=lambda: now[0])
+    t1 = srv.submit(3)
+    t2 = srv.submit(7)
+    now[0] = 0.01
+    out = srv.flush()
+    assert out == []                                   # nothing was in flight
+    assert srv._inflight is not None
+    assert srv.stats.waves == 1 and srv.stats.waves_delivered == 0
+    assert len(srv.stats.ticket_latency_s) == 0        # not stamped yet
+    now[0] = 0.05
+    np.testing.assert_array_equal(srv.result(t1), store.checkout(3))
+    assert srv.stats.waves_delivered == 1 and srv._inflight is None
+    lat = srv.stats.ticket_latency_s
+    assert lat[0] == pytest.approx(0.05) and lat[1] == pytest.approx(0.05)
+    np.testing.assert_array_equal(srv.result(t2), store.checkout(7))
+
+
+def test_flush_dispatches_next_wave_before_delivering_previous(rng):
+    """The overlap itself: wave N+1's dispatch (gather launch) happens
+    BEFORE wave N's delivery (materialize), so the host split of N runs
+    under N+1's kernel."""
+    store, w = _store(rng)
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    events = []
+    real_cp = sc.checkout_partitioned
+    real_dw = srv._deliver_wave
+
+    def logging_cp(store_, vids, **kw):
+        events.append(("dispatch", tuple(vids)))
+        return real_cp(store_, vids, **kw)
+
+    def logging_dw(wave):
+        events.append(("deliver", tuple(t for t, _, _ in wave.tickets)))
+        return real_dw(wave)
+
+    sc.checkout_partitioned = logging_cp
+    srv._deliver_wave = logging_dw
+    try:
+        srv.submit(1)
+        srv.submit(2)
+        srv.flush()                                    # dispatch A
+        t3 = srv.submit(3)
+        srv.flush()                                    # dispatch B, deliver A
+        assert [e[0] for e in events] == ["dispatch", "dispatch", "deliver"]
+        assert events[-1][1] == (0, 1)                 # ... and it WAS wave A
+        srv.result(t3)                                 # deliver B
+        assert events[-1] == ("deliver", (t3,))
+    finally:
+        sc.checkout_partitioned = real_cp
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("budget", [None, "third"])
+def test_pipelined_matches_synchronous_bit_identical(rng, use_kernel, budget):
+    """The same ticket stream served pipelined and synchronous is
+    byte-for-byte identical across engine tiers: kernel + host, whole
+    superblock (budget None) + partition groups (over-budget store)."""
+    streams = [[3, 7, 3, 1], [9, 9, 2], [0, 5, 11, 4, 7], [6], [8, 10, 2, 3]]
+    outs = {}
+    for pipeline in (True, False):
+        store, w = _store(rng, n_partitions=6, seed=19)
+        if budget == "third":
+            store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+        srv = BatchedCheckoutServer(store, use_kernel=use_kernel,
+                                    max_wave=4, pipeline=pipeline)
+        srv.warmup()
+        got = [srv.serve(vids) for vids in streams]
+        assert srv._inflight is None                   # fully drained
+        outs[pipeline] = (store, got)
+    store, _ = outs[True]
+    for (vids, pip), syn in zip(zip(streams, outs[True][1]), outs[False][1]):
+        for v, a, b in zip(vids, pip, syn):
+            a, b = np.asarray(a), np.asarray(b)
+            np.testing.assert_array_equal(a, b)
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(a, store.checkout(v))
+
+
+def test_interleaved_submit_poll_result(rng):
+    """Interleaved submit/poll/result under a fake clock: poll() delivers a
+    ready in-flight wave without flushing, deadline flushes still fire, and
+    tickets stay claimable in any order across waves."""
+    store, w = _store(rng)
+    now = [0.0]
+    srv = BatchedCheckoutServer(store, use_kernel=False, deadline_s=0.05,
+                                clock=lambda: now[0])
+    t1 = srv.submit(4)
+    now[0] = 0.06
+    assert srv.poll()                                  # deadline flush: wave A
+    assert srv._inflight is not None
+    t2 = srv.submit(9)                                 # next wave accumulates
+    assert not srv.poll()                              # delivers A (ready)
+    assert srv._inflight is None and srv.stats.waves_delivered == 1
+    now[0] = 0.20
+    assert srv.poll()                                  # deadline flush: wave B
+    t3 = srv.submit(2)
+    # claim order: newest pending first — t3 forces nothing (still pending)
+    with pytest.raises(KeyError):
+        srv.result(t3)
+    np.testing.assert_array_equal(srv.result(t2), store.checkout(9))
+    np.testing.assert_array_equal(srv.result(t1), store.checkout(4))
+    srv.flush()
+    srv.flush()                                        # drain wave C
+    np.testing.assert_array_equal(srv.result(t3), store.checkout(2))
+    assert srv.stats.waves == 3 == srv.stats.waves_delivered
+
+
+def test_wave_result_handle_kernel_path(rng):
+    """core-level contract: device_out=True returns an un-materialized
+    WaveResult on the kernel superblock path whose materialize() is
+    idempotent and oracle-identical."""
+    store, w = _store(rng, n_partitions=4, seed=7)
+    get_superblock(store)                              # pin: wave path taken
+    vids = [0, 5, 11, 3, 5]
+    h = checkout_wave(store, vids, use_kernel=True, device_out=True)
+    assert isinstance(h, WaveResult) and not h.delivered
+    assert any(p.packed is not None for p in h.parts)  # device-resident
+    mats = h.materialize()
+    assert h.delivered and h.materialize() is mats and h.ready()
+    for v, m in zip(vids, mats):
+        np.testing.assert_array_equal(np.asarray(m), store.checkout(v))
+
+
+# -------------------------------------------------------------- the trigger --
+def test_trigger_fires_only_between_delivered_waves(rng):
+    """The trigger's observe() runs exactly when NO wave is in flight: a
+    steady pipelined stream defers it to each wave's delivery, never to a
+    flush that just put the next wave in flight."""
+    store, w = _store(rng)
+    calls = []
+
+    class Probe:
+        def observe(probe_self):
+            calls.append(srv._inflight is None)
+            return None
+
+    srv = BatchedCheckoutServer(store, use_kernel=False, trigger=Probe())
+    for vids in ([1, 2], [3], [4, 5, 6]):
+        for v in vids:
+            srv.submit(v)
+        srv.flush()
+    # three waves dispatched; deliveries of waves 0 and 1 happened UNDER an
+    # in-flight successor, so observe() was gated off both times
+    assert srv.stats.waves == 3 and srv.stats.waves_delivered == 2
+    assert calls == []
+    srv.flush()                                        # drain the last wave
+    assert calls == [True]
+    assert srv.stats.waves_delivered == 3
+
+
+def test_pending_trigger_fire_opens_pipeline_bubble(rng):
+    """An unbroken flush-driven stream must not starve the trigger: once
+    ``should_fire()`` goes high, the next flush drains the in-flight wave
+    FIRST (one pipeline bubble, its results returned) so observe() runs
+    with nothing in flight, then dispatches on the new layout."""
+    store, w = _store(rng)
+    calls = []
+
+    class Probe:
+        fire = False
+
+        def should_fire(probe_self):
+            return probe_self.fire
+
+        def observe(probe_self):
+            calls.append(srv._inflight is None)
+            return None
+
+    probe = Probe()
+    srv = BatchedCheckoutServer(store, use_kernel=False, trigger=probe)
+    srv.submit(1)
+    srv.submit(2)
+    srv.flush()                                        # wave A in flight
+    assert calls == []
+    probe.fire = True
+    srv.submit(3)
+    out = srv.flush()                                  # bubble: A delivered
+    assert calls == [True]                             # ...with nothing in flight
+    assert len(out) == 2                               # A's results returned
+    assert srv.stats.waves_delivered == 1 and srv._inflight is not None
+
+
+def test_bubble_delivery_failure_requeues_both_waves(rng, monkeypatch):
+    """A delivery failure inside the trigger bubble must re-queue BOTH the
+    in-flight wave and the flush's own detached wave — neither set of
+    tickets may be dropped."""
+    store, w = _store(rng)
+
+    class Probe:
+        def should_fire(probe_self):
+            return True
+
+        def observe(probe_self):
+            return None
+
+    srv = BatchedCheckoutServer(store, use_kernel=False, trigger=Probe())
+    ta = srv.submit(1)
+    real_fire = srv.trigger.should_fire
+    srv.trigger.should_fire = lambda: False
+    srv.flush()                                        # wave A in flight
+    srv.trigger.should_fire = real_fire
+    tb = srv.submit(2)
+
+    def exploding(self):
+        raise RuntimeError("device lost")
+
+    monkeypatch.setattr(WaveResult, "materialize", exploding)
+    with pytest.raises(RuntimeError, match="device lost"):
+        srv.flush()                                    # bubble join fails
+    monkeypatch.undo()
+    assert [t for t, _, _ in srv._pending] == [ta, tb]
+    srv.flush()
+    srv.flush()                                        # drain
+    np.testing.assert_array_equal(srv.result(ta), store.checkout(1))
+    np.testing.assert_array_equal(srv.result(tb), store.checkout(2))
+
+
+def test_empty_flush_marker_holds_through_join(rng, monkeypatch):
+    """A drain flush (no pending requests) must also keep the store-level
+    count up until the in-flight wave's join completes."""
+    store, w = _store(rng)
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    srv.submit(3)
+    srv.flush()
+    assert store._inflight_waves == 1
+    seen = {}
+    real = WaveResult.materialize
+
+    def observing(self):
+        seen["during_join"] = store._inflight_waves
+        return real(self)
+
+    monkeypatch.setattr(WaveResult, "materialize", observing)
+    srv.flush()                                        # drain, no dispatch
+    assert seen["during_join"] == 1 and store._inflight_waves == 0
+
+
+def test_inflight_marker_holds_through_materialize(rng, monkeypatch):
+    """The store-level count must not drop until the delivery JOIN is done
+    — an out-of-band observe() during the device→host wait would otherwise
+    migrate under a still-running kernel."""
+    store, w = _store(rng)
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    t = srv.submit(3)
+    srv.flush()
+    assert store._inflight_waves == 1
+    seen = {}
+    real = WaveResult.materialize
+
+    def observing(self):
+        seen["during_join"] = store._inflight_waves
+        return real(self)
+
+    monkeypatch.setattr(WaveResult, "materialize", observing)
+    srv.result(t)
+    assert seen["during_join"] == 1 and store._inflight_waves == 0
+
+
+def test_generator_vids_still_accepted(rng):
+    """Iterables (not just sequences) were always valid vid input — the
+    vectorized validation must materialize them, not choke in numpy."""
+    store, w = _store(rng)
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    tickets = srv.submit_many(v for v in [1, 2, 3])
+    srv.flush()
+    for t, v in zip(tickets, [1, 2, 3]):
+        np.testing.assert_array_equal(srv.result(t), store.checkout(v))
+    outs = checkout_wave(store, iter([0, 4]), use_kernel=False)
+    for v, m in zip([0, 4], outs):
+        np.testing.assert_array_equal(m, store.checkout(v))
+
+
+def test_repartition_trigger_refuses_inflight_marker(rng):
+    """core.online.RepartitionTrigger's own guard: an in-flight marker on
+    the store makes observe() a no-op (streak preserved), cleared marker
+    lets it fire."""
+    store, tree, graph, data = _scattered_store(rng)
+    trig = RepartitionTrigger(store, tree, min_waves=2, use_kernel=False)
+    for _ in range(2):
+        checkout_wave(store, [0, 3, 7, 11], use_kernel=False)
+    assert trig.should_fire()
+    store._inflight_waves = 1
+    assert trig.observe() is None                      # gated, not consumed
+    assert get_density_stats(store).low_streak >= 2
+    store._inflight_waves = 0
+    rep = trig.observe()
+    assert rep is not None and rep.n_partitions_after > 1
+    for v in range(graph.n_versions):
+        np.testing.assert_array_equal(store.checkout(v), data[graph.rlist(v)])
+
+
+def test_pipelined_serve_with_real_trigger_stays_correct(rng):
+    """End to end: pipelined serving + a real RepartitionTrigger — the
+    migration lands between delivered waves and every result stays
+    oracle-identical before and after the epoch bump."""
+    store, tree, graph, data = _scattered_store(rng)
+    trig = RepartitionTrigger(store, tree, min_waves=2, use_kernel=True)
+    srv = BatchedCheckoutServer(store, use_kernel=True, trigger=trig)
+    srv.warmup()
+    for _ in range(4):
+        vids = [int(v) for v in rng.integers(0, graph.n_versions, 4)]
+        outs = srv.serve(vids)
+        for v, m in zip(vids, outs):
+            np.testing.assert_array_equal(np.asarray(m), data[graph.rlist(v)])
+    assert srv.stats.repartitions == 1
+    assert store._inflight_waves == 0
+
+
+def test_inflight_marker_is_a_shared_count(rng):
+    """Two servers fronting ONE store: delivering server B's wave must not
+    clear the marker while server A's wave is still in flight — the store
+    counter is adjusted by each server's own contribution only."""
+    store, w = _store(rng)
+    a = BatchedCheckoutServer(store, use_kernel=False)
+    b = BatchedCheckoutServer(store, use_kernel=False)
+    ta = a.submit(1)
+    a.flush()                                          # A in flight
+    assert store._inflight_waves == 1
+    tb = b.submit(2)
+    b.flush()                                          # both in flight
+    assert store._inflight_waves == 2
+    np.testing.assert_array_equal(b.result(tb), store.checkout(2))
+    assert store._inflight_waves == 1                  # A's wave still marked
+    np.testing.assert_array_equal(a.result(ta), store.checkout(1))
+    assert store._inflight_waves == 0
+
+
+def test_nested_vids_rejected_not_flattened(rng):
+    """Vectorized validation must keep the pre-PR rejection of nested
+    input — silently flattening [[1, 2], [3, 4]] would serve 4 tickets for
+    what the caller believed were 2 requests."""
+    store, w = _store(rng)
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    with pytest.raises(TypeError, match="flat sequence"):
+        srv.submit_many([[1, 2], [3, 4]])
+    assert srv._pending == [] and srv._next_ticket == 0
+    with pytest.raises(TypeError, match="flat sequence"):
+        checkout_wave(store, [[1, 2]])
+
+
+def test_worker_launcher_opt_in_future_path(rng, monkeypatch):
+    """REPRO_WAVE_WORKER=1 (inline-dispatch backends only) launches
+    deferred kernel waves on the single worker thread — a Future rides the
+    WaveResult — and materialization joins it bit-identically."""
+    import concurrent.futures
+    import repro.core.checkout as cc
+    monkeypatch.setenv(cc.WAVE_WORKER_ENV, "1")
+    monkeypatch.setattr(cc, "DEFER_MIN_TILES", 1)
+    store, w = _store(rng, n_partitions=4, seed=5)
+    get_superblock(store)
+    vids = [0, 3, 9, 14]
+    h = checkout_wave(store, vids, use_kernel=True, device_out=True)
+    assert any(isinstance(p.packed, concurrent.futures.Future)
+               for p in h.parts)
+    mats = h.materialize()
+    assert h.ready()
+    for v, m in zip(vids, mats):
+        np.testing.assert_array_equal(np.asarray(m), store.checkout(v))
+    # eager path bit-identity against the worker-launched one
+    eager = checkout_wave(store, vids, use_kernel=True)
+    for a, b in zip(eager, mats):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_worker_launch_failure_surfaces_at_delivery(rng, monkeypatch):
+    """A kernel failure on the worker thread reports ready() (ready to
+    FAIL) and raises at materialize() — the serve layer's delivery-failure
+    re-queue path, not a hang."""
+    import repro.core.checkout as cc
+    from repro.kernels import ops
+    monkeypatch.setenv(cc.WAVE_WORKER_ENV, "1")
+    monkeypatch.setattr(cc, "DEFER_MIN_TILES", 1)
+    store, w = _store(rng, n_partitions=4, seed=5)
+    get_superblock(store)
+
+    def boom(*a, **kw):
+        raise RuntimeError("kernel launch failed")
+
+    monkeypatch.setattr(ops, "checkout_wave", boom)
+    h = checkout_wave(store, [0, 3, 9], use_kernel=True, device_out=True)
+    import time
+    for _ in range(500):                       # yield so the worker can run
+        if h.ready():
+            break
+        time.sleep(0.01)
+    assert h.ready()
+    with pytest.raises(RuntimeError, match="kernel launch failed"):
+        h.materialize()
+
+
+# -------------------------------------------------------- failure-path fixes --
+def test_serve_releases_reservations_on_flush_failure(rng, monkeypatch):
+    """BUGFIX: serve()'s try block used to end before flush() — a failed
+    gather left every submitted ticket in _reserved forever (re-queued
+    tickets became eviction-exempt with no claimant).  Now ANY serve()
+    failure releases the reservations while the re-queued tickets stay
+    serviceable."""
+    store, w = _store(rng)
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    real = sc.checkout_partitioned
+    boom = {"armed": True}
+
+    def flaky(*a, **kw):
+        if boom.pop("armed", False):
+            raise RuntimeError("transient gather failure")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(sc, "checkout_partitioned", flaky)
+    with pytest.raises(RuntimeError, match="transient"):
+        srv.serve([2, 5, 2])
+    assert srv._reserved == set()                      # the fix
+    assert len(srv._pending) == 3                      # re-queued, serviceable
+    assert srv.stats.requeues == 1
+    tickets = [t for t, _, _ in srv._pending]
+    srv.flush()
+    for t, v in zip(tickets, [2, 5, 2]):
+        np.testing.assert_array_equal(srv.result(t), store.checkout(v))
+    # the re-queued results obey NORMAL eviction now (nothing reserved)
+    assert srv._reserved == set()
+
+
+def test_serve_releases_reservation_on_midsubmit_autoflush_failure(
+        rng, monkeypatch):
+    """The leak's other entrance: a SIZE-TRIGGERED auto-flush failing
+    INSIDE submit() — after the ticket was assigned but before serve()'s
+    bookkeeping saw it — must still release that ticket's reservation."""
+    store, w = _store(rng)
+    srv = BatchedCheckoutServer(store, use_kernel=False, max_wave=2)
+    real = sc.checkout_partitioned
+    boom = {"armed": True}
+
+    def flaky(*a, **kw):
+        if boom.pop("armed", False):
+            raise RuntimeError("transient gather failure")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(sc, "checkout_partitioned", flaky)
+    with pytest.raises(RuntimeError, match="transient"):
+        srv.serve([2, 5, 2])                           # flush fires mid-loop
+    assert srv._reserved == set()                      # nothing leaked
+    assert len(srv._pending) == 2                      # re-queued, serviceable
+    tickets = [t for t, _, _ in srv._pending]
+    srv.flush()
+    for t, v in zip(tickets, [2, 5]):
+        np.testing.assert_array_equal(srv.result(t), store.checkout(v))
+    assert srv._reserved == set()
+
+
+def test_failed_flush_gates_deadline_retry(rng, monkeypatch):
+    """BUGFIX: a failed flush re-queues the wave with its ORIGINAL
+    timestamps, so every poll() used to immediately re-fire the failing
+    gather (a hot loop against a broken store).  Now the deadline flusher
+    is disarmed until the next submit (or explicit flush) re-arms it."""
+    store, w = _store(rng)
+    now = [0.0]
+    srv = BatchedCheckoutServer(store, use_kernel=False, deadline_s=0.05,
+                                clock=lambda: now[0])
+    calls = {"n": 0}
+    fails = {"left": 2}
+    real = sc.checkout_partitioned
+
+    def twice_failing(*a, **kw):
+        calls["n"] += 1
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise RuntimeError("store down")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(sc, "checkout_partitioned", twice_failing)
+    t1 = srv.submit(3)
+    now[0] = 0.06
+    with pytest.raises(RuntimeError):
+        srv.poll()                                     # deadline fires, fails
+    assert calls["n"] == 1
+    for _ in range(25):                                # the old hot loop
+        assert not srv.poll()
+    assert calls["n"] == 1                             # gated: no re-fire
+    t2 = srv.submit(5)                                 # new traffic re-arms
+    now[0] = 0.20
+    with pytest.raises(RuntimeError):
+        srv.poll()                                     # armed retry, fails
+    assert calls["n"] == 2
+    assert not srv.poll()                              # gated again
+    srv.flush()                                        # explicit: always tries
+    assert calls["n"] == 3
+    np.testing.assert_array_equal(srv.result(t1), store.checkout(3))
+    np.testing.assert_array_equal(srv.result(t2), store.checkout(5))
+    assert srv.stats.requeues == 2
+
+
+def test_delivery_failure_requeues_cleanly(rng, monkeypatch):
+    """Failure MID-FLIGHT (dispatch succeeded, device→host delivery
+    raises): the wave re-queues, dispatch accounting rolls back, and an
+    explicit retry serves the same tickets."""
+    store, w = _store(rng)
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    t1 = srv.submit(2)
+    t2 = srv.submit(6)
+    srv.flush()
+    assert srv.stats.waves == 1
+
+    def exploding(self):
+        raise RuntimeError("device lost")
+
+    monkeypatch.setattr(WaveResult, "materialize", exploding)
+    with pytest.raises(RuntimeError, match="device lost"):
+        srv.result(t1)
+    monkeypatch.undo()
+    assert srv._inflight is None and len(srv._pending) == 2
+    assert srv.stats.waves == 0 and srv.stats.requests == 0
+    assert srv.stats.requeues == 1
+    assert not srv.poll()                              # deadline gate holds
+    srv.flush()
+    srv.flush()                                        # drain
+    np.testing.assert_array_equal(srv.result(t1), store.checkout(2))
+    np.testing.assert_array_equal(srv.result(t2), store.checkout(6))
+    assert srv.stats.waves == 1 == srv.stats.waves_delivered
+
+
+def test_vectorized_planner_matches_loop_oracle_deterministic(rng):
+    """Deterministic sweep of the vectorized ``plan_batched`` against the
+    per-version loop oracle (the hypothesis twin lives in
+    test_plan_batched_property.py): dense runs, scatters, dups, empties,
+    block_n 1/4/8, thresholds across the demotion boundary."""
+    from repro.kernels.checkout_batched import plan_batched, plan_batched_loop
+    shapes = [
+        [np.arange(10, 74, dtype=np.int64)],
+        [np.zeros(0, np.int64), np.arange(5, dtype=np.int64),
+         np.zeros(0, np.int64)],
+        [np.sort(rng.choice(512, 37, replace=False)).astype(np.int64),
+         np.arange(100, 140, dtype=np.int64),
+         np.asarray([7, 7, 3, 9, 9, 9], np.int64)],
+        [np.asarray([5], np.int64)] * 4,
+        [rng.integers(0, 512, 33).astype(np.int64),
+         np.arange(200, 233, dtype=np.int64)],
+    ]
+    for rls in shapes:
+        for bn in (1, 4, 8):
+            for thr in (0.0, 0.05, 0.5, 1.0):
+                a = plan_batched(rls, block_n=bn, density_threshold=thr)
+                b = plan_batched_loop(rls, block_n=bn, density_threshold=thr)
+                np.testing.assert_array_equal(a.starts, b.starts)
+                np.testing.assert_array_equal(a.mode, b.mode)
+                np.testing.assert_array_equal(a.tile_offsets, b.tile_offsets)
+                np.testing.assert_array_equal(a.n_rows, b.n_rows)
+                np.testing.assert_allclose(a.density, b.density)
+                assert a.starts.dtype == b.starts.dtype == np.dtype(np.int32)
+
+
+def test_latency_percentiles_cached_no_window_copy(monkeypatch):
+    """BUGFIX: p50/max used to copy the whole 65536-entry deque per
+    property READ (np.median(list(...))).  Now one summary is computed per
+    window change: repeated reads are cache hits, a new latency
+    invalidates."""
+    stats = CheckoutStats()
+    for i in range(1000):
+        stats.record_latency(i / 1000.0)
+    medians = {"n": 0}
+    real_median = np.median
+
+    def counting(*a, **kw):
+        medians["n"] += 1
+        return real_median(*a, **kw)
+
+    monkeypatch.setattr(np, "median", counting)
+    p50 = stats.p50_latency_s
+    mx = stats.max_latency_s
+    assert p50 == pytest.approx(0.4995) and mx == pytest.approx(0.999)
+    for _ in range(50):                                # 50 scrapes, 0 copies
+        assert stats.p50_latency_s == p50
+        assert stats.max_latency_s == mx
+    assert medians["n"] == 1
+    stats.record_latency(5.0)                          # window changed
+    assert stats.max_latency_s == 5.0
+    assert medians["n"] == 2
+    # empty-window degenerate stays 0.0
+    assert CheckoutStats().p50_latency_s == 0.0
+    assert CheckoutStats().max_latency_s == 0.0

@@ -136,3 +136,21 @@ def test_density_exactly_at_threshold_keeps_runs(n_run, n_scatter):
         plan_above = plan_batched([rl], block_n=bn,
                                   density_threshold=density + 1e-9)
         assert plan_above.mode.sum() == 0               # zeroed strictly below
+
+
+@given(rlist_waves(), st.sampled_from([1, 4, 8]),
+       st.sampled_from([0.0, 0.05, 0.5, 1.0]))
+@settings(max_examples=60, deadline=None)
+def test_vectorized_plan_matches_loop_oracle(rls, block_n, thr):
+    """The vectorized ``plan_batched`` is field-for-field the original
+    per-version loop (``plan_batched_loop``) on every rlist shape."""
+    from repro.kernels.checkout_batched import plan_batched_loop
+    a = plan_batched(rls, block_n=block_n, density_threshold=thr)
+    b = plan_batched_loop(rls, block_n=block_n, density_threshold=thr)
+    np.testing.assert_array_equal(a.starts, b.starts)
+    np.testing.assert_array_equal(a.mode, b.mode)
+    np.testing.assert_array_equal(a.tile_offsets, b.tile_offsets)
+    np.testing.assert_array_equal(a.n_rows, b.n_rows)
+    np.testing.assert_allclose(a.density, b.density)
+    assert a.starts.dtype == b.starts.dtype
+    assert a.mode.dtype == b.mode.dtype
