@@ -4,8 +4,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-cov bench bench-multipart bench-smoke bench-migration \
-	bench-group bench-serve bench-all lint
+.PHONY: test test-cov test-faults bench bench-multipart bench-smoke \
+	bench-migration bench-group bench-serve bench-fault bench-all lint
 
 # Line-coverage floor for src/repro/core (the CI gate behind `make test-cov`).
 # Baseline'd under the current suite; ratchet UP as coverage grows, never down.
@@ -13,6 +13,11 @@ COV_FLOOR ?= 80
 
 test:           ## tier-1 verify: the command CI and the roadmap pin
 	$(PY) -m pytest -x -q
+
+# REPRO_FAULT_SEED=n selects the seeded fault schedule; CI sweeps 0..3.
+test-faults:    ## fault-injection + durability suites under one seed
+	$(PY) -m pytest -x -q tests/test_faults.py tests/test_durability.py \
+		tests/test_faults_property.py
 
 test-cov:       ## tier-1 + line-coverage floor on src/repro/core (CI gate)
 	@if $(PY) -c "import pytest_cov" >/dev/null 2>&1; then \
@@ -39,6 +44,7 @@ bench-smoke:    ## tiny-shape kernel-path canary (CI): wave engine + online migr
 	BENCH_SMOKE=1 $(PY) -m benchmarks.online_migration
 	BENCH_SMOKE=1 $(PY) -m benchmarks.group_superblock
 	BENCH_SMOKE=1 $(PY) -m benchmarks.pipelined_serve
+	BENCH_SMOKE=1 $(PY) -m benchmarks.fault_recovery
 
 bench-migration: ## incremental vs rebuild migration (BENCH_online_migration.json)
 	$(PY) -m benchmarks.online_migration
@@ -48,6 +54,9 @@ bench-group:    ## budget-aware partial fusion vs perpart fallback (BENCH_group_
 
 bench-serve:    ## pipelined vs synchronous serve stream (BENCH_pipelined_serve.json)
 	$(PY) -m benchmarks.pipelined_serve
+
+bench-fault:    ## snapshot overhead + kill/restore recovery (BENCH_fault_recovery.json)
+	$(PY) -m benchmarks.fault_recovery
 
 bench-all:      ## every paper-figure benchmark
 	$(PY) -m benchmarks.run

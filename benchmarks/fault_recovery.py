@@ -1,0 +1,259 @@
+"""Crash-safe durability cost + recovery latency for the serve pipeline.
+
+Two questions, one artifact:
+
+  * **Steady-state snapshot overhead** — a duplicate-heavy serve stream
+    (TICKETS tickets/wave over UNIQ hot versions, N_SHAPES shapes cycling)
+    runs twice per pass on identical stores: once bare, once taking a
+    ``StoreDurability.snapshot`` every SNAP_EVERY waves (the cadence ISSUE 6
+    prescribes, ~every 50 waves at full shapes).  Each timed pass snapshots
+    into a fresh directory seeded with one warm parent snapshot, so the
+    measured cost is the STEADY-STATE cost: unchanged graph/data/assignment
+    rows dedup against the parent and only the meta JSON + CVD pickle hit
+    disk.  Overhead is snapshot time over serve time, both clocked inside
+    the same pass — a direct paired measurement, not a difference of two
+    whole-pass wall clocks that would bury a ~4% effect in serve noise.
+  * **Recovery-to-first-delivered-wave** — a warmed server is snapshotted
+    mid-stream and then "killed" (abandoned without close, exactly what a
+    SIGKILL leaves behind); the clock runs from ``restore()`` through
+    ``make_server().warmup()`` (lazy superblock re-pin under the same
+    budget) to the first delivered wave, which is bit-identity-checked
+    against the store oracle.
+
+Emits CSV lines (benchmarks/run.py convention) and writes
+``BENCH_fault_recovery.json`` at the repo root; ``BENCH_SMOKE=1`` (the CI
+canary, ``make bench-smoke``) shrinks shapes and writes ``*.smoke.json``.
+The canary ASSERTS recovered-wave bit-identity, restored-store equality,
+balanced delivery counters, and (full run only — smoke shapes on shared CI
+machines are too noisy for wall-clock gates) the headline: snapshot
+overhead on steady-stream serve throughput < 5% on the kernel path (the
+deployment serve tier, mirroring pipelined_serve's kernel-path gate).  The
+host fallback tier is reported un-gated: its per-wave cost is so small
+that at a fixed wave cadence the overhead is dominated by the two fsyncs
+a crash-safe persist cannot skip — cadence there is a deployment knob
+(snapshot by time, not by wave count), not a code property.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.checkout import (estimate_superblock_bytes,
+                                 get_superblock_groups)
+from repro.core.durability import StoreDurability, snapshot_roundtrip_equal
+from repro.core.graph import BipartiteGraph
+from repro.core.partition import PartitionedCVD
+
+from .common import emit
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+SEED = 11
+
+P = 4 if SMOKE else 8                    # partitions
+R, D = (1024, 32) if SMOKE else (4096, 64)
+N_VERSIONS = 32 if SMOKE else 64
+ROWS_PER_VERSION = 32 if SMOKE else 96
+TICKETS = 64 if SMOKE else 512           # tickets per wave (dup-heavy)
+UNIQ = 16 if SMOKE else 48               # unique vids per wave
+N_WAVES = 16 if SMOKE else 200           # waves per measured pass
+N_SHAPES = 4 if SMOKE else 10            # distinct wave shapes in the cycle
+SNAP_EVERY = 8 if SMOKE else 50          # snapshot cadence (waves)
+REPS = 3 if SMOKE else 5                 # interleaved passes; medians
+REC_REPS = 3                             # kill/restore cycles; median
+
+
+def _make_store(rng):
+    rls = []
+    for v in range(N_VERSIONS):
+        if v % 2 == 0:
+            s = int(rng.integers(0, R - ROWS_PER_VERSION))
+            rls.append(np.arange(s, s + ROWS_PER_VERSION, dtype=np.int64))
+        else:
+            rls.append(np.sort(rng.choice(
+                R, ROWS_PER_VERSION, replace=False)).astype(np.int64))
+    graph = BipartiteGraph.from_rlists(rls, n_records=R)
+    data = rng.integers(0, 1 << 20, (R, D)).astype(np.int32)
+    store = PartitionedCVD(graph, data, np.arange(N_VERSIONS) % P)
+    # a partial-fusion budget so recovery exercises the lazy group re-pin
+    store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+    return store
+
+
+def _make_stream(rng):
+    shapes = [[int(v) for v in rng.choice(
+        rng.choice(N_VERSIONS, UNIQ, replace=False), TICKETS)]
+        for _ in range(N_SHAPES)]
+    return [shapes[i % N_SHAPES] for i in range(N_WAVES)]
+
+
+def _make_server(store, use_kernel):
+    from repro.serve.checkout import BatchedCheckoutServer
+    srv = BatchedCheckoutServer(store, use_kernel=use_kernel)
+    srv.warmup()
+    return srv
+
+
+def _run_bare(srv, stream):
+    for wave in stream:
+        srv.serve(wave)
+
+
+def _run_snapshotting(srv, stream, dur):
+    """Run the stream with cadence snapshots; return (serve_s, snap_s).
+
+    Serve and snapshot time are clocked SEPARATELY inside the pass: the
+    overhead gate is their direct ratio, not a difference of two whole-pass
+    wall clocks — differencing would bury a ~4% effect under the ±5%
+    serve-time noise of a shared machine."""
+    serve_s = snap_s = 0.0
+    for i, wave in enumerate(stream):
+        t0 = time.perf_counter()
+        srv.serve(wave)
+        serve_s += time.perf_counter() - t0
+        if (i + 1) % SNAP_EVERY == 0:
+            t0 = time.perf_counter()
+            dur.snapshot(srv.store, server=srv)
+            snap_s += time.perf_counter() - t0
+    return serve_s, snap_s
+
+
+def _bench_tier(use_kernel, stream, scratch):
+    rng_a = np.random.default_rng(SEED)
+    rng_b = np.random.default_rng(SEED)
+    bare = _make_server(_make_store(rng_a), use_kernel)
+    snap = _make_server(_make_store(rng_b), use_kernel)
+    _run_bare(bare, stream)                 # warm jit traces + wave memos
+    _run_bare(snap, stream)
+
+    times = {"bare": [], "serve": [], "snap": []}
+    n_snaps = N_WAVES // SNAP_EVERY
+    dedup = None
+    for rep in range(REPS):                 # interleaved: noise is shared
+        t0 = time.perf_counter()
+        _run_bare(bare, stream)
+        times["bare"].append(time.perf_counter() - t0)
+
+        # fresh dir per pass, seeded with a warm parent snapshot so the
+        # timed snapshots pay the STEADY-STATE (dedup'd) cost
+        dur_dir = os.path.join(scratch, f"snap_{use_kernel}_{rep}")
+        dur = StoreDurability(dur_dir)
+        dur.snapshot(snap.store, server=snap)
+        serve_s, snap_s = _run_snapshotting(snap, stream, dur)
+        times["serve"].append(serve_s)
+        times["snap"].append(snap_s)
+        dedup = dur.dedup_ratio()
+        assert len(dur.snapshots()) == n_snaps + 1
+
+    med = {k: float(np.median(v)) for k, v in times.items()}
+    # overhead = snapshot time as a fraction of the serve time it rides
+    # on, per pass (paired: both halves share the pass's machine noise)
+    overhead = float(np.median(
+        [sn / sv for sn, sv in zip(times["snap"], times["serve"])]))
+    n_tickets = N_WAVES * TICKETS
+
+    # -- recovery: snapshot -> kill -> restore -> first delivered wave ----
+    recover, restore_only, oracle_store = [], [], None
+    for rep in range(REC_REPS):
+        rng = np.random.default_rng(SEED + 17 + rep)
+        store = _make_store(rng)
+        srv = _make_server(store, use_kernel)
+        for wave in stream[:max(2, SNAP_EVERY // 4)]:
+            srv.serve(wave)
+        dur_dir = os.path.join(scratch, f"rec_{use_kernel}_{rep}")
+        dur = StoreDurability(dur_dir)
+        dur.snapshot(store, server=srv)
+        del srv                             # the "kill": no close, no drain
+
+        t0 = time.perf_counter()
+        rs = dur.restore()
+        t_restore = time.perf_counter() - t0
+        srv2 = rs.make_server(use_kernel=use_kernel)
+        srv2.warmup()                       # lazy re-pin under same budget
+        first = [np.asarray(m) for m in srv2.serve(stream[0])]
+        recover.append(time.perf_counter() - t0)
+        restore_only.append(t_restore)
+
+        for v, m in zip(stream[0], first):  # bit-identity vs the oracle
+            np.testing.assert_array_equal(m, rs.store.checkout(v))
+        assert snapshot_roundtrip_equal(store, rs.store)
+        mgr = get_superblock_groups(rs.store)
+        assert mgr is not None and mgr.pins - mgr.evictions == len(mgr.groups)
+        assert srv2.stats.waves_delivered == srv2.stats.waves > 0
+        srv2.close()
+        oracle_store = rs.store
+
+    return {
+        "bare_s": med["bare"],
+        "snapshotting_serve_s": med["serve"],
+        "snapshotting_snap_s": med["snap"],
+        "snapshot_overhead_frac": overhead,
+        "snapshots_per_pass": n_snaps,
+        "snapshot_cost_ms": med["snap"] * 1e3 / max(n_snaps, 1),
+        "tickets_per_s_bare": n_tickets / med["bare"],
+        "tickets_per_s_snapshotting":
+            n_tickets / (med["serve"] + med["snap"]),
+        "dedup_ratio": float(dedup),
+        "recover_to_first_wave_s": float(np.median(recover)),
+        "restore_s": float(np.median(restore_only)),
+        "recovered_epoch": int(oracle_store.epoch),
+    }
+
+
+def main() -> None:
+    rng = np.random.default_rng(SEED)
+    stream = _make_stream(rng)
+    scratch = tempfile.mkdtemp(prefix="bench_fault_recovery_")
+    results = []
+    try:
+        for use_kernel in (True, False):
+            row = _bench_tier(use_kernel, stream, scratch)
+            row["tier"] = "kernel" if use_kernel else "host"
+            results.append(row)
+            emit(f"fault_recovery_{row['tier']}",
+                 (row["snapshotting_serve_s"] + row["snapshotting_snap_s"])
+                 * 1e6 / N_WAVES,
+                 f"overhead={row['snapshot_overhead_frac'] * 100:.2f}% "
+                 f"snap_ms={row['snapshot_cost_ms']:.1f} "
+                 f"recover_ms={row['recover_to_first_wave_s'] * 1e3:.1f} "
+                 f"dedup={row['dedup_ratio']:.2f}")
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+    name = "BENCH_fault_recovery.smoke.json" if SMOKE \
+        else "BENCH_fault_recovery.json"
+    out_path = pathlib.Path(__file__).resolve().parent.parent / name
+    out_path.write_text(json.dumps({
+        "config": {"smoke": SMOKE, "seed": SEED, "p": P, "r": R, "d": D,
+                   "n_versions": N_VERSIONS,
+                   "rows_per_version": ROWS_PER_VERSION,
+                   "tickets_per_wave": TICKETS, "uniq_per_wave": UNIQ,
+                   "n_waves": N_WAVES, "n_shapes": N_SHAPES,
+                   "snap_every": SNAP_EVERY, "reps": REPS,
+                   "rec_reps": REC_REPS},
+        "results": results}, indent=2))
+    print(f"wrote {out_path}")
+
+    # ---- canary ------------------------------------------------------------
+    for row in results:
+        # consecutive steady-state snapshots must dedup (two+ generations
+        # stored for ~one), and recovery must actually finish
+        assert row["dedup_ratio"] < 0.75, row
+        assert row["recover_to_first_wave_s"] > 0, row
+    if not SMOKE:
+        # wall-clock headline asserted on the full run only (smoke shapes
+        # on a shared CI machine are too noisy for a timing gate), on the
+        # kernel path only — see module docstring for the host-tier story
+        krow = next(r for r in results if r["tier"] == "kernel")
+        assert krow["snapshot_overhead_frac"] < 0.05, \
+            f"snapshot overhead {krow['snapshot_overhead_frac'] * 100:.2f}%" \
+            f" >= 5% on the kernel tier"
+
+
+if __name__ == "__main__":
+    main()

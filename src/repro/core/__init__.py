@@ -17,6 +17,10 @@ from .partition import (MigrationPlan, PartitionedCVD, SegmentOp,
                         per_version_partitions)
 from .online import (OnlinePartitioner, RepartitionReport, RepartitionTrigger,
                      replay)
+from .faults import (SITES as FAULT_SITES, FaultPlan, GuardedCounter,
+                     InjectedFault, fault_point, inflight_counter)
+from .durability import (RestoredStore, StoreDurability, StoreSnapshot,
+                         snapshot_roundtrip_equal)
 from .bench_gen import generate, Workload
 
 __all__ = [
@@ -34,5 +38,9 @@ __all__ = [
     "PartitionedCVD", "single_partition", "per_version_partitions",
     "MigrationPlan", "SegmentOp", "plan_migration",
     "OnlinePartitioner", "RepartitionReport", "RepartitionTrigger", "replay",
+    "FAULT_SITES", "FaultPlan", "GuardedCounter", "InjectedFault",
+    "fault_point", "inflight_counter",
+    "RestoredStore", "StoreDurability", "StoreSnapshot",
+    "snapshot_roundtrip_equal",
     "generate", "Workload",
 ]

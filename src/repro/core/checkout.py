@@ -99,6 +99,38 @@ whose ΣR×D superblock would exceed it refuses to pin the whole-store copy
 The single-superblock fast path is the one-group degenerate case: a store
 whose full superblock fits the budget (or has none) never builds the group
 layer, and its wave path is unchanged.
+
+Failure-site catalogue + recovery invariants (``core.faults``)::
+
+    every stateful step above carries a named ``fault_point`` — a no-op
+    until a deterministic ``FaultPlan`` is armed — so the recovery tests
+    (and the CI ``REPRO_FAULT_SEED`` matrix) can exercise each failure
+    mode on purpose instead of waiting for it:
+
+      superblock.upload   Superblock.device(): fires BEFORE the transfer —
+                          ``_device`` stays None, a retry re-uploads
+      wave.launch         _gather_off_superblock: fires after planning,
+                          before the pallas_call — plan memo intact, a
+                          retry replans from cache and relaunches
+      group.pin           SuperblockGroups.pin: fires before the build —
+                          no bytes pinned, LRU state unchanged
+      group.evict         SuperblockGroups._evict: fires before the pop —
+                          the victim stays pinned and accounted
+      serve.transfer      _WavePart.split: fires before the device→host
+                          copy — the device handle survives for the retry
+      migrate.superblock  migrate_superblock entry — the old superblock is
+                          still whole; callers degrade to a lazy rebuild
+      serve.dispatch / serve.delivery / online.trigger / migration.commit
+                          live in serve/checkout.py, core/online.py and
+                          core/partition.py (see their docstrings)
+
+    The invariants every site is placed to preserve (and the fault suite
+    asserts): a fault leaves no half-applied state — pins/evictions stay
+    balanced (``pins - evictions == len(groups)``), no device buffer leaks
+    (every detached superblock's ``_device`` is released on every failure
+    path), ``store._inflight_waves`` (a ``core.faults.GuardedCounter``)
+    never underflows, and a retried/degraded wave delivers results
+    bit-identical to the fault-free run.
 """
 from __future__ import annotations
 
@@ -113,6 +145,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from .faults import fault_point
 from .graph import BipartiteGraph
 
 logger = logging.getLogger(__name__)
@@ -357,6 +390,9 @@ class _WavePart:
         device→host transfer of the packed gather, then per-vid zero-copy
         views."""
         if self.mats is None:
+            # fires BEFORE the transfer consumes anything: the device handle
+            # survives an injected failure, so a delivery retry succeeds
+            fault_point("serve.transfer")
             packed = self.packed
             if isinstance(packed, concurrent.futures.Future):
                 packed = packed.result()
@@ -481,6 +517,7 @@ class Superblock:
     def device(self):
         """The device-resident copy — uploaded on first use, then pinned."""
         if self._device is None:
+            fault_point("superblock.upload")
             import jax.numpy as jnp
             self._device = jnp.asarray(self.host)
             self.uploads += 1
@@ -697,6 +734,33 @@ def take_superblock(store) -> Optional[Superblock]:
     return taken
 
 
+def reinstall_superblock(store, sb: Optional[Superblock]) -> bool:
+    """Rollback of ``take_superblock``: put a detached, still epoch-current
+    superblock back into the store's cache (device copy intact).
+
+    The trigger's migration path detaches the superblock BEFORE committing
+    the migration; when the commit fails (an injected ``migration.commit``
+    fault, an allocator error while staging), the store is still on the old
+    layout and the detached copy is still valid — dropping it would leak
+    the upload the next wave then pays again.  A stale (epoch-mismatched)
+    superblock is released instead.  Returns True iff the copy was kept."""
+    if sb is None:
+        return False
+    if sb.epoch != int(getattr(store, "epoch", 0)):
+        sb._device = None
+        return False
+    cache = getattr(store, "_superblock_cache", None)
+    if cache is None:
+        cache = {}
+        try:
+            store._superblock_cache = cache
+        except AttributeError:
+            sb._device = None
+            return False
+    cache[sb.cache_key if sb.cache_key is not None else (None, None)] = sb
+    return True
+
+
 def peek_superblock(store) -> Optional[Superblock]:
     """A cached, epoch-current superblock — or None, WITHOUT building one.
     The host gather path uses this so pure-host processes never pay the
@@ -870,6 +934,9 @@ class SuperblockGroups:
 
     # -- pin / evict ---------------------------------------------------------
     def _evict(self, key: tuple) -> None:
+        # fires BEFORE the pop: an injected eviction failure leaves the
+        # victim pinned AND accounted (pins - evictions == len(groups))
+        fault_point("group.evict", self.store)
         sb = self.groups.pop(key)
         sb._device = None                   # hard-release the device copy
         self.pinned_bytes -= int(sb.host.nbytes)
@@ -926,6 +993,9 @@ class SuperblockGroups:
         sb = self.peek(key)
         if sb is not None:
             return sb
+        # fires before any build/evict work: an injected pin failure pins no
+        # bytes and leaves the LRU state untouched
+        fault_point("group.pin", self.store)
         if key in self.groups:              # stale epoch: rebuild below
             self._evict(key)
         need = self.group_bytes.get(key)
@@ -1033,36 +1103,53 @@ def migrate_groups(store, plan, taken: Sequence[Superblock], *,
     kept: set[tuple] = set()    # groups migrated THIS call are protected:
     # installing a later group must not LRU-evict an earlier one whose
     # segment_move work was just paid (hot-order taken first)
-    for old_sb in taken:
-        old_pids = set(
-            int(q) for q in (old_sb.pids if old_sb.pids is not None
-                             else np.arange(len(old_sb.row_offsets))))
-        new_pids = sorted(int(i) for i in np.flatnonzero(matched >= 0)
-                          if int(matched[i]) in old_pids)
-        if not new_pids:
+    # Runs POST-COMMIT (store already on the new layout), so a failure here
+    # must degrade, never propagate: each group falls back independently to
+    # lazy rebuild, and the finally guarantees zero leaked device buffers.
+    try:
+        for old_sb in taken:
+            old_pids = set(
+                int(q) for q in (old_sb.pids if old_sb.pids is not None
+                                 else np.arange(len(old_sb.row_offsets))))
+            new_pids = sorted(int(i) for i in np.flatnonzero(matched >= 0)
+                              if int(matched[i]) in old_pids)
+            if not new_pids:
+                old_sb._device = None
+                continue
+            # don't pay segment_move for a group that cannot be kept: every
+            # group pinned during this call is protected, so the fit test is
+            # exactly "does it fit in the remaining budget"
+            est = estimate_superblock_bytes(store, block_n=mgr.block_n,
+                                            block_d=mgr.block_d, pids=new_pids)
+            if mgr.pinned_bytes + est > mgr.budget:
+                old_sb._device = None
+                continue
+            try:
+                new_sb, _ = migrate_superblock(store, old_sb, plan,
+                                               pids=new_pids,
+                                               use_kernel=use_kernel,
+                                               install=False)
+            except ValueError:      # tiling changed: rebuild on next touch
+                old_sb._device = None
+                continue
+            except Exception:       # transient (injected/allocator): this
+                old_sb._device = None   # group rebuilds lazily, rest proceed
+                logger.warning("group migration failed; falling back to "
+                               "lazy rebuild", exc_info=True)
+                continue
             old_sb._device = None
-            continue
-        # don't pay segment_move for a group that cannot be kept: every
-        # group pinned during this call is protected, so the fit test is
-        # exactly "does it fit in the remaining budget"
-        est = estimate_superblock_bytes(store, block_n=mgr.block_n,
-                                        block_d=mgr.block_d, pids=new_pids)
-        if mgr.pinned_bytes + est > mgr.budget:
-            old_sb._device = None
-            continue
+            if mgr.install(new_sb, protected=kept):
+                kept.add(tuple(int(q) for q in np.asarray(new_sb.pids)))
+                migrated += 1
         try:
-            new_sb, _ = migrate_superblock(store, old_sb, plan,
-                                           pids=new_pids,
-                                           use_kernel=use_kernel,
-                                           install=False)
-        except ValueError:          # tiling changed: rebuild on next touch
+            mgr.plan_groups()       # regroup leftovers around the survivors
+        except Exception:
+            mgr._plan_epoch = -1    # replan on next pin()
+            logger.warning("post-migration regroup failed; deferring to "
+                           "next pin", exc_info=True)
+    finally:
+        for old_sb in taken:        # no device buffer outlives this call
             old_sb._device = None
-            continue
-        old_sb._device = None
-        if mgr.install(new_sb, protected=kept):
-            kept.add(tuple(int(q) for q in np.asarray(new_sb.pids)))
-            migrated += 1
-    mgr.plan_groups()               # regroup leftovers around the survivors
     return migrated
 
 
@@ -1396,6 +1483,9 @@ def _gather_off_superblock(store, gvids: Sequence[int], sb: Superblock, *,
         return _WavePart(idxs=idxs, mats=[empty for _ in gvids]), False, dt
     from ..kernels import ops as K
     dev = sb.device()           # upload/pin on the CALLER's thread
+    # fires after planning + upload, before the pallas_call: a retry finds
+    # the plan memo and the pinned device copy intact and just relaunches
+    fault_point("wave.launch", store)
     if defer and _defer_via_worker(wp.n_tiles):
         packed = _wave_launcher().submit(
             K.checkout_wave, dev, wp.plan.starts, wp.plan.mode, wp.hi,
@@ -1541,6 +1631,9 @@ def migrate_superblock(store, old_sb: Superblock, plan, *,
     included), dropping it for a full re-upload is exactly the naive cost
     this path exists to avoid; if none is pinned (host-tier store), there
     is nothing to reuse and the migration stays host-side."""
+    # fires before any assembly: the old superblock (host + device copy) is
+    # still whole, so callers can degrade to a lazy rebuild-on-next-touch
+    fault_point("migrate.superblock", store)
     t0 = time.perf_counter()
     if use_kernel is None:
         use_kernel = old_sb._device is not None

@@ -1,0 +1,255 @@
+"""Crash-safe store durability: epoch-tagged snapshots of everything the
+serve/migration pipeline cannot recompute, persisted through the trainer's
+content-dedup checkpoint CVD (``train.checkpoint.CheckpointStore``).
+
+What a ``StoreSnapshot`` captures — and deliberately does NOT:
+
+  * the version graph CSR, base data and partitioning assignment (the
+    store's identity) — saved BITEXACT (int64 rids must not round-trip
+    through fp32) and parent-chained, so consecutive snapshots dedup every
+    unchanged row block (Bhattacherjee et al.'s storage/recreation
+    tradeoff: persist the cheap-to-store state, recreate the rest);
+  * the maintenance-loop state a restart would otherwise cold-start:
+    ``DensityStats`` (streak + per-vid EWMAs), ``HotSetPolicy`` heat,
+    the ``SuperblockGroups`` layout plan and all-time counters, and the
+    serve ticket watermark (restored tickets never collide with
+    pre-crash ones);
+  * NOT the device superblocks: they are pure recreations of host state —
+    ``restore()`` returns a store whose first ``warmup()`` (or first
+    wave) re-pins them lazily, hot-first, under the same budget.
+
+Counter invariants across the cycle: the group layer's
+``pins - evictions == len(groups)`` must hold on the restored store too;
+since a restored store has ZERO pinned groups, the snapshot folds the
+still-pinned count into the persisted eviction counter (a kill IS an
+eviction of every pinned group).  The recovery suite asserts this plus
+zero leaked reservations and device buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .checkout import (DensityStats, SuperblockGroups, get_density_stats,
+                       get_superblock_groups)
+from .graph import BipartiteGraph
+from .online import HotSetPolicy, get_hot_set_policy
+from .partition import PartitionedCVD
+
+_TREE_TEMPLATE = {"assignment": 0, "data": 0,
+                  "graph_indices": 0, "graph_indptr": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreSnapshot:
+    """One persisted snapshot: the checkpoint-CVD vid plus the host-state
+    meta that rebuilds the maintenance loop."""
+    vid: int
+    epoch: int
+    meta: dict
+
+
+@dataclasses.dataclass
+class RestoredStore:
+    """A store rebuilt from a snapshot, plus the serve-side watermark.
+
+    ``store`` is live immediately (host path); device superblocks are
+    rebuilt lazily — call ``make_server(...).warmup()`` to pre-pin them.
+    ``make_server`` seeds the ticket counter past the snapshot watermark
+    so restored tickets never collide with pre-crash ones."""
+    store: PartitionedCVD
+    snapshot: StoreSnapshot
+    ticket_watermark: int
+
+    def make_server(self, **kwargs):
+        # lazy import: serve imports core, not the other way around
+        from ..serve.checkout import BatchedCheckoutServer
+        srv = BatchedCheckoutServer(self.store, **kwargs)
+        srv._next_ticket = int(self.ticket_watermark)
+        return srv
+
+
+def _density_meta(store) -> Optional[dict]:
+    stats = get_density_stats(store)
+    if stats is None:
+        return None
+    return {"low_threshold": float(stats.low_threshold),
+            "ewma_alpha": float(stats.ewma_alpha),
+            "waves": int(stats.waves), "tiles": int(stats.tiles),
+            "run_tiles": float(stats.run_tiles),
+            "low_streak": int(stats.low_streak),
+            "last_wave_density": float(stats.last_wave_density),
+            "per_vid": {str(int(v)): float(d)
+                        for v, d in stats.per_vid.items()}}
+
+
+def _heat_meta(store) -> Optional[dict]:
+    pol = getattr(store, "_hot_set_policy", None)
+    if pol is None:
+        return None
+    return {"alpha": float(pol.alpha), "waves": int(pol.waves),
+            "ewma": {str(int(p)): [float(v), int(seen)]
+                     for p, (v, seen) in pol.touch_ewma.items()}}
+
+
+def _groups_meta(store) -> Optional[dict]:
+    mgr = get_superblock_groups(store)
+    if mgr is None:
+        return None
+    return {"budget": int(mgr.budget),
+            "block_n": None if mgr.block_n is None else int(mgr.block_n),
+            "block_d": None if mgr.block_d is None else int(mgr.block_d),
+            "planned": [[int(q) for q in key] for key in mgr.planned],
+            "stragglers": sorted(int(q) for q in mgr.straggler_pids),
+            # a kill evicts every pinned group: folding the pinned count
+            # into the persisted evictions keeps pins - evictions ==
+            # len(groups) (== 0) true on the restored, nothing-pinned store
+            "pins": int(mgr.pins),
+            "evictions": int(mgr.evictions) + len(mgr.groups),
+            "launches": int(mgr.launches), "waves": int(mgr.waves),
+            "groups_touched": int(mgr.groups_touched),
+            "straggler_requests": int(mgr.straggler_requests)}
+
+
+class StoreDurability:
+    """Snapshot/restore driver over one checkpoint directory.
+
+    Snapshots parent-chain automatically (each dedups against the
+    previous one); ``restore()`` with no vid rebuilds the latest.  The
+    underlying ``CheckpointStore`` persists atomically (tmp + rename), so
+    a process killed mid-snapshot leaves the previous generation
+    restorable — the crash-recovery contract the fault suite exercises.
+    """
+
+    def __init__(self, directory: str, *, shard_rows: int = 1 << 12):
+        # lazy import: train pulls in the jax training stack and imports
+        # core itself — binding it at call time keeps core import-light
+        from ..train.checkpoint import CheckpointStore
+        self.ckpt = CheckpointStore(directory, shard_rows=shard_rows)
+
+    # -- write plane -----------------------------------------------------------
+    def snapshot(self, store, *, server=None) -> StoreSnapshot:
+        """Persist the store (and optionally one server's ticket
+        watermark).  Cheap on the steady path: unchanged graph/data/
+        assignment rows dedup against the parent snapshot, so only the
+        meta JSON and genuinely new rows hit disk."""
+        tree = {"assignment": np.asarray(store.assignment, np.int64),
+                "data": np.asarray(store.data),
+                "graph_indices": np.asarray(store.graph.indices, np.int64),
+                "graph_indptr": np.asarray(store.graph.indptr, np.int64)}
+        sb_budget = getattr(store, "superblock_max_bytes", None)
+        meta = {"kind": "store-snapshot",
+                "epoch": int(getattr(store, "epoch", 0)),
+                "n_records": int(store.graph.n_records),
+                "superblock_max_bytes":
+                    None if sb_budget is None else int(sb_budget),
+                "ticket_watermark":
+                    0 if server is None else int(server._next_ticket),
+                "density": _density_meta(store),
+                "heat": _heat_meta(store),
+                "groups": _groups_meta(store)}
+        parent = self.latest_vid()
+        vid = self.ckpt.save(step=len(self.snapshots()), tree=tree,
+                             parent_vid=parent, meta=meta, bitexact=True)
+        return StoreSnapshot(vid=vid, epoch=meta["epoch"], meta=meta)
+
+    # -- read plane ------------------------------------------------------------
+    def snapshots(self) -> list[int]:
+        """Snapshot vids, oldest first (non-snapshot versions the caller
+        committed into the same CVD are skipped)."""
+        return sorted(
+            int(v) for v, info in self.ckpt.manifest["versions"].items()
+            if info.get("meta", {}).get("kind") == "store-snapshot")
+
+    def latest_vid(self) -> Optional[int]:
+        vids = self.snapshots()
+        return vids[-1] if vids else None
+
+    def restore(self, vid: Optional[int] = None) -> RestoredStore:
+        """Rebuild a live store from snapshot ``vid`` (default: latest).
+
+        The returned store is on the snapshot's epoch with the snapshot's
+        partitioning, heat and density state reattached; the group layout
+        plan is restored with ZERO pinned groups (counters folded — see
+        module docstring), and the first warmup()/wave re-pins lazily."""
+        if vid is None:
+            vid = self.latest_vid()
+            if vid is None:
+                raise ValueError("no snapshots to restore")
+        info = self.ckpt.manifest["versions"][str(vid)]
+        meta = info["meta"]
+        if meta.get("kind") != "store-snapshot":
+            raise ValueError(f"vid {vid} is not a store snapshot")
+        tree = self.ckpt.restore(vid, treedef_like=_TREE_TEMPLATE)
+        graph = BipartiteGraph(
+            indptr=np.asarray(tree["graph_indptr"], np.int64),
+            indices=np.asarray(tree["graph_indices"], np.int64),
+            n_records=int(meta["n_records"]))
+        store = PartitionedCVD(graph, np.asarray(tree["data"]),
+                               np.asarray(tree["assignment"], np.int64))
+        store.epoch = int(meta["epoch"])
+        if meta.get("superblock_max_bytes") is not None:
+            store.superblock_max_bytes = int(meta["superblock_max_bytes"])
+        d = meta.get("density")
+        if d is not None:
+            stats = DensityStats(
+                low_threshold=float(d["low_threshold"]),
+                ewma_alpha=float(d["ewma_alpha"]), waves=int(d["waves"]),
+                tiles=int(d["tiles"]), run_tiles=float(d["run_tiles"]),
+                low_streak=int(d["low_streak"]),
+                last_wave_density=float(d["last_wave_density"]),
+                per_vid={int(v): float(x)
+                         for v, x in d["per_vid"].items()})
+            store._density_stats = stats
+        h = meta.get("heat")
+        if h is not None:
+            pol = HotSetPolicy(alpha=float(h["alpha"]))
+            pol.waves = int(h["waves"])
+            pol.touch_ewma = {int(p): (float(v), int(seen))
+                              for p, (v, seen) in h["ewma"].items()}
+            store._hot_set_policy = pol
+        g = meta.get("groups")
+        if g is not None:
+            mgr = SuperblockGroups(
+                store, int(g["budget"]),
+                block_n=None if g["block_n"] is None else int(g["block_n"]),
+                block_d=None if g["block_d"] is None else int(g["block_d"]))
+            mgr.planned = [tuple(int(q) for q in key)
+                           for key in g["planned"]]
+            for key in mgr.planned:
+                for q in key:
+                    mgr.pid_to_group[q] = key
+            mgr.straggler_pids = set(int(q) for q in g["stragglers"])
+            mgr.pins = int(g["pins"])
+            mgr.evictions = int(g["evictions"])
+            mgr.launches = int(g["launches"])
+            mgr.waves = int(g["waves"])
+            mgr.groups_touched = int(g["groups_touched"])
+            mgr.straggler_requests = int(g["straggler_requests"])
+            mgr.epoch = store.epoch
+            mgr._plan_epoch = store.epoch   # the plan IS this epoch's plan
+            store._superblock_groups = mgr
+            get_hot_set_policy(store, create=True)
+        snap = StoreSnapshot(vid=int(vid), epoch=int(meta["epoch"]),
+                             meta=meta)
+        return RestoredStore(store=store, snapshot=snap,
+                             ticket_watermark=int(
+                                 meta.get("ticket_watermark", 0)))
+
+    def lineage(self, vid: int) -> list[int]:
+        return self.ckpt.lineage(vid)
+
+    def dedup_ratio(self) -> float:
+        return self.ckpt.dedup_ratio()
+
+
+def snapshot_roundtrip_equal(a, b) -> bool:
+    """True iff two stores carry identical persisted state (graph, data,
+    assignment, epoch) — the recovery tests' cheap equality check."""
+    return (int(getattr(a, "epoch", 0)) == int(getattr(b, "epoch", 0))
+            and np.array_equal(a.graph.indptr, b.graph.indptr)
+            and np.array_equal(a.graph.indices, b.graph.indices)
+            and np.array_equal(a.assignment, b.assignment)
+            and np.array_equal(a.data, b.data))

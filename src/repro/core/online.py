@@ -15,6 +15,7 @@ the unit the paper's Figs 14b/15b wall times are proportional to.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Optional
 
@@ -23,6 +24,8 @@ import numpy as np
 from .graph import BipartiteGraph, union_size
 from .lyresplit import lyresplit_for_budget
 from .version_graph import WeightedTree
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -376,13 +379,18 @@ class RepartitionTrigger:
         under the epoch bump, which must never race a launched-but-not-yet
         -delivered kernel."""
         from .checkout import (get_density_stats, migrate_superblock,
-                               take_superblock)
+                               reinstall_superblock, take_superblock)
+        from .faults import fault_point
         from .partition import plan_migration
         if int(getattr(self.store, "_inflight_waves", 0) or 0) > 0:
             return None
         stats = get_density_stats(self.store, create=True)
         if stats is None or stats.low_streak < self.min_waves:
             return None
+        # past the streak gate: the trigger WILL do migration work now.  A
+        # failure from here on leaves the streak intact, so the next
+        # delivered wave simply retries.
+        fault_point("online.trigger", self.store)
         t0 = time.perf_counter()
         gamma = self.gamma_factor * self.store.graph.n_records
         sr = lyresplit_for_budget(self.tree, gamma,
@@ -400,11 +408,26 @@ class RepartitionTrigger:
         n_before = len(self.store.partitions)
         plan = plan_migration(self.store, new_assignment)
         old_sb = take_superblock(self.store)
-        self.store.apply_migration(plan)
+        try:
+            self.store.apply_migration(plan)
+        except BaseException:
+            # apply_migration is transactional (stage -> commit): a failure
+            # means the commit never happened and the store is still on the
+            # old layout — put the detached superblock back so the upload
+            # isn't paid twice, and let the caller retry.
+            reinstall_superblock(self.store, old_sb)
+            raise
         mstats = None
         if old_sb is not None:
-            _, mstats = migrate_superblock(self.store, old_sb, plan,
-                                           use_kernel=self.use_kernel)
+            try:
+                _, mstats = migrate_superblock(self.store, old_sb, plan,
+                                               use_kernel=self.use_kernel)
+            except Exception:
+                # post-commit, so we cannot roll back — degrade: drop the
+                # stale device copy and let the next wave rebuild lazily.
+                old_sb._device = None
+                logger.warning("incremental superblock migration failed; "
+                               "falling back to lazy rebuild", exc_info=True)
         stats.reset()
         report = RepartitionReport(
             at_wave=at_wave, trigger_density=trigger_density,

@@ -110,14 +110,23 @@ class PartitionedCVD:
         the morph and migrated-or-evicted PER GROUP afterwards
         (``core.checkout.migrate_groups`` — device tiles reused, delta-only
         upload), and any attached hot-set ranking is remapped through
-        ``plan.matched_old``."""
+        ``plan.matched_old``.
+
+        TRANSACTIONAL: the morph runs in two halves.  STAGE builds the whole
+        new partition set off to the side, reading but never mutating the
+        store; COMMIT swaps the fields, bumps the epoch and migrates caches.
+        A failure during staging (including an injected ``migration.commit``
+        fault at the boundary) leaves the store bit-identical to its
+        pre-migration state — same epoch, same partitions, same pinned
+        groups — so the caller can simply retry or walk away."""
         from .checkout import (evict_superblocks, migrate_groups,
                                take_group_superblocks)
+        from .faults import fault_point
         if len(plan.assignment) != self.graph.n_versions:
             raise ValueError(
                 f"plan covers {len(plan.assignment)} versions, store has "
                 f"{self.graph.n_versions}")
-        taken_groups = take_group_superblocks(self)
+        # -- STAGE: read-only against the store ------------------------------
         old_parts = self.partitions
         data = self.data
         new_parts: list[Partition] = []
@@ -146,7 +155,11 @@ class PartitionedCVD:
                 block=block, indptr=indptr, indices=indices,
                 vid_to_slot={int(v): k for k, v in enumerate(vids)}))
             vid_to_pid[vids] = i
-        self.assignment = plan.assignment.copy()
+        new_assignment = plan.assignment.copy()
+        fault_point("migration.commit", self)
+        # -- COMMIT: point of no return --------------------------------------
+        taken_groups = take_group_superblocks(self)
+        self.assignment = new_assignment
         self.partitions = new_parts
         self.vid_to_pid = vid_to_pid
         self.epoch += 1

@@ -54,11 +54,24 @@ flusher until the next submit or explicit ``flush()`` (no hot loop
 re-firing a failing gather from ``poll()``); ``serve()`` releases its
 eviction-exempt reservations whenever it raises, so a long-running server
 cannot accrete permanently reserved tickets.
+
+Pass a ``RetryPolicy`` as ``retry`` and the failure paths go from
+re-queue-and-raise to ABSORB: dispatch and delivery get bounded retries
+with exponential backoff under a wall-clock deadline, dispatch walks a
+degradation ladder (configured tier -> perpart -> host gather) whose
+repeatedly failing tiers a per-epoch circuit breaker skips, and a failed
+trigger ``observe()`` is logged and retried at the next delivered wave
+instead of poisoning the delivery.  ``retry=None`` (the default) keeps
+the raise-to-caller semantics above.  Failure sites are catalogued in
+``core.faults`` (``serve.dispatch``, ``serve.delivery``,
+``serve.transfer``) — the recovery suite injects each and asserts the
+delivered stream stays bit-identical to a fault-free run.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import time
 from typing import Callable, Optional, Sequence
 
@@ -67,9 +80,62 @@ import numpy as np
 from ..core.checkout import (_default_use_kernel, _validate_vids,
                              checkout_partitioned, get_superblock,
                              get_superblock_groups)
+from ..core.faults import fault_point, inflight_counter
+
+logger = logging.getLogger(__name__)
 
 LATENCY_WINDOW = 65536     # per-ticket latencies kept for the percentiles
 RETAIN_RESULTS = 256       # unclaimed ticket results kept before eviction
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded-retry configuration for the serve failure paths.
+
+    attempts:   tries PER LADDER TIER before degrading to the next one
+                (delivery has no ladder: ``attempts`` total).
+    backoff_s:  sleep before the first retry, doubling per retry within a
+                tier.
+    deadline_s: wall-clock budget for the whole dispatch/delivery cycle —
+                once exceeded the pending failure propagates (the wave
+                re-queues exactly as with ``retry=None``).  None = no
+                deadline, the attempt counts are the only bound.
+    breaker_threshold: failures of one ladder tier within one store epoch
+                before the circuit breaker skips that tier (an epoch bump
+                — i.e. a migration — resets it: the fault may have died
+                with the old layout).
+    sleep:      injectable for tests (defaults to ``time.sleep``).
+    """
+    attempts: int = 3
+    backoff_s: float = 0.001
+    deadline_s: Optional[float] = None
+    breaker_threshold: int = 3
+    sleep: Callable[[float], None] = time.sleep
+
+
+class TierBreaker:
+    """Per-epoch circuit breaker over the dispatch degradation ladder: a
+    tier that failed ``threshold`` times within the current store epoch is
+    skipped until the epoch bumps (a migration changes the layout the
+    failures were observed under, so the tier earns a fresh chance)."""
+
+    def __init__(self, threshold: int = 3):
+        self.threshold = int(threshold)
+        self._epoch: Optional[int] = None
+        self._failures: dict[str, int] = {}
+
+    def _roll(self, epoch: int) -> None:
+        if epoch != self._epoch:
+            self._epoch = epoch
+            self._failures = {}
+
+    def tripped(self, tier: str, epoch: int) -> bool:
+        self._roll(epoch)
+        return self._failures.get(tier, 0) >= self.threshold
+
+    def record_failure(self, tier: str, epoch: int) -> None:
+        self._roll(epoch)
+        self._failures[tier] = self._failures.get(tier, 0) + 1
 
 
 @dataclasses.dataclass
@@ -81,6 +147,9 @@ class CheckoutStats:
     rows_served: int = 0
     requeues: int = 0          # waves re-queued by a failed dispatch/delivery
     repartitions: int = 0      # density-triggered online repartitions fired
+    retries: int = 0           # failed attempts a RetryPolicy absorbed
+    degraded_waves: int = 0    # waves served by a lower ladder tier
+    trigger_failures: int = 0  # observe() failures absorbed (retried later)
     # partition-group layer (waves an over-budget store served through
     # pinned group superblocks — see core.checkout.SuperblockGroups);
     # counted when the wave DELIVERS, off the delta its dispatch captured
@@ -166,12 +235,18 @@ class BatchedCheckoutServer:
                 a one-wave pipeline bubble at the next flush so an
                 unbroken stream cannot starve the migration; fired
                 repartitions are counted in ``stats.repartitions``.
+    retry:      optional ``RetryPolicy`` — absorbs transient dispatch/
+                delivery/trigger failures with bounded backoff, a
+                degradation ladder and a per-epoch circuit breaker (see
+                the module docstring).  None (default) keeps the
+                raise-to-caller failure semantics.
     """
 
     def __init__(self, store, *, use_kernel: Optional[bool] = None,
                  engine: str = "wave", max_wave: Optional[int] = None,
                  deadline_s: Optional[float] = None,
                  trigger=None, pipeline: bool = True,
+                 retry: Optional[RetryPolicy] = None,
                  clock: Callable[[], float] = time.monotonic):
         if trigger is not None and engine != "wave":
             # density is only recorded by the wave engine; a trigger on the
@@ -185,6 +260,10 @@ class BatchedCheckoutServer:
         self.deadline_s = deadline_s
         self.trigger = trigger
         self.pipeline = pipeline
+        self.retry = retry
+        self._breaker = TierBreaker(retry.breaker_threshold
+                                    if retry is not None else 3)
+        self._closed = False
         self._clock = clock
         self._pending: list[tuple[int, int, float]] = []  # (ticket, vid, t)
         self._next_ticket = 0
@@ -211,6 +290,7 @@ class BatchedCheckoutServer:
         the result with ``result(ticket)``).  May trigger a size-based
         flush.  Re-arms the deadline flusher for a previously failed
         (re-queued) wave: new traffic is the retry signal."""
+        self._check_open()
         # validate HERE so a bad vid raises in the offending client's call
         # instead of poisoning a coalesced flush that carries other clients'
         # requests
@@ -231,6 +311,7 @@ class BatchedCheckoutServer:
         nothing.  A size-triggered flush fires once at the end (the
         coalesced wave may exceed ``max_wave`` — by design: it was one
         ingest).  Returns the tickets in request order."""
+        self._check_open()
         vids = _validate_vids(self.store, vids)
         if not vids:
             return []
@@ -249,7 +330,10 @@ class BatchedCheckoutServer:
         is ready (never blocks on the device), then deadline-flush iff the
         oldest pending request has waited ``deadline_s``.  Returns whether
         a wave was flushed.  A wave re-queued by a failed flush does not
-        re-fire here until a submit or explicit flush() re-arms it."""
+        re-fire here until a submit or explicit flush() re-arms it.
+        A closed server polls False."""
+        if self._closed:
+            return False
         if self._inflight is not None and self._inflight.handle.ready():
             self.deliver()
         if (self._pending and self.deadline_s is not None
@@ -270,6 +354,7 @@ class BatchedCheckoutServer:
         when none was in flight), the just-dispatched wave itself when
         ``pipeline=False``.  Every result is also retained for
         ``result(ticket)`` — ticket-oriented callers are mode-agnostic."""
+        self._check_open()
         wave = self._pending
         self._pending = []
         dispatched = None
@@ -294,9 +379,7 @@ class BatchedCheckoutServer:
             uniq = sorted({v for _, v, _ in wave})
             g0 = self._group_counters()
             try:
-                handle = checkout_partitioned(
-                    self.store, uniq, use_kernel=self.use_kernel,
-                    engine=self.engine, device_out=True)
+                handle = self._dispatch(uniq)
             except BaseException:
                 # a failed gather must not destroy the coalesced wave:
                 # re-queue every request so the tickets stay serviceable,
@@ -349,13 +432,145 @@ class BatchedCheckoutServer:
         self._reserved.discard(ticket)
         return out
 
+    # -- shutdown --------------------------------------------------------------
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("server is closed")
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self, *, deliver: bool = True) -> None:
+        """Drain and shut down.  IDEMPOTENT — a second close is a no-op,
+        and the store-level ``_inflight_waves`` contribution is released
+        exactly once (delta-tracked, so a double close cannot underflow
+        the guarded counter).
+
+        ``deliver=True`` (default) joins the in-flight wave and delivers
+        its results (claimable via ``result`` even after close); a
+        delivery failure is absorbed — ``_deliver_wave`` already re-queued
+        the tickets and rolled back the accounting, and a closed server
+        won't retry them.  ``deliver=False`` re-queues the wave without
+        joining it (the fast shutdown: results are dropped, accounting
+        rolls back as for a delivery failure).  Either way every
+        eviction-exempt reservation is released and submit/flush raise
+        ``RuntimeError`` afterwards (``poll()`` returns False)."""
+        if self._closed:
+            return
+        wave, self._inflight = self._inflight, None
+        if wave is not None:
+            if deliver:
+                try:
+                    self._deliver_wave(wave)
+                except Exception:
+                    logger.warning("delivery during close failed; wave "
+                                   "re-queued undelivered", exc_info=True)
+            else:
+                self._pending = wave.tickets + self._pending
+                self.stats.waves -= 1
+                self.stats.requests -= len(wave.tickets)
+                self.stats.unique_versions -= len(wave.uniq)
+                self.stats.requeues += 1
+        self._sync_inflight_marker()
+        self._reserved.clear()
+        self._closed = True
+
+    def __enter__(self) -> "BatchedCheckoutServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- dispatch plane --------------------------------------------------------
+    def _dispatch(self, uniq: list):
+        """One wave dispatch.  With ``retry=None`` this is exactly the old
+        single ``checkout_partitioned`` call (plus the ``serve.dispatch``
+        fault point) — a failure propagates and ``flush()`` re-queues.
+        With a policy it walks the degradation ladder: the configured tier
+        first, then the perpart engine, then the host gather; each tier
+        gets ``attempts`` tries with doubling backoff, a per-epoch breaker
+        skips tiers that keep failing, and the deadline bounds the whole
+        cycle."""
+        def attempt(engine, use_kernel):
+            fault_point("serve.dispatch", self.store)
+            return checkout_partitioned(
+                self.store, uniq, use_kernel=use_kernel,
+                engine=engine, device_out=True)
+
+        if self.retry is None:
+            return attempt(self.engine, self.use_kernel)
+        tiers: list[tuple[str, str, Optional[bool]]] = []
+        seen: set[tuple] = set()
+        for name, engine, uk in (("kernel", self.engine, self.use_kernel),
+                                 ("perpart", "perpart", self.use_kernel),
+                                 ("host", "perpart", False)):
+            if (engine, uk) not in seen:
+                seen.add((engine, uk))
+                tiers.append((name, engine, uk))
+        epoch = int(getattr(self.store, "epoch", 0))
+        deadline = (None if self.retry.deadline_s is None
+                    else self._clock() + self.retry.deadline_s)
+        last_exc: Optional[BaseException] = None
+        for rank, (name, engine, uk) in enumerate(tiers):
+            if self._breaker.tripped(name, epoch):
+                continue
+            backoff = self.retry.backoff_s
+            for k in range(max(1, self.retry.attempts)):
+                try:
+                    handle = attempt(engine, uk)
+                except Exception as exc:
+                    last_exc = exc
+                    self._breaker.record_failure(name, epoch)
+                    self.stats.retries += 1
+                    if deadline is not None and self._clock() >= deadline:
+                        raise
+                    logger.warning("dispatch attempt %d on tier %r failed; "
+                                   "backing off %.3gs", k, name, backoff,
+                                   exc_info=True)
+                    self.retry.sleep(backoff)
+                    backoff *= 2
+                    continue
+                if rank > 0:
+                    self.stats.degraded_waves += 1
+                return handle
+        raise last_exc if last_exc is not None else RuntimeError(
+            "all dispatch tiers circuit-broken")
+
     # -- delivery plane --------------------------------------------------------
+    def _materialize(self, wave: _InflightWave):
+        """The delivery join (device→host transfer + split).  Retried under
+        the policy — ``InjectedFault``-style transient failures fire BEFORE
+        the handle consumes its device result, so a retry sees consistent
+        state and yields the bit-identical wave."""
+        if self.retry is None:
+            fault_point("serve.delivery", self.store)
+            return wave.handle.materialize()
+        backoff = self.retry.backoff_s
+        deadline = (None if self.retry.deadline_s is None
+                    else self._clock() + self.retry.deadline_s)
+        for k in range(max(1, self.retry.attempts)):
+            try:
+                fault_point("serve.delivery", self.store)
+                return wave.handle.materialize()
+            except Exception:
+                self.stats.retries += 1
+                if (k + 1 >= max(1, self.retry.attempts)
+                        or (deadline is not None
+                            and self._clock() >= deadline)):
+                    raise
+                logger.warning("delivery attempt %d failed; backing off "
+                               "%.3gs", k, backoff, exc_info=True)
+                self.retry.sleep(backoff)
+                backoff *= 2
+        raise AssertionError("unreachable")  # pragma: no cover
+
     def _deliver_wave(self, wave: _InflightWave) -> list[np.ndarray]:
         """The deliver stage for one (already detached) wave.  A delivery
         failure re-queues the wave's tickets and rolls back its dispatch
         accounting, exactly like a dispatch failure."""
         try:
-            mats = wave.handle.materialize()
+            mats = self._materialize(wave)
         except BaseException:
             self._pending = wave.tickets + self._pending
             self._deadline_armed = False
@@ -398,7 +613,20 @@ class BatchedCheckoutServer:
         # causes belong to this delivery's delta.
         if self.trigger is not None and self._inflight is None:
             g0 = self._group_counters()
-            if self.trigger.observe() is not None:
+            try:
+                fired = self.trigger.observe() is not None
+            except Exception:
+                # with a policy, a failed trigger must not poison an
+                # already-delivered wave: the density streak survives the
+                # failure (observe() raises before stats.reset()), so the
+                # NEXT delivered wave simply retries the migration
+                if self.retry is None:
+                    raise
+                self.stats.trigger_failures += 1
+                logger.warning("repartition trigger failed; will retry at "
+                               "next delivered wave", exc_info=True)
+                fired = False
+            if fired:
                 self.stats.repartitions += 1
             g1 = self._group_counters()
             self._apply_group_delta(tuple(b - a for a, b in zip(g0, g1)))
@@ -423,17 +651,19 @@ class BatchedCheckoutServer:
         no-wave-in-flight guard (``core.online.RepartitionTrigger``) holds
         even for out-of-band observe() calls.  ``_inflight_waves`` is a
         COUNT, adjusted by this server's own contribution only — several
-        servers fronting one store must not clear each other's marker."""
+        servers fronting one store must not clear each other's marker.
+        The store-side count is a ``core.faults.GuardedCounter`` (a legacy
+        bare int is upgraded in place): a double-release clamps at zero
+        and is counted instead of silently going negative, which would
+        disarm the trigger's in-flight gate forever."""
         mark = 0 if self._inflight is None else 1
         delta = mark - self._marked
         if not delta:
             return
-        try:
-            self.store._inflight_waves = max(
-                0, int(getattr(self.store, "_inflight_waves", 0) or 0)
-                + delta)
-        except AttributeError:
+        counter = inflight_counter(self.store)
+        if counter is None:
             return
+        counter.adjust(delta)
         self._marked = mark
 
     # -- convenience -----------------------------------------------------------

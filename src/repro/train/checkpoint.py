@@ -26,7 +26,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from ..core.datamodels import SplitByRlist
+from ..core.datamodels import SplitByRlist, _raw_keys
 
 
 def _flatten_with_paths(tree):
@@ -59,27 +59,59 @@ class CheckpointStore:
 
     # -- save ------------------------------------------------------------------
     def save(self, step: int, tree: Any, parent_vid: Optional[int] = None,
-             meta: Optional[dict] = None) -> int:
+             meta: Optional[dict] = None, bitexact: bool = False) -> int:
+        """Commit the pytree as a new checkpoint version.
+
+        ``bitexact=False`` (default, the param-tree path) casts every leaf
+        to fp32 before sharding — fine for training state, LOSSY for wide
+        integers.  ``bitexact=True`` shards each leaf's raw bytes instead
+        (uint8 view, zero-padded to int32 words): any dtype round-trips
+        exactly — what ``core.durability`` needs for int64 rid arrays —
+        at the cost of dedup granularity staying byte-block-level."""
         paths, leaves, _ = _flatten_with_paths(tree)
         rows = []
         layout = []
         for path, leaf in zip(paths, leaves):
-            arr = np.asarray(jax.device_get(leaf)).astype(np.float32).ravel()
+            entry = {"path": path, "shape": list(np.shape(leaf)),
+                     "dtype": str(np.asarray(leaf).dtype)}
+            if bitexact:
+                raw = np.ascontiguousarray(
+                    np.asarray(jax.device_get(leaf))).view(np.uint8).ravel()
+                nbytes = len(raw)
+                n_words = -(-max(nbytes, 1) // 4)
+                padded8 = np.zeros(n_words * 4, np.uint8)
+                padded8[:nbytes] = raw
+                arr = padded8.view(np.int32)
+                entry["nbytes"] = nbytes
+                entry["encoding"] = "raw"
+            else:
+                arr = np.asarray(
+                    jax.device_get(leaf)).astype(np.float32).ravel()
             n_blocks = max(1, -(-len(arr) // self.shard_rows))
-            padded = np.zeros(n_blocks * self.shard_rows, np.float32)
+            padded = np.zeros(n_blocks * self.shard_rows, arr.dtype)
             padded[:len(arr)] = arr
             blocks = padded.reshape(n_blocks, self.shard_rows)
             rows.append(blocks)
-            layout.append({"path": path, "shape": list(np.shape(leaf)),
-                           "dtype": str(np.asarray(leaf).dtype),
-                           "n_blocks": n_blocks})
+            entry["n_blocks"] = n_blocks
+            layout.append(entry)
         table = np.concatenate(rows, axis=0)
-        # CVD records are int32 rows; reinterpret the fp32 payload bitwise
-        table_i32 = table.view(np.int32)
+        # CVD records are int32 rows; reinterpret the payload bitwise
+        table_i32 = table if table.dtype == np.int32 else table.view(np.int32)
         parents = () if parent_vid is None else (parent_vid,)
         vid = self.cvd.commit(table_i32, parents=parents, t=float(step))
-        self.manifest["versions"][str(vid)] = {
-            "step": step, "layout": layout, "meta": meta or {}}
+        entry = {"step": step, "layout": layout, "meta": meta or {}}
+        # checkout() returns rows in sorted-RID order, which differs from
+        # commit row order whenever rows partially dedup against a parent
+        # (kept rows reuse old/small rids, new rows append large ones) —
+        # restoring by layout offsets would scramble the leaves.  Record
+        # the permutation back to commit order when they diverge.
+        co = self.cvd.checkout(vid)
+        if not np.array_equal(co, table_i32):
+            ck, tk = _raw_keys(co), _raw_keys(table_i32)
+            order = np.argsort(ck, kind="stable")
+            pos = np.searchsorted(ck[order], tk)
+            entry["row_perm"] = order[pos].tolist()
+        self.manifest["versions"][str(vid)] = entry
         self._persist()
         return vid
 
@@ -89,14 +121,25 @@ class CheckpointStore:
         """Rebuild the pytree; if mesh+specs given, device_put each leaf with
         its NamedSharding (elastic: any mesh shape works)."""
         info = self.manifest["versions"][str(vid)]
-        table = self.cvd.checkout(vid).view(np.float32)
+        table_i32 = self.cvd.checkout(vid)
+        if "row_perm" in info:
+            table_i32 = table_i32[np.asarray(info["row_perm"], np.int64)]
+        table_f32 = table_i32.view(np.float32)
         leaves = []
         off = 0
         for entry in info["layout"]:
-            n = int(np.prod(entry["shape"])) if entry["shape"] else 1
-            blocks = table[off:off + entry["n_blocks"]]
-            flat = blocks.ravel()[:n]
-            arr = flat.reshape(entry["shape"]).astype(entry["dtype"])
+            if entry.get("encoding") == "raw":
+                raw = np.ascontiguousarray(
+                    table_i32[off:off + entry["n_blocks"]]
+                ).view(np.uint8).ravel()[:entry["nbytes"]]
+                arr = np.frombuffer(
+                    raw.tobytes(), dtype=entry["dtype"]
+                ).reshape(entry["shape"])
+            else:
+                n = int(np.prod(entry["shape"])) if entry["shape"] else 1
+                blocks = table_f32[off:off + entry["n_blocks"]]
+                flat = blocks.ravel()[:n]
+                arr = flat.reshape(entry["shape"]).astype(entry["dtype"])
             leaves.append(arr)
             off += entry["n_blocks"]
         if treedef_like is not None:
@@ -120,7 +163,17 @@ class CheckpointStore:
         return self.cvd.storage_cells() / max(naive, 1)
 
     def _persist(self):
-        with open(self._cvd_path, "wb") as f:
-            pickle.dump(self.cvd, f)
-        with open(self._manifest_path, "w") as f:
-            json.dump(self.manifest, f)
+        # atomic (tmp + rename): a process killed mid-write must leave the
+        # previous checkpoint generation readable — core.durability's
+        # restore() contract depends on it
+        for path, write in ((self._cvd_path,
+                             lambda f: pickle.dump(self.cvd, f)),
+                            (self._manifest_path,
+                             lambda f: f.write(
+                                 json.dumps(self.manifest).encode()))):
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                write(f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)

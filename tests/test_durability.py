@@ -1,0 +1,217 @@
+"""Crash-safe store durability: snapshot/restore round-trips of the
+version graph, partitioning, heat and density state; bitexact checkpoint
+encoding; atomic persistence; content dedup across parent-chained
+snapshots; and the snapshot->kill->restore-mid-migration acceptance cycle
+from ISSUE 6."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.checkout import (checkout_wave, estimate_superblock_bytes,
+                                 get_density_stats, get_superblock_groups)
+from repro.core.durability import StoreDurability, snapshot_roundtrip_equal
+from repro.core.faults import FaultPlan, InjectedFault
+from repro.core.graph import BipartiteGraph
+from repro.core.online import RepartitionTrigger, get_hot_set_policy
+from repro.core.partition import PartitionedCVD
+from repro.core.version_graph import WeightedTree
+from repro.train.checkpoint import CheckpointStore
+
+
+def _scattered_store(seed=7, n_versions=12, n_records=512, size=24,
+                     n_attrs=8):
+    rng = np.random.default_rng(seed)
+    rls = [np.sort(rng.choice(n_records, size,
+                              replace=False)).astype(np.int64)
+           for _ in range(n_versions)]
+    graph = BipartiteGraph.from_rlists(rls, n_records=n_records)
+    data = rng.integers(0, 1 << 20, (n_records, n_attrs)).astype(np.int32)
+    store = PartitionedCVD(graph, data, np.zeros(n_versions, np.int64))
+    tree = WeightedTree(
+        parent=np.concatenate([[-1], np.zeros(n_versions - 1, np.int64)]),
+        n_records=np.array([len(r) for r in rls], np.int64),
+        edge_w=np.zeros(n_versions, np.int64))
+    return store, tree, graph, data
+
+
+# ------------------------------------------------------ bitexact encoding --
+@pytest.mark.parametrize("dtype", [np.int64, np.int32, np.float64,
+                                   np.float32, np.uint8])
+def test_checkpoint_bitexact_roundtrip(tmp_path, dtype, rng):
+    """The raw encoding must round-trip ANY dtype exactly — int64 rid
+    arrays are precisely what the fp32 cast would corrupt."""
+    ck = CheckpointStore(str(tmp_path), shard_rows=64)
+    if np.issubdtype(dtype, np.integer):
+        leaf = rng.integers(np.iinfo(dtype).min // 2,
+                            np.iinfo(dtype).max // 2,
+                            (37, 3)).astype(dtype)
+    else:
+        leaf = rng.standard_normal((37, 3)).astype(dtype)
+    tree = {"a": leaf, "b": np.arange(5, dtype=dtype)}
+    vid = ck.save(0, tree, bitexact=True)
+    got = ck.restore(vid, treedef_like={"a": 0, "b": 0})
+    assert got["a"].dtype == dtype
+    np.testing.assert_array_equal(got["a"], leaf)
+    np.testing.assert_array_equal(got["b"], tree["b"])
+
+
+def test_checkpoint_int64_survives_values_fp32_would_mangle(tmp_path):
+    ck = CheckpointStore(str(tmp_path), shard_rows=32)
+    big = np.array([2**53 + 1, -(2**53) - 3, 2**62], np.int64)
+    vid = ck.save(0, {"rids": big}, bitexact=True)
+    got = ck.restore(vid, treedef_like={"rids": 0})
+    np.testing.assert_array_equal(got["rids"], big)
+
+
+def test_persist_is_atomic_no_tmp_left(tmp_path):
+    ck = CheckpointStore(str(tmp_path))
+    ck.save(0, {"x": np.arange(4, dtype=np.float32)})
+    names = set(os.listdir(tmp_path))
+    assert not any(n.endswith(".tmp") for n in names)
+    assert {"cvd.pkl", "manifest.json"} <= names
+
+
+# ------------------------------------------------------ store round-trip --
+def test_snapshot_restore_roundtrip_full_state(tmp_path):
+    store, tree, graph, data = _scattered_store()
+    store.repartition(np.arange(graph.n_versions) % 4)
+    store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+    mgr = get_superblock_groups(store, budget=store.superblock_max_bytes,
+                                create=True)
+    mgr.warm(device=False)
+    pol = get_hot_set_policy(store, create=True)
+    pol.touch([0, 1])
+    pol.touch([1])
+    stats = get_density_stats(store, create=True)
+    stats.record([1, 5], np.array([0.2, 0.4]), np.array([3, 5]))
+
+    dur = StoreDurability(str(tmp_path))
+    snap = dur.snapshot(store)
+    rs = dur.restore()
+    assert rs.snapshot.vid == snap.vid
+    assert snapshot_roundtrip_equal(store, rs.store)
+    assert rs.store.epoch == store.epoch
+    # heat EWMAs carry over exactly
+    pol2 = get_hot_set_policy(rs.store)
+    assert pol2.alpha == pol.alpha and pol2.waves == pol.waves
+    assert pol2.touch_ewma == pol.touch_ewma
+    # density streak + per-vid EWMAs carry over exactly
+    st2 = get_density_stats(rs.store)
+    assert st2.low_streak == stats.low_streak
+    assert st2.per_vid == stats.per_vid
+    assert st2.last_wave_density == stats.last_wave_density
+    # group layout restored with zero pinned groups, counters balanced
+    mgr2 = get_superblock_groups(rs.store)
+    assert mgr2.planned == mgr.planned
+    assert mgr2.straggler_pids == mgr.straggler_pids
+    assert mgr2.budget == mgr.budget
+    assert len(mgr2.groups) == 0
+    assert mgr2.pins - mgr2.evictions == len(mgr2.groups) == 0
+    # checkouts identical
+    for v in range(graph.n_versions):
+        np.testing.assert_array_equal(rs.store.checkout(v),
+                                      data[graph.rlist(v)])
+
+
+def test_restored_warmup_repins_lazily(tmp_path):
+    """Device/host superblocks are NOT persisted: the first warmup of a
+    restored server re-pins the planned groups under the same budget."""
+    store, tree, graph, data = _scattered_store()
+    store.repartition(np.arange(graph.n_versions) % 4)
+    store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+    mgr = get_superblock_groups(store, budget=store.superblock_max_bytes,
+                                create=True)
+    mgr.warm(device=False)
+    assert len(mgr.groups) > 0
+    dur = StoreDurability(str(tmp_path))
+    dur.snapshot(store)
+    rs = dur.restore()
+    srv = rs.make_server(use_kernel=False)
+    mgr2 = get_superblock_groups(rs.store)
+    assert len(mgr2.groups) == 0                     # cold after restore
+    srv.warmup()
+    assert len(mgr2.groups) > 0                      # lazily re-pinned
+    assert mgr2.pins - mgr2.evictions == len(mgr2.groups)
+    outs = srv.serve([2, 7, 9])
+    for v, m in zip([2, 7, 9], outs):
+        np.testing.assert_array_equal(np.asarray(m), data[graph.rlist(v)])
+    srv.close()
+
+
+def test_ticket_watermark_restored(tmp_path):
+    store, tree, graph, data = _scattered_store()
+    from repro.serve.checkout import BatchedCheckoutServer
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    tickets = [srv.submit(v) for v in (1, 2, 3)]
+    srv.flush()
+    dur = StoreDurability(str(tmp_path))
+    dur.snapshot(store, server=srv)
+    rs = dur.restore()
+    srv2 = rs.make_server(use_kernel=False)
+    t = srv2.submit(4)
+    assert t >= srv._next_ticket                     # no collision
+    assert t > max(tickets)
+    srv.close()
+    srv2.close()
+
+
+def test_snapshots_parent_chain_and_dedup(tmp_path):
+    """Consecutive snapshots dedup unchanged rows through the checkpoint
+    CVD's split-by-rlist model: two identical snapshots cost ~one."""
+    store, tree, graph, data = _scattered_store()
+    dur = StoreDurability(str(tmp_path))
+    s0 = dur.snapshot(store)
+    s1 = dur.snapshot(store)
+    assert dur.snapshots() == [s0.vid, s1.vid]
+    assert s0.vid in dur.lineage(s1.vid)
+    assert dur.dedup_ratio() <= 0.55                 # ~2x stored once
+
+
+def test_restore_empty_raises(tmp_path):
+    dur = StoreDurability(str(tmp_path))
+    with pytest.raises(ValueError):
+        dur.restore()
+
+
+# ------------------------------------- the mid-migration kill/restore bar --
+def test_snapshot_kill_restore_mid_migration(tmp_path):
+    """ISSUE 6 acceptance: snapshot -> injected crash at the migration
+    commit point -> the live store is still pre-migration AND the restored
+    store matches it (epoch, partitioning, heat, balanced pins); after the
+    retried migration a second snapshot restores the POST-migration
+    state."""
+    store, tree, graph, data = _scattered_store()
+    trig = RepartitionTrigger(store, tree, min_waves=2, use_kernel=False)
+    for _ in range(2):
+        checkout_wave(store, [0, 3, 7, 11], use_kernel=False)
+    pol = get_hot_set_policy(store, create=True)
+    pol.touch([0])
+    dur = StoreDurability(str(tmp_path))
+    dur.snapshot(store)
+    epoch0 = store.epoch
+
+    with FaultPlan.single("migration.commit").armed():
+        with pytest.raises(InjectedFault):
+            trig.observe()                           # the "crash"
+    assert store.epoch == epoch0                     # commit never landed
+
+    rs = dur.restore()
+    assert snapshot_roundtrip_equal(store, rs.store)
+    assert get_hot_set_policy(rs.store).touch_ewma == pol.touch_ewma
+    assert get_density_stats(rs.store).low_streak >= 2  # streak survives
+
+    # the RESTORED store's trigger picks the migration back up
+    trig2 = RepartitionTrigger(rs.store, tree, min_waves=2,
+                               use_kernel=False)
+    rep = trig2.observe()
+    assert rep is not None and rs.store.epoch == epoch0 + 1
+    for v in range(graph.n_versions):
+        np.testing.assert_array_equal(rs.store.checkout(v),
+                                      data[graph.rlist(v)])
+
+    # post-migration snapshot restores the NEW layout
+    dur.snapshot(rs.store)
+    rs2 = dur.restore()
+    assert rs2.store.epoch == epoch0 + 1
+    assert snapshot_roundtrip_equal(rs.store, rs2.store)

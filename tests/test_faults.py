@@ -1,0 +1,405 @@
+"""Deterministic fault injection across the serve/migration pipeline:
+single-fault recovery (delivered stream bit-identical to the fault-free
+oracle), the guarded in-flight counter, server drain/shutdown, the
+transactional apply_migration stage->commit boundary, and the retry /
+degradation-ladder / circuit-breaker machinery that absorbs the faults.
+
+``REPRO_FAULT_SEED`` (CI fault matrix) selects the seeded pseudo-random
+schedule exercised by the seeded-plan test."""
+import contextlib
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.checkout import (estimate_superblock_bytes,
+                                 get_density_stats, get_superblock,
+                                 get_superblock_groups)
+from repro.core.faults import (SITES, FaultPlan, GuardedCounter,
+                               InjectedFault, inflight_counter)
+from repro.core.graph import BipartiteGraph
+from repro.core.online import RepartitionTrigger
+from repro.core.partition import PartitionedCVD, plan_migration
+from repro.core.version_graph import WeightedTree
+from repro.serve.checkout import (BatchedCheckoutServer, RetryPolicy,
+                                  TierBreaker)
+
+SEED = int(os.environ.get("REPRO_FAULT_SEED", "0"))
+
+# the serve stream every recovery run replays (deterministic: the oracle
+# and the faulted run must request identical waves)
+WAVES = ([0, 3, 7, 11], [1, 4, 8], [2, 5, 9, 11], [0, 6, 10], [3, 7, 1])
+
+
+def _scattered_store(seed=7, n_versions=12, n_records=512, size=24,
+                     n_attrs=8):
+    """Low-density store + version tree (same shape the pipelined-serve
+    suite uses): scattered rlists trip the density trigger mid-stream, so
+    one run exercises dispatch, delivery, migration and the group layer."""
+    rng = np.random.default_rng(seed)
+    rls = [np.sort(rng.choice(n_records, size,
+                              replace=False)).astype(np.int64)
+           for _ in range(n_versions)]
+    graph = BipartiteGraph.from_rlists(rls, n_records=n_records)
+    data = rng.integers(0, 1 << 20, (n_records, n_attrs)).astype(np.int32)
+    store = PartitionedCVD(graph, data, np.zeros(n_versions, np.int64))
+    tree = WeightedTree(
+        parent=np.concatenate([[-1], np.zeros(n_versions - 1, np.int64)]),
+        n_records=np.array([len(r) for r in rls], np.int64),
+        edge_w=np.zeros(n_versions, np.int64))
+    return store, tree, graph, data
+
+
+def _run_stream(*, budget=None, plan=None, retry=None, use_kernel=True):
+    """One full serve run over WAVES with a trigger attached; returns
+    (server, store, delivered outputs per wave)."""
+    store, tree, graph, data = _scattered_store()
+    if budget == "third":
+        store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+    trig = RepartitionTrigger(store, tree, min_waves=2,
+                              use_kernel=use_kernel)
+    srv = BatchedCheckoutServer(store, use_kernel=use_kernel, trigger=trig,
+                                retry=retry)
+    srv.warmup()
+    outs = []
+    ctx = plan.armed() if plan is not None else contextlib.nullcontext()
+    with ctx:
+        for vids in WAVES:
+            outs.append([np.asarray(m) for m in srv.serve(vids)])
+        srv.close()
+    return srv, store, outs
+
+
+def _assert_balanced(srv, store):
+    """The recovery invariants: marker drained with zero underflows, no
+    lingering reservations, group pins/evictions balanced."""
+    assert int(getattr(store, "_inflight_waves", 0) or 0) == 0
+    cnt = getattr(store, "_inflight_waves", None)
+    if isinstance(cnt, GuardedCounter):
+        assert cnt.underflows == 0
+    assert srv._reserved == set()
+    mgr = get_superblock_groups(store)
+    if mgr is not None:
+        assert mgr.pins - mgr.evictions == len(mgr.groups)
+        assert mgr.pinned_bytes <= mgr.budget
+
+
+@pytest.fixture(scope="module")
+def oracles():
+    """Fault-free reference streams, one per budget config (module-scoped:
+    the 20-way sweep below reuses them)."""
+    out = {}
+    for budget in (None, "third"):
+        _, _, outs = _run_stream(budget=budget)
+        out[budget] = outs
+    return out
+
+
+# ------------------------------------------------- single-fault recovery --
+@pytest.mark.parametrize("budget", [None, "third"])
+@pytest.mark.parametrize("site", SITES)
+def test_single_fault_stream_bit_identical(site, budget, oracles):
+    """ISSUE 6's acceptance bar: any single injected fault at any
+    catalogued site — the delivered stream is bit-identical to the
+    fault-free run, and every counter balances after close()."""
+    plan = FaultPlan.single(site)
+    srv, store, outs = _run_stream(
+        budget=budget, plan=plan, retry=RetryPolicy(sleep=lambda s: None))
+    oracle = oracles[budget]
+    assert len(outs) == len(oracle)
+    for got, want in zip(outs, oracle):
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+    _assert_balanced(srv, store)
+    # the absorbed fault must be visible in telemetry, not silent
+    if plan.fired:
+        assert (srv.stats.retries + srv.stats.trigger_failures
+                + srv.stats.requeues) > 0 or site in (
+                    "migrate.superblock", "group.evict", "group.pin",
+                    "migration.commit", "online.trigger")
+
+
+def test_fault_sweep_actually_fires_the_serve_sites(oracles):
+    """Guard against the sweep silently testing nothing: the serve-layer
+    sites are hit on every stream, so their single-fault plans must have
+    fired."""
+    for site in ("serve.dispatch", "serve.delivery"):
+        plan = FaultPlan.single(site)
+        _run_stream(plan=plan, retry=RetryPolicy(sleep=lambda s: None))
+        assert [r.site for r in plan.fired] == [site]
+
+
+def test_seeded_plan_stream_stays_correct(oracles):
+    """The CI fault-matrix entry: REPRO_FAULT_SEED selects a deterministic
+    pseudo-random schedule; whatever it injects, the stream stays
+    bit-identical to the oracle."""
+    plan = FaultPlan.seeded(SEED)
+    srv, store, outs = _run_stream(
+        plan=plan, retry=RetryPolicy(sleep=lambda s: None))
+    for got, want in zip(outs, oracles[None]):
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+    _assert_balanced(srv, store)
+
+
+def test_seeded_plan_is_deterministic():
+    a = FaultPlan.seeded(3, max_faults=None)
+    b = FaultPlan.seeded(3, max_faults=None)
+    assert a.schedule == b.schedule and a.schedule
+    assert FaultPlan.seeded(4, max_faults=None).schedule != a.schedule
+
+
+def test_fault_without_retry_requeues_and_recovers():
+    """retry=None keeps PR 5's failure semantics: the injected dispatch
+    fault propagates, the wave re-queues, and the next flush serves it."""
+    store, tree, graph, data = _scattered_store()
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    t = srv.submit(3)
+    with FaultPlan.single("serve.dispatch").armed():
+        with pytest.raises(InjectedFault):
+            srv.flush()
+    assert srv.stats.requeues == 1 and srv._pending
+    srv.flush()
+    np.testing.assert_array_equal(srv.result(t), data[graph.rlist(3)])
+
+
+def test_unknown_site_rejected():
+    with pytest.raises(ValueError):
+        FaultPlan({"no.such.site": [0]})
+    with pytest.raises(ValueError):
+        FaultPlan.seeded(0, sites=["no.such.site"])
+
+
+# ------------------------------------------------------- guarded counter --
+def test_guarded_counter_clamps_and_counts_underflow():
+    c = GuardedCounter(1)
+    assert c.decr() == 0 and c.underflows == 0
+    assert c.decr() == 0 and c.underflows == 1       # clamped, not -1
+    assert int(c) == 0 and not c and c == 0
+    c.incr(2)
+    assert c == 2 and bool(c)
+    assert c.adjust(-1) == 1 and c.adjust(1) == 2
+
+
+def test_guarded_counter_strict_raises():
+    c = GuardedCounter(0, strict=True)
+    with pytest.raises(RuntimeError):
+        c.decr()
+    with pytest.raises(ValueError):
+        GuardedCounter(-1)
+
+
+def test_double_release_regression():
+    """The regression ISSUE 6 names: a double server release must clamp
+    the store marker at zero (a silently negative count disarms the
+    trigger's in-flight gate forever)."""
+    store, tree, graph, data = _scattered_store()
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    srv.submit(1)
+    srv.flush()
+    assert store._inflight_waves == 1
+    # simulate an out-of-band release racing the server's own
+    inflight_counter(store).decr()
+    srv.deliver()                                    # server's own release
+    cnt = store._inflight_waves
+    assert isinstance(cnt, GuardedCounter)
+    assert cnt == 0 and cnt.underflows == 1          # clamped, counted
+
+
+def test_inflight_counter_upgrades_legacy_int():
+    class Store:
+        pass
+    s = Store()
+    s._inflight_waves = 2                            # legacy bare int
+    c = inflight_counter(s)
+    assert isinstance(c, GuardedCounter) and c == 2
+    assert inflight_counter(s) is c                  # idempotent upgrade
+    assert int(getattr(s, "_inflight_waves", 0) or 0) == 2
+
+
+# ------------------------------------------------------- server shutdown --
+def test_close_delivers_inflight_and_is_idempotent():
+    store, tree, graph, data = _scattered_store()
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    t = srv.submit(5)
+    srv.flush()
+    assert store._inflight_waves == 1
+    srv.close()
+    assert store._inflight_waves == 0 and srv.closed
+    np.testing.assert_array_equal(srv.result(t), data[graph.rlist(5)])
+    srv.close()                                      # idempotent
+    assert store._inflight_waves == 0
+    assert isinstance(store._inflight_waves, GuardedCounter)
+    assert store._inflight_waves.underflows == 0
+    with pytest.raises(RuntimeError):
+        srv.submit(1)
+    with pytest.raises(RuntimeError):
+        srv.flush()
+    assert srv.poll() is False
+
+
+def test_close_requeue_mode_rolls_back_accounting():
+    store, tree, graph, data = _scattered_store()
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    srv.submit(2)
+    srv.flush()
+    waves_before = srv.stats.waves
+    srv.close(deliver=False)
+    assert srv.stats.waves == waves_before - 1
+    assert srv.stats.requeues == 1 and srv._pending
+    assert store._inflight_waves == 0
+    assert srv._reserved == set()
+
+
+def test_close_releases_reservations():
+    store, tree, graph, data = _scattered_store()
+    srv = BatchedCheckoutServer(store, use_kernel=False)
+    srv._reserved.add(99)
+    srv.close()
+    assert srv._reserved == set()
+
+
+# ---------------------------------------------- transactional migration --
+def _migrated_assignment(store, tree):
+    from repro.core.lyresplit import lyresplit_for_budget
+    sr = lyresplit_for_budget(tree, 2.0 * store.graph.n_records,
+                              max_iters=8)
+    return sr.best.assignment
+
+
+def test_apply_migration_commit_fault_leaves_store_intact():
+    """A failure at the stage->commit boundary leaves the store
+    bit-identical to its pre-migration state: same epoch, same partition
+    objects, pinned groups untouched — then a bare retry commits."""
+    store, tree, graph, data = _scattered_store()
+    # multi-partition start: a single all-records partition would exceed
+    # the third-budget outright and pin nothing
+    store.repartition(np.arange(graph.n_versions) % 4)
+    store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+    mgr = get_superblock_groups(store, budget=store.superblock_max_bytes,
+                                create=True)
+    mgr.warm(device=False)
+    pinned_before = len(mgr.groups)
+    assert pinned_before > 0
+    pins0, ev0 = mgr.pins, mgr.evictions
+    plan = plan_migration(store, _migrated_assignment(store, tree))
+    epoch0 = store.epoch
+    parts0 = store.partitions
+    assignment0 = store.assignment.copy()
+    with FaultPlan.single("migration.commit").armed():
+        with pytest.raises(InjectedFault):
+            store.apply_migration(plan)
+    assert store.epoch == epoch0
+    assert store.partitions is parts0
+    np.testing.assert_array_equal(store.assignment, assignment0)
+    assert len(mgr.groups) == pinned_before          # zero leaked pins
+    assert (mgr.pins, mgr.evictions) == (pins0, ev0)
+    store.apply_migration(plan)                      # bare retry commits
+    assert store.epoch == epoch0 + 1
+    for v in range(graph.n_versions):
+        np.testing.assert_array_equal(store.checkout(v),
+                                      data[graph.rlist(v)])
+    assert mgr.pins - mgr.evictions == len(mgr.groups)
+
+
+def test_observe_rollback_reinstalls_superblock():
+    """A commit fault inside the trigger must put the detached whole-store
+    superblock back (epoch unchanged -> the upload is not paid twice)."""
+    store, tree, graph, data = _scattered_store()
+    trig = RepartitionTrigger(store, tree, min_waves=2, use_kernel=False)
+    from repro.core.checkout import checkout_wave
+    for _ in range(2):
+        checkout_wave(store, [0, 3, 7, 11], use_kernel=False)
+    sb, _ = get_superblock(store)
+    assert sb is not None
+    with FaultPlan.single("migration.commit").armed():
+        with pytest.raises(InjectedFault):
+            trig.observe()
+    sb2, _ = get_superblock(store)
+    assert sb2 is sb                                 # reinstalled, not rebuilt
+    assert get_density_stats(store).low_streak >= 2  # streak preserved
+    rep = trig.observe()                             # retry fires clean
+    assert rep is not None
+
+
+# ------------------------------------------------- retry policy, breaker --
+def test_retry_backoff_doubles_and_deadline_raises():
+    store, tree, graph, data = _scattered_store()
+    sleeps = []
+    retry = RetryPolicy(attempts=3, backoff_s=0.01, sleep=sleeps.append)
+    srv = BatchedCheckoutServer(store, use_kernel=False, retry=retry)
+    srv.submit(1)
+    with FaultPlan({"serve.dispatch": [0, 1]}, max_faults=2).armed():
+        srv.flush()
+    assert sleeps == [0.01, 0.02]                    # exponential backoff
+    assert srv.stats.retries == 2 and srv.stats.requeues == 0
+
+    # deadline: a clock that jumps past the budget on first failure
+    store2, tree2, _, _ = _scattered_store()
+    now = [0.0]
+    retry2 = RetryPolicy(attempts=5, backoff_s=0.01, deadline_s=0.5,
+                         sleep=lambda s: now.__setitem__(0, now[0] + 1.0))
+    srv2 = BatchedCheckoutServer(store2, use_kernel=False, retry=retry2,
+                                 clock=lambda: now[0])
+    srv2.submit(1)
+    with FaultPlan({"serve.dispatch": [0, 1]}, max_faults=2).armed():
+        with pytest.raises(InjectedFault):
+            srv2.flush()
+    assert srv2.stats.requeues == 1                  # wave re-queued
+
+
+def test_dispatch_ladder_degrades_and_breaker_skips():
+    """A tier that exhausts its attempts degrades to the next one; once
+    its per-epoch failure count trips the breaker the tier is skipped
+    outright, and an epoch bump re-arms it."""
+    store, tree, graph, data = _scattered_store()
+    retry = RetryPolicy(attempts=2, backoff_s=0.0, breaker_threshold=2,
+                        sleep=lambda s: None)
+    srv = BatchedCheckoutServer(store, use_kernel=False, retry=retry)
+    t = srv.submit(1)
+    # kernel-tier hits 0 and 1 fail -> tier exhausted -> perpart serves
+    with FaultPlan({"serve.dispatch": [0, 1]}, max_faults=2).armed():
+        srv.flush()
+    np.testing.assert_array_equal(srv.result(t), data[graph.rlist(1)])
+    assert srv.stats.degraded_waves == 1 and srv.stats.retries == 2
+    # breaker now trips the kernel tier: next wave degrades with NO retry
+    t = srv.submit(2)
+    srv.flush()
+    np.testing.assert_array_equal(srv.result(t), data[graph.rlist(2)])
+    assert srv.stats.degraded_waves == 2 and srv.stats.retries == 2
+    # an epoch bump re-arms the tier: served on rank 0, no degradation
+    store.epoch += 1
+    t = srv.submit(3)
+    srv.flush()
+    np.testing.assert_array_equal(srv.result(t), data[graph.rlist(3)])
+    assert srv.stats.degraded_waves == 2
+
+
+def test_tier_breaker_unit():
+    b = TierBreaker(threshold=2)
+    assert not b.tripped("kernel", 0)
+    b.record_failure("kernel", 0)
+    b.record_failure("kernel", 0)
+    assert b.tripped("kernel", 0)
+    assert not b.tripped("perpart", 0)
+    assert not b.tripped("kernel", 1)                # epoch bump resets
+
+
+def test_trigger_failure_absorbed_and_retried():
+    """With a policy, a failed observe() is counted and the streak
+    survives, so the NEXT delivered wave retries the migration."""
+    store, tree, graph, data = _scattered_store()
+    trig = RepartitionTrigger(store, tree, min_waves=2, use_kernel=False)
+    srv = BatchedCheckoutServer(
+        store, use_kernel=False, trigger=trig,
+        retry=RetryPolicy(sleep=lambda s: None))
+    with FaultPlan.single("online.trigger").armed():
+        for vids in WAVES:
+            srv.serve(vids)
+        srv.close()
+    assert srv.stats.trigger_failures == 1
+    assert srv.stats.repartitions == 1               # retried and landed
+    for v in range(graph.n_versions):
+        np.testing.assert_array_equal(store.checkout(v),
+                                      data[graph.rlist(v)])

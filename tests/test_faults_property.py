@@ -1,0 +1,107 @@
+"""Property suite: a RANDOM single-fault schedule against a random serve
+stream delivers results bit-identical to the fault-free oracle, with the
+reservation / pin / eviction / in-flight counters balanced after
+recovery and close().  Hypothesis drives the (site, hit index, budget,
+stream) space; the oracle for each drawn stream is computed fault-free
+in the same example."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.checkout import (estimate_superblock_bytes,
+                                 get_superblock_groups)
+from repro.core.faults import SITES, FaultPlan, GuardedCounter
+from repro.core.graph import BipartiteGraph
+from repro.core.online import RepartitionTrigger
+from repro.core.partition import PartitionedCVD
+from repro.core.version_graph import WeightedTree
+from repro.serve.checkout import BatchedCheckoutServer, RetryPolicy
+
+N_VERSIONS = 10
+N_RECORDS = 256
+
+
+def _store(seed=5):
+    rng = np.random.default_rng(seed)
+    rls = [np.sort(rng.choice(N_RECORDS, 20,
+                              replace=False)).astype(np.int64)
+           for _ in range(N_VERSIONS)]
+    graph = BipartiteGraph.from_rlists(rls, n_records=N_RECORDS)
+    data = rng.integers(0, 1 << 20, (N_RECORDS, 6)).astype(np.int32)
+    store = PartitionedCVD(graph, data,
+                           np.zeros(N_VERSIONS, np.int64))
+    tree = WeightedTree(
+        parent=np.concatenate([[-1], np.zeros(N_VERSIONS - 1, np.int64)]),
+        n_records=np.array([len(r) for r in rls], np.int64),
+        edge_w=np.zeros(N_VERSIONS, np.int64))
+    return store, tree, graph, data
+
+
+def _run(stream, *, budget, plan=None):
+    store, tree, graph, data = _store()
+    if budget:
+        store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+    trig = RepartitionTrigger(store, tree, min_waves=2, use_kernel=False)
+    srv = BatchedCheckoutServer(
+        store, use_kernel=False, trigger=trig,
+        retry=RetryPolicy(sleep=lambda s: None))
+    srv.warmup()
+    outs = []
+    if plan is not None:
+        with plan.armed():
+            for vids in stream:
+                outs.append([np.asarray(m) for m in srv.serve(vids)])
+            srv.close()
+    else:
+        for vids in stream:
+            outs.append([np.asarray(m) for m in srv.serve(vids)])
+        srv.close()
+    return srv, store, outs
+
+
+streams = st.lists(
+    st.lists(st.integers(0, N_VERSIONS - 1), min_size=1, max_size=5),
+    min_size=2, max_size=5)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(site=st.sampled_from(SITES), nth=st.integers(0, 3),
+       budget=st.booleans(), stream=streams)
+def test_random_single_fault_bit_identical(site, nth, budget, stream):
+    _, _, oracle = _run(stream, budget=budget)
+    plan = FaultPlan.single(site, nth=nth)
+    srv, store, outs = _run(stream, budget=budget, plan=plan)
+    assert len(outs) == len(oracle)
+    for got, want in zip(outs, oracle):
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+    # balanced counters after recovery + close
+    assert int(getattr(store, "_inflight_waves", 0) or 0) == 0
+    cnt = getattr(store, "_inflight_waves", None)
+    if isinstance(cnt, GuardedCounter):
+        assert cnt.underflows == 0
+    assert srv._reserved == set()
+    mgr = get_superblock_groups(store)
+    if mgr is not None:
+        assert mgr.pins - mgr.evictions == len(mgr.groups)
+        assert mgr.pinned_bytes <= mgr.budget
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 1 << 16), stream=streams)
+def test_random_seeded_schedule_bit_identical(seed, stream):
+    """The multi-site seeded schedule (what the CI matrix sweeps) holds
+    the same bar as the single-fault case."""
+    _, _, oracle = _run(stream, budget=False)
+    plan = FaultPlan.seeded(seed)
+    srv, store, outs = _run(stream, budget=False, plan=plan)
+    for got, want in zip(outs, oracle):
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+    assert int(getattr(store, "_inflight_waves", 0) or 0) == 0
+    assert srv._reserved == set()

@@ -276,7 +276,7 @@ def test_empty_flush_marker_holds_through_join(rng, monkeypatch):
     real = WaveResult.materialize
 
     def observing(self):
-        seen["during_join"] = store._inflight_waves
+        seen["during_join"] = int(store._inflight_waves)
         return real(self)
 
     monkeypatch.setattr(WaveResult, "materialize", observing)
@@ -297,7 +297,7 @@ def test_inflight_marker_holds_through_materialize(rng, monkeypatch):
     real = WaveResult.materialize
 
     def observing(self):
-        seen["during_join"] = store._inflight_waves
+        seen["during_join"] = int(store._inflight_waves)
         return real(self)
 
     monkeypatch.setattr(WaveResult, "materialize", observing)
