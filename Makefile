@@ -4,8 +4,9 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-cov test-faults bench bench-multipart bench-smoke \
-	bench-migration bench-group bench-serve bench-fault bench-all lint
+.PHONY: test test-cov test-faults test-tenancy bench bench-multipart \
+	bench-smoke bench-migration bench-group bench-serve bench-fault \
+	bench-multitenant bench-all lint
 
 # Line-coverage floor for src/repro/core (the CI gate behind `make test-cov`).
 # Baseline'd under the current suite; ratchet UP as coverage grows, never down.
@@ -18,6 +19,10 @@ test:           ## tier-1 verify: the command CI and the roadmap pin
 test-faults:    ## fault-injection + durability suites under one seed
 	$(PY) -m pytest -x -q tests/test_faults.py tests/test_durability.py \
 		tests/test_faults_property.py
+
+test-tenancy:   ## multi-tenant serve suites (fault-seed aware, CI matrix)
+	$(PY) -m pytest -x -q tests/test_tenancy.py \
+		tests/test_tenancy_property.py
 
 test-cov:       ## tier-1 + line-coverage floor on src/repro/core (CI gate)
 	@if $(PY) -c "import pytest_cov" >/dev/null 2>&1; then \
@@ -45,6 +50,7 @@ bench-smoke:    ## tiny-shape kernel-path canary (CI): wave engine + online migr
 	BENCH_SMOKE=1 $(PY) -m benchmarks.group_superblock
 	BENCH_SMOKE=1 $(PY) -m benchmarks.pipelined_serve
 	BENCH_SMOKE=1 $(PY) -m benchmarks.fault_recovery
+	BENCH_SMOKE=1 $(PY) -m benchmarks.multitenant_serve
 
 bench-migration: ## incremental vs rebuild migration (BENCH_online_migration.json)
 	$(PY) -m benchmarks.online_migration
@@ -57,6 +63,9 @@ bench-serve:    ## pipelined vs synchronous serve stream (BENCH_pipelined_serve.
 
 bench-fault:    ## snapshot overhead + kill/restore recovery (BENCH_fault_recovery.json)
 	$(PY) -m benchmarks.fault_recovery
+
+bench-multitenant: ## N-tenant serve vs one server: throughput/fairness/shed (BENCH_multitenant_serve.json)
+	$(PY) -m benchmarks.multitenant_serve
 
 bench-all:      ## every paper-figure benchmark
 	$(PY) -m benchmarks.run

@@ -1,0 +1,407 @@
+"""Multi-tenant serve coordinator vs one lone server: aggregate
+throughput cost of tenancy, fair-share scheduling under a 10:1 skewed
+tenant, overload shedding with the bounded-queue invariant, and the
+new-concurrency-site fault canary.
+
+Scenarios (all over one shared store):
+
+  * THROUGHPUT — the same combined ticket stream served (a) by ONE
+    ``BatchedCheckoutServer`` flushing the same 64-ticket wave quantum
+    the tenant quotas grant (the gated baseline: what the tenancy layer
+    itself costs) and at its native 4x-fused wave size (reported: the
+    wave-fusion bonus a shared funnel keeps), and (b) by a 4-tenant
+    ``MultiTenantServer`` with worker threads (per-tenant waves, store
+    lock on dispatch, delivery joins overlapped).  Tenancy buys
+    isolation + quotas + fairness; the headline asserts it costs at most
+    20% aggregate throughput (>= 0.8x the matched single server) on the
+    full run, both tiers.
+  * FAIRNESS — one tenant submits 10x the others' load under equal wave
+    shares; the deficit-round-robin grant log, windowed to where every
+    tenant is still backlogged, must score a Jain index >= 0.9 (the
+    burst tenant queues behind its share instead of starving the rest).
+  * OVERLOAD — a burst 3x the global backlog bound: admission sheds
+    ``Overloaded`` explicitly, the backlog NEVER exceeds the bound
+    (``peak_backlog`` is the witness), per-tenant ``QuotaExceeded``
+    sheds stay per-tenant, and every admitted ticket still delivers.
+  * FAULT CANARY — the ISSUE 7 sweep at benchmark scale: a single
+    injected fault at each new concurrency site (every catalogued site
+    on the full run) under 2-tenant contention leaves both delivered
+    streams bit-identical to the fault-free run with balanced books.
+
+Emits CSV lines (benchmarks/run.py convention) and writes
+``BENCH_multitenant_serve.json`` at the repo root; ``BENCH_SMOKE=1``
+(the CI canary, ``make bench-smoke``) shrinks shapes, writes
+``*.smoke.json``, and skips the wall-clock gates (shared CI machines are
+too noisy) while keeping every correctness assertion.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.checkout import estimate_superblock_bytes
+from repro.core.faults import SITES, FaultPlan, GuardedCounter, read_leases
+from repro.core.graph import BipartiteGraph
+from repro.core.online import RepartitionTrigger
+from repro.core.partition import PartitionedCVD
+from repro.core.version_graph import WeightedTree
+from repro.serve import (MultiTenantServer, Overloaded, QuotaExceeded,
+                         TenantQuota, jain_index)
+from repro.serve.checkout import BatchedCheckoutServer, RetryPolicy
+
+from .common import emit
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+SEED = 7
+NEW_SITES = ("serve.admit", "serve.shed", "tenant.preempt", "lease.expire")
+
+N_TENANTS = 4
+P = 4 if SMOKE else 8                   # partitions
+R, D = (1024, 32) if SMOKE else (4096, 64)
+N_VERSIONS = 64 if SMOKE else 256
+ROWS_PER_VERSION = 32 if SMOKE else 64
+TICKETS = 64 if SMOKE else 256          # combined tickets per wave (unique:
+                                        # the ratio isolates COORDINATION
+                                        # cost; cross-tenant dup coalescing
+                                        # is what tenancy forgoes by design)
+N_WAVES = 4 if SMOKE else 8             # waves per measured pass
+REPS = 3 if SMOKE else 5                # interleaved passes; medians reported
+SKEW = 10                               # the burst tenant's load multiple
+
+
+def _make_store(rng, p=P):
+    rls = []
+    for v in range(N_VERSIONS):
+        if v % 2 == 0:
+            s = int(rng.integers(0, R - ROWS_PER_VERSION))
+            rls.append(np.arange(s, s + ROWS_PER_VERSION, dtype=np.int64))
+        else:
+            rls.append(np.sort(rng.choice(
+                R, ROWS_PER_VERSION, replace=False)).astype(np.int64))
+    graph = BipartiteGraph.from_rlists(rls, n_records=R)
+    data = rng.integers(0, 1 << 20, (R, D)).astype(np.int32)
+    return PartitionedCVD(graph, data, np.arange(N_VERSIONS) % p)
+
+
+def _make_stream(rng):
+    """The combined stream: N_WAVES waves of TICKETS dup-heavy tickets,
+    pre-split evenly across the tenants (tenant k takes every k-th
+    ticket, so every tenant sees the same vid mix)."""
+    waves = [[int(v) for v in rng.choice(N_VERSIONS, TICKETS,
+                                         replace=False)]
+             for _ in range(N_WAVES)]
+    per_tenant = {
+        f"t{k}": [wave[k::N_TENANTS] for wave in waves]
+        for k in range(N_TENANTS)}
+    return waves, per_tenant
+
+
+# ------------------------------------------------------------- throughput --
+def _run_single(srv, waves):
+    out = []
+    for wave in waves:
+        srv.submit_many(wave)
+        out.extend(srv.flush())
+    out.extend(srv.flush())               # drain the last in-flight wave
+    return out
+
+
+def _run_mt(mts, per_tenant):
+    tks = {t: [mts.submit_many(t, wave) for wave in waves]
+           for t, waves in per_tenant.items()}
+    assert mts.drain(timeout=300)
+    return {t: [np.asarray(m) for wtk in wave_tks
+                for m in mts.results(t, wtk, timeout=300)]
+            for t, wave_tks in tks.items()}
+
+
+def _bench_throughput(use_kernel):
+    """Two baselines, one gated ratio.
+
+    ``matched``: the single server flushes the SAME 64-ticket quantum
+    the tenant quotas grant — the gated ratio isolates what the tenancy
+    layer itself costs (admission, DRR, per-tenant futures, store lock).
+    ``fused``: the single server's native combined waves (4x larger) —
+    reported as the wave-fusion bonus a shared funnel keeps and
+    per-tenant isolation deliberately gives up (tunable via max_wave,
+    not coordination overhead)."""
+    rng = np.random.default_rng(SEED)
+    waves, per_tenant = _make_stream(rng)
+    matched = [wave[k::N_TENANTS] for wave in waves
+               for k in range(N_TENANTS)]
+    single = BatchedCheckoutServer(_make_store(np.random.default_rng(SEED)),
+                                   use_kernel=use_kernel)
+    single.warmup()
+    mts = MultiTenantServer(
+        _make_store(np.random.default_rng(SEED)), threads=True,
+        use_kernel=use_kernel, max_backlog=4 * N_WAVES * TICKETS,
+        quotas={t: TenantQuota(max_inflight=N_WAVES * TICKETS,
+                               max_wave=TICKETS // N_TENANTS)
+                for t in per_tenant})
+    mts.warmup()
+    # warm the traces + assert bit-identity against the checkout oracle
+    single_out = _run_single(single, waves)
+    flat = [v for wave in waves for v in wave]
+    for v, m in zip(flat, single_out):
+        np.testing.assert_array_equal(np.asarray(m),
+                                      single.store.checkout(v))
+    _run_single(single, matched)
+    mt_out = _run_mt(mts, per_tenant)
+    for t, waves_t in per_tenant.items():
+        flat_t = [v for wave in waves_t for v in wave]
+        assert len(mt_out[t]) == len(flat_t)
+        for v, m in zip(flat_t, mt_out[t]):
+            np.testing.assert_array_equal(m, mts.store.checkout(v))
+    times = {"fused": [], "matched": [], "mt": []}
+    for _ in range(REPS):                 # interleaved: noise is shared
+        t0 = time.perf_counter()
+        _run_single(single, waves)
+        times["fused"].append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _run_single(single, matched)
+        times["matched"].append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _run_mt(mts, per_tenant)
+        times["mt"].append(time.perf_counter() - t0)
+    single.close()
+    mts.close()
+    n_tickets = N_WAVES * TICKETS
+    med = {k: float(np.median(v)) for k, v in times.items()}
+    # medians of per-pass-pair ratios: adjacent interleaved passes share
+    # the machine's noise
+    return {
+        "tier": "kernel" if use_kernel else "host",
+        "single_matched_s": med["matched"], "single_fused_s": med["fused"],
+        "multitenant_s": med["mt"],
+        "tickets_per_s_single_matched": n_tickets / med["matched"],
+        "tickets_per_s_single_fused": n_tickets / med["fused"],
+        "tickets_per_s_multitenant": n_tickets / med["mt"],
+        "throughput_ratio": float(np.median(
+            [s / m for s, m in zip(times["matched"], times["mt"])])),
+        "fused_funnel_ratio": float(np.median(
+            [s / m for s, m in zip(times["fused"], times["mt"])])),
+        "grant_waves": len(mts.grant_log),
+    }
+
+
+# ---------------------------------------------------------------- fairness --
+def _bench_fairness():
+    rng = np.random.default_rng(SEED + 1)
+    store = _make_store(np.random.default_rng(SEED + 1))
+    w = 4                                  # tickets per granted wave
+    n_small = (w * 8) if SMOKE else (w * 16)
+    loads = {"burst": SKEW * n_small, "t1": n_small, "t2": n_small,
+             "t3": n_small}
+    # inline scheduling: the grant log IS the exact DRR schedule (the
+    # threaded path runs the same _round, but worker availability blurs
+    # the audit trail)
+    mts = MultiTenantServer(
+        store, threads=False, use_kernel=False,
+        max_backlog=sum(loads.values()),
+        quotas={t: TenantQuota(max_inflight=n, max_wave=w)
+                for t, n in loads.items()})
+    for t, n in loads.items():
+        mts.submit_many(t, [int(v) for v in rng.integers(0, N_VERSIONS, n)])
+    mts.pump()
+    grants = list(mts.grant_log)
+    # the contention window: grants while EVERY tenant is still
+    # backlogged (the DRR fairness claim is about contention, not about
+    # the tail where only the burst tenant has work left)
+    total_waves = {t: (n + w - 1) // w for t, n in loads.items()}
+    window = {t: 0 for t in loads}
+    for g in grants:
+        window[g] += 1
+        if window[g] == total_waves[g]:
+            break                          # first tenant drained
+    fair = jain_index(list(window.values()))
+    assert all(mts.stats(t).delivered == n for t, n in loads.items())
+    mts.close()
+    return {"loads": loads, "wave_tickets": w,
+            "contention_window_grants": window,
+            "jain_index_contention": fair,
+            "total_grants": len(grants)}
+
+
+# ---------------------------------------------------------------- overload --
+def _bench_overload():
+    store = _make_store(np.random.default_rng(SEED + 2))
+    bound = 32
+    burst = 3 * bound
+    mts = MultiTenantServer(
+        store, threads=False, use_kernel=False, max_backlog=bound,
+        quotas={"a": TenantQuota(max_inflight=burst),
+                "b": TenantQuota(max_inflight=burst),
+                "q": TenantQuota(max_inflight=4)})
+    admitted = {t: [] for t in ("a", "b", "q")}
+    sheds = {"Overloaded": 0, "QuotaExceeded": 0}
+    for i in range(burst):
+        for t in ("a", "b", "q"):
+            try:
+                admitted[t].append(mts.submit(t, i % N_VERSIONS))
+            except (Overloaded, QuotaExceeded) as e:
+                sheds[type(e).__name__] += 1
+    peak = mts.peak_backlog
+    mts.pump()
+    delivered = {t: len(mts.results(t, tks)) for t, tks in admitted.items()}
+    mts.close()
+    # the bounded-queue invariant + explicit shedding + no lost tickets
+    assert peak <= bound, (peak, bound)
+    assert sheds["Overloaded"] > 0 and sheds["QuotaExceeded"] > 0, sheds
+    assert all(delivered[t] == len(admitted[t]) for t in delivered)
+    assert sum(delivered.values()) + sum(sheds.values()) == 3 * burst
+    return {"max_backlog": bound, "burst_per_tenant": burst,
+            "peak_backlog": peak, "sheds": sheds,
+            "admitted": {t: len(v) for t, v in admitted.items()},
+            "delivered": delivered}
+
+
+# ------------------------------------------------------------ fault canary --
+def _fault_store():
+    rng = np.random.default_rng(SEED + 3)
+    n_versions, n_records, size = 12, 512, 24
+    rls = [np.sort(rng.choice(n_records, size,
+                              replace=False)).astype(np.int64)
+           for _ in range(n_versions)]
+    graph = BipartiteGraph.from_rlists(rls, n_records=n_records)
+    data = rng.integers(0, 1 << 20, (n_records, 8)).astype(np.int32)
+    store = PartitionedCVD(graph, data, np.zeros(n_versions, np.int64))
+    tree = WeightedTree(
+        parent=np.concatenate([[-1], np.zeros(n_versions - 1, np.int64)]),
+        n_records=np.array([len(r) for r in rls], np.int64),
+        edge_w=np.zeros(n_versions, np.int64))
+    return store, tree
+
+
+def _fault_stream(plan=None):
+    """Deterministic inline 3-tenant contention stream (the canonical
+    stream from the tenancy suite): a drain-mode trigger fires
+    mid-stream, tenant c is over-subscribed so BOTH shed paths fire on
+    every run.  Returns (per-tenant delivered arrays, sheds, balanced)."""
+    store, tree = _fault_store()
+    store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+    trig = RepartitionTrigger(store, tree, min_waves=2, use_kernel=False,
+                              drain_timeout_s=5.0)
+    mts = MultiTenantServer(
+        store, threads=False, use_kernel=False, trigger=trig,
+        max_backlog=9,
+        retry=RetryPolicy(sleep=lambda s: None),
+        quotas={"a": TenantQuota(max_wave=2, wave_share=2.0),
+                "b": TenantQuota(max_wave=3),
+                "c": TenantQuota(max_inflight=3, max_wave=2)})
+    delivered = {"a": [], "b": [], "c": []}
+    sheds = []
+    phases = ({"a": [0, 3, 7, 11], "b": [1, 4, 8], "c": [2, 5]},
+              {"a": [6, 10, 0, 2, 9], "b": [11, 3], "c": [7, 1, 4, 8]},
+              {"a": [5, 8], "b": [6, 9, 10], "c": [0, 11, 5, 9]})
+    ctx = plan.armed() if plan is not None else contextlib.nullcontext()
+    with ctx:
+        for phase in phases:
+            tks = {t: [] for t in delivered}
+            for t, vids in phase.items():
+                for v in vids:
+                    try:
+                        tks[t].append(mts.submit(t, v))
+                    except (Overloaded, QuotaExceeded) as e:
+                        sheds.append((t, v, type(e).__name__))
+            for t, lst in tks.items():
+                delivered[t].extend(
+                    np.asarray(mts.result(t, tk)) for tk in lst)
+        mts.close()
+    acct = mts.accounting()
+    cnt = getattr(store, "_inflight_waves", None)
+    reg = read_leases(store, create=False)
+    balanced = (acct["backlog"] == 0 and acct["leases_held"] == 0
+                and int(cnt or 0) == 0
+                and (not isinstance(cnt, GuardedCounter)
+                     or cnt.underflows == 0)
+                and reg.acquired == reg.released
+                and all(r["queued"] == r["inflight"] == r["reserved"] == 0
+                        for r in acct["tenants"].values()))
+    return delivered, sheds, balanced
+
+
+def _bench_fault_canary():
+    oracle, oracle_sheds, balanced = _fault_stream()
+    assert balanced
+    assert {kind for _, _, kind in oracle_sheds} == \
+        {"Overloaded", "QuotaExceeded"}
+    sites = NEW_SITES if SMOKE else SITES
+    for site in sites:
+        plan = FaultPlan.single(site)
+        got, sheds, balanced = _fault_stream(plan=plan)
+        assert balanced, f"unbalanced books after fault at {site}"
+        assert sheds == oracle_sheds, (site, sheds)
+        for t in oracle:
+            assert len(got[t]) == len(oracle[t]), (site, t)
+            for g, o in zip(got[t], oracle[t]):
+                np.testing.assert_array_equal(g, o)
+        if site in NEW_SITES:
+            assert [r.site for r in plan.fired] == [site], \
+                f"stream never exercised {site}"
+    return {"sites_swept": len(sites),
+            "new_sites": list(NEW_SITES),
+            "bit_identical_per_tenant": True,
+            "books_balanced": True}
+
+
+def main() -> None:
+    results = {"throughput": [], "fairness": None, "overload": None,
+               "fault_canary": None}
+    for use_kernel in (True, False):
+        row = _bench_throughput(use_kernel)
+        results["throughput"].append(row)
+        emit(f"multitenant_serve_{row['tier']}",
+             row["multitenant_s"] * 1e6 / N_WAVES,
+             f"ratio={row['throughput_ratio']:.2f} "
+             f"fused={row['fused_funnel_ratio']:.2f} "
+             f"tput={row['tickets_per_s_multitenant']:.0f}/s")
+    results["fairness"] = _bench_fairness()
+    emit("multitenant_fairness_jain",
+         results["fairness"]["jain_index_contention"] * 1e3,
+         f"skew={SKEW}:1 grants={results['fairness']['total_grants']}")
+    results["overload"] = _bench_overload()
+    emit("multitenant_overload_peak", results["overload"]["peak_backlog"],
+         f"bound={results['overload']['max_backlog']} "
+         f"sheds={sum(results['overload']['sheds'].values())}")
+    results["fault_canary"] = _bench_fault_canary()
+    emit("multitenant_fault_sweep",
+         results["fault_canary"]["sites_swept"],
+         "bit-identical per tenant, books balanced")
+
+    name = "BENCH_multitenant_serve.smoke.json" if SMOKE \
+        else "BENCH_multitenant_serve.json"
+    out_path = pathlib.Path(__file__).resolve().parent.parent / name
+    out_path.write_text(json.dumps({
+        "config": {"smoke": SMOKE, "seed": SEED, "n_tenants": N_TENANTS,
+                   "p": P, "r": R, "d": D, "n_versions": N_VERSIONS,
+                   "rows_per_version": ROWS_PER_VERSION,
+                   "tickets_per_wave": TICKETS,
+                   "n_waves": N_WAVES, "reps": REPS, "skew": SKEW,
+                   "baseline": "one BatchedCheckoutServer serving the "
+                               "combined stream at matched (gated) and "
+                               "native fused (reported) wave granularity"},
+        "results": results}, indent=2))
+    print(f"wrote {out_path}")
+
+    # ---- acceptance gates --------------------------------------------------
+    # correctness gates always run; wall-clock gates full-run only (smoke
+    # shapes on a shared CI machine are too noisy for a timing bar)
+    assert results["overload"]["peak_backlog"] <= \
+        results["overload"]["max_backlog"]
+    assert results["fault_canary"]["bit_identical_per_tenant"]
+    fair = results["fairness"]["jain_index_contention"]
+    assert fair >= 0.9, f"Jain {fair:.3f} < 0.9 under {SKEW}:1 skew"
+    if not SMOKE:
+        for row in results["throughput"]:
+            assert row["throughput_ratio"] >= 0.8, \
+                f"{N_TENANTS}-tenant aggregate {row['throughput_ratio']:.2f}x " \
+                f"< 0.8x single-server on the {row['tier']} tier"
+
+
+if __name__ == "__main__":
+    main()

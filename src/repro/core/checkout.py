@@ -98,7 +98,39 @@ whose ΣR×D superblock would exceed it refuses to pin the whole-store copy
 
 The single-superblock fast path is the one-group degenerate case: a store
 whose full superblock fits the budget (or has none) never builds the group
-layer, and its wave path is unchanged.
+layer, and its wave path is unchanged.  The grouping itself is
+self-correcting: every ``auto_regroup_every`` group waves,
+``SuperblockGroups.maybe_regroup`` compares the LIVE hot ranking against
+the prefix the plan packed around and re-forms the groups when the served
+hot set drifted (one tenant's shifted traffic cannot permanently pin
+another tenant's now-cold groups out of budget).
+
+Multi-tenant serve + epoch read leases (``serve/tenancy.py`` over
+``core/faults.py``)::
+
+    tenants ── submit(tenant, vid) ──┐   serve.tenancy.MultiTenantServer
+      │   admission control: per-tenant quotas (inflight tickets, wave
+      │   share, pinned-byte share) + a bounded global backlog — breaching
+      │   either SHEDS explicitly (``QuotaExceeded``/``Overloaded`` to the
+      │   caller) instead of queueing unboundedly
+      └─ deficit-round-robin scheduler          [fair cross-tenant waves]
+      │    each round every backlogged tenant earns ``wave_share`` deficit
+      │    and spends it in granted waves, so a burst tenant cannot starve
+      │    the rest; grants run on per-tenant worker threads, each wave a
+      │    ``BatchedCheckoutServer.flush`` serialized under the store lock
+      │    (delivery joins run OUTSIDE it — tenant A's host split overlaps
+      │    tenant B's dispatch)
+      └─ per-wave ``core.faults.ReadLease``      [epoch-consistent reads]
+      │    every dispatched wave leases the epoch it planned against (the
+      │    lease total mirrors onto ``store._inflight_waves``); a wave
+      │    admitted at epoch E delivers against epoch-E superblocks even
+      │    while a migration lands
+      └─ migration drain                        [coordinator rounds]
+           the coordinator's ``RepartitionTrigger`` runs with
+           ``drain_timeout_s`` set: ``EpochReadLeases.draining`` blocks
+           NEW leases at the current epoch, waits for in-flight waves to
+           deliver, then migrates — draining leases instead of racing
+           them (or deferring when stragglers outlast the timeout).
 
 Failure-site catalogue + recovery invariants (``core.faults``)::
 
@@ -123,14 +155,27 @@ Failure-site catalogue + recovery invariants (``core.faults``)::
       serve.dispatch / serve.delivery / online.trigger / migration.commit
                           live in serve/checkout.py, core/online.py and
                           core/partition.py (see their docstrings)
+      serve.admit         MultiTenantServer.submit: fires before any
+                          admission state changes — the caller retries,
+                          nothing was queued or counted
+      serve.shed          fires before a shed is recorded/raised — the
+                          shed decision itself stays deterministic
+      tenant.preempt      the DRR scheduler ending a backlogged tenant's
+                          turn — accounting only, grants already issued
+                          are unaffected
+      lease.expire        EpochReadLeases.draining entry — nothing blocked
+                          or drained yet; the migration defers and the
+                          density streak survives for the retry
 
     The invariants every site is placed to preserve (and the fault suite
     asserts): a fault leaves no half-applied state — pins/evictions stay
     balanced (``pins - evictions == len(groups)``), no device buffer leaks
     (every detached superblock's ``_device`` is released on every failure
     path), ``store._inflight_waves`` (a ``core.faults.GuardedCounter``)
-    never underflows, and a retried/degraded wave delivers results
-    bit-identical to the fault-free run.
+    never underflows, per-epoch lease and per-tenant quota/pin accounting
+    balances to zero after ``close()``, and a retried/degraded wave
+    delivers results bit-identical to the fault-free run — per tenant,
+    even under contention.
 """
 from __future__ import annotations
 
@@ -837,8 +882,16 @@ class SuperblockGroups:
         self.waves = 0
         self.groups_touched = 0
         self.straggler_requests = 0
+        self.auto_regroups = 0      # heat-drift regroups maybe_regroup fired
         self.last_wave: Optional[GroupWaveReport] = None
         self._plan_epoch = -1
+        # heat-drift auto-regroup knobs (see maybe_regroup): every
+        # ``auto_regroup_every`` group waves the CURRENT hot ranking is
+        # compared against the prefix the plan was packed around; overlap
+        # below 1 - ``drift_threshold`` triggers a clean regroup()
+        self.auto_regroup_every = 32
+        self.drift_threshold = 0.5
+        self._plan_hot: list[int] = []
 
     # -- group formation ----------------------------------------------------
     def _hot_order(self, n_partitions: int) -> list[int]:
@@ -901,6 +954,13 @@ class SuperblockGroups:
             cur.append(q)
             cur_bytes += b
         close()
+        # remember the hot prefix this plan packed its co-resident groups
+        # around — maybe_regroup measures drift as loss of overlap between
+        # it and the LIVE ranking (~GROUP_FANOUT groups fit the budget, so
+        # that's the set whose staleness costs launches)
+        n_hot = sum(len(k) for k in self.planned[:GROUP_FANOUT])
+        self._plan_hot = [q for q in self._hot_order(n)
+                          if q not in self.straggler_pids][:n_hot]
         self._plan_epoch = self.epoch
 
     def ensure_plan(self) -> None:
@@ -931,6 +991,37 @@ class SuperblockGroups:
         self.evict_all()
         self._plan_epoch = -1
         self.ensure_plan()
+
+    def regroup_drift(self) -> float:
+        """How far the LIVE hot ranking has drifted from the prefix the
+        current plan packed around, in [0, 1]: 0 = the grouping still
+        serves the hot set, 1 = the hot set moved entirely onto
+        partitions the plan left in cold-order groups."""
+        if not self._plan_hot:
+            return 0.0
+        if getattr(self.store, "_hot_set_policy", None) is None:
+            return 0.0
+        live = [q for q in self._hot_order(len(self.store.partitions))
+                if q not in self.straggler_pids][:len(self._plan_hot)]
+        if not live:
+            return 0.0
+        return 1.0 - len(set(live) & set(self._plan_hot)) / len(live)
+
+    def maybe_regroup(self) -> bool:
+        """Heat-driven automatic ``regroup()``: fires when the served hot
+        set has drifted past ``drift_threshold`` from the current
+        grouping, so one tenant's shifted traffic cannot permanently pin
+        another tenant's now-cold groups out of budget.  ``_grouped_wave``
+        calls this every ``auto_regroup_every`` group waves; routing-only,
+        results are grouping-invariant.  Returns whether it fired."""
+        drift = self.regroup_drift()
+        if drift < self.drift_threshold:
+            return False
+        self.auto_regroups += 1
+        logger.info("hot-set drift %.2f >= %.2f: auto regroup #%d",
+                    drift, self.drift_threshold, self.auto_regroups)
+        self.regroup()
+        return True
 
     # -- pin / evict ---------------------------------------------------------
     def _evict(self, key: tuple) -> None:
@@ -1516,6 +1607,13 @@ def _grouped_wave(store, vids: Sequence[int], mgr: SuperblockGroups, *,
     bigger than the whole budget, route through the per-partition engine
     in one batch.  The host tier only uses groups that are ALREADY pinned
     (free fusion — numpy never pays a superblock build)."""
+    # heat-driven auto-regroup checkpoint: every auto_regroup_every group
+    # waves, re-form the groups when the live hot ranking drifted from the
+    # plan-time prefix (maybe_regroup) — a shifted hot set must not stay
+    # scattered across a stale grouping
+    if (mgr.auto_regroup_every and mgr.waves
+            and mgr.waves % mgr.auto_regroup_every == 0):
+        mgr.maybe_regroup()
     mgr.ensure_plan()
     by_group: dict[tuple, list[int]] = {}
     stragglers: list[int] = []

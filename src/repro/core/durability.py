@@ -53,21 +53,36 @@ class StoreSnapshot:
 
 @dataclasses.dataclass
 class RestoredStore:
-    """A store rebuilt from a snapshot, plus the serve-side watermark.
+    """A store rebuilt from a snapshot, plus the serve-side watermarks.
 
     ``store`` is live immediately (host path); device superblocks are
     rebuilt lazily — call ``make_server(...).warmup()`` to pre-pin them.
-    ``make_server`` seeds the ticket counter past the snapshot watermark
-    so restored tickets never collide with pre-crash ones."""
+    ``make_server`` seeds each server's ticket counter past its TENANT's
+    snapshot watermark so restored tickets never collide with pre-crash
+    ones — and because global ticket identity is (tenant, ticket), two
+    servers restored from the same snapshot can never mint overlapping
+    ids: a caller-supplied tenant gets that tenant's watermark, and
+    anonymous servers get distinct auto-assigned namespaces."""
     store: PartitionedCVD
     snapshot: StoreSnapshot
-    ticket_watermark: int
+    ticket_watermark: int                       # legacy: max across tenants
+    ticket_watermarks: dict = dataclasses.field(default_factory=dict)
+    _minted: int = dataclasses.field(default=0, repr=False)
 
-    def make_server(self, **kwargs):
+    def make_server(self, *, tenant=None, **kwargs):
         # lazy import: serve imports core, not the other way around
         from ..serve.checkout import BatchedCheckoutServer
-        srv = BatchedCheckoutServer(self.store, **kwargs)
-        srv._next_ticket = int(self.ticket_watermark)
+        if tenant is None:
+            # distinct namespace per anonymous restore — the n-th unnamed
+            # server is NOT the same ticket stream as the (n-1)-th
+            # (named-tenant restores don't burn anonymous namespaces)
+            tenant = (None if self._minted == 0
+                      else f"restored-{self._minted}")
+            self._minted += 1
+        srv = BatchedCheckoutServer(self.store, tenant=tenant, **kwargs)
+        key = "" if tenant is None else str(tenant)
+        srv._next_ticket = int(self.ticket_watermarks.get(
+            key, self.ticket_watermark))
         return srv
 
 
@@ -130,23 +145,47 @@ class StoreDurability:
         self.ckpt = CheckpointStore(directory, shard_rows=shard_rows)
 
     # -- write plane -----------------------------------------------------------
-    def snapshot(self, store, *, server=None) -> StoreSnapshot:
-        """Persist the store (and optionally one server's ticket
-        watermark).  Cheap on the steady path: unchanged graph/data/
-        assignment rows dedup against the parent snapshot, so only the
-        meta JSON and genuinely new rows hit disk."""
+    def snapshot(self, store, *, server=None, servers=None) -> StoreSnapshot:
+        """Persist the store and the serve-side ticket watermarks.  Cheap
+        on the steady path: unchanged graph/data/assignment rows dedup
+        against the parent snapshot, so only the meta JSON and genuinely
+        new rows hit disk.
+
+        ``server`` persists one server's watermark (the single-tenant
+        path); ``servers`` takes an iterable of ``BatchedCheckoutServer``s
+        (or a ``{tenant: server}`` mapping) and persists each one's
+        watermark under its TENANT namespace — what lets two restored
+        servers resume their own ticket streams instead of minting
+        overlapping ids."""
         tree = {"assignment": np.asarray(store.assignment, np.int64),
                 "data": np.asarray(store.data),
                 "graph_indices": np.asarray(store.graph.indices, np.int64),
                 "graph_indptr": np.asarray(store.graph.indptr, np.int64)}
         sb_budget = getattr(store, "superblock_max_bytes", None)
+        marks: dict[str, int] = {}
+        srv_list = []
+        if server is not None:
+            srv_list.append(server)
+        if servers is not None:
+            srv_list.extend(servers.values() if hasattr(servers, "values")
+                            else servers)
+        for srv in srv_list:
+            tenant = getattr(srv, "tenant", None)
+            key = "" if tenant is None else str(tenant)
+            if key in marks:
+                raise ValueError(
+                    f"two servers share the ticket namespace {key or None!r}"
+                    " — snapshotting both would alias their watermarks")
+            marks[key] = int(srv._next_ticket)
         meta = {"kind": "store-snapshot",
                 "epoch": int(getattr(store, "epoch", 0)),
                 "n_records": int(store.graph.n_records),
                 "superblock_max_bytes":
                     None if sb_budget is None else int(sb_budget),
-                "ticket_watermark":
-                    0 if server is None else int(server._next_ticket),
+                # legacy scalar (max across tenants) kept so old snapshots
+                # and old readers interoperate; the dict is the real record
+                "ticket_watermark": max(marks.values(), default=0),
+                "ticket_watermarks": marks,
                 "density": _density_meta(store),
                 "heat": _heat_meta(store),
                 "groups": _groups_meta(store)}
@@ -236,7 +275,10 @@ class StoreDurability:
                              meta=meta)
         return RestoredStore(store=store, snapshot=snap,
                              ticket_watermark=int(
-                                 meta.get("ticket_watermark", 0)))
+                                 meta.get("ticket_watermark", 0)),
+                             ticket_watermarks={
+                                 str(k): int(v) for k, v in
+                                 meta.get("ticket_watermarks", {}).items()})
 
     def lineage(self, vid: int) -> list[int]:
         return self.ckpt.lineage(vid)

@@ -346,6 +346,7 @@ class RepartitionTrigger:
                  gamma_factor: float = 2.0, min_waves: int = 3,
                  low_density: float = 0.5, min_gain: float = 1.02,
                  lyresplit_iters: int = 12,
+                 drain_timeout_s: Optional[float] = None,
                  use_kernel: Optional[bool] = None):
         from .checkout import get_density_stats
         if tree.n != store.graph.n_versions:
@@ -358,6 +359,12 @@ class RepartitionTrigger:
         self.min_waves = min_waves
         self.min_gain = min_gain
         self.lyresplit_iters = lyresplit_iters
+        # None (default): observe() REFUSES while waves are in flight (the
+        # single-server contract).  A number: observe() DRAINS the current
+        # epoch's read leases for up to this long before migrating — the
+        # multi-tenant coordinator's mode, where a refusal would starve
+        # the migration forever under an unbroken cross-tenant stream.
+        self.drain_timeout_s = drain_timeout_s
         self.use_kernel = use_kernel
         self.reports: list[RepartitionReport] = []
         stats = get_density_stats(store, create=True)
@@ -372,24 +379,50 @@ class RepartitionTrigger:
     def observe(self) -> Optional[RepartitionReport]:
         """Run between DELIVERED waves: repartition if the density signal
         warrants it.  Returns the report when a migration happened, else
-        None.  Refuses (returns None, streak preserved) while the store
-        carries an in-flight wave marker (``store._inflight_waves`` —
-        maintained by the serve pipeline's dispatch/deliver slots): a
-        migration morphs the partition blocks and swaps the superblock
-        under the epoch bump, which must never race a launched-but-not-yet
-        -delivered kernel."""
-        from .checkout import (get_density_stats, migrate_superblock,
-                               reinstall_superblock, take_superblock)
-        from .faults import fault_point
-        from .partition import plan_migration
-        if int(getattr(self.store, "_inflight_waves", 0) or 0) > 0:
-            return None
+        None.
+
+        With ``drain_timeout_s=None`` (default) the trigger REFUSES
+        (returns None, streak preserved) while the store carries an
+        in-flight wave marker (``store._inflight_waves`` — maintained by
+        the serve pipeline's per-wave read leases): a migration morphs the
+        partition blocks and swaps the superblock under the epoch bump,
+        which must never race a launched-but-not-yet-delivered kernel.
+        With a timeout set (the multi-tenant coordinator's mode) it
+        DRAINS instead: new lease acquisitions at the current epoch block,
+        in-flight waves deliver against the epoch they planned on, and the
+        migration lands once the epoch's leases hit zero — or defers
+        (returns None, streak preserved) when stragglers outlast the
+        timeout."""
+        from .checkout import get_density_stats
+        from .faults import read_leases
         stats = get_density_stats(self.store, create=True)
         if stats is None or stats.low_streak < self.min_waves:
             return None
-        # past the streak gate: the trigger WILL do migration work now.  A
-        # failure from here on leaves the streak intact, so the next
-        # delivered wave simply retries.
+        reg = (read_leases(self.store, create=False)
+               if self.drain_timeout_s is not None else None)
+        if reg is None:
+            # refusal mode (or an attribute-less store with no registry):
+            # the cheap non-blocking gate, bare-int markers included
+            if int(getattr(self.store, "_inflight_waves", 0) or 0) > 0:
+                return None
+            return self._migrate(stats)
+        with reg.draining(self.store, self.drain_timeout_s) as drained:
+            if not drained:
+                return None     # stragglers outlasted the timeout: defer
+            # out-of-band markers (bare ints tests/ops assign) are not
+            # leases — they still gate even after a clean drain
+            if int(getattr(self.store, "_inflight_waves", 0) or 0) > 0:
+                return None
+            return self._migrate(stats)
+
+    def _migrate(self, stats) -> Optional[RepartitionReport]:
+        """The migration body, past every gate.  A failure from here on
+        leaves the density streak intact, so the next delivered wave
+        simply retries."""
+        from .checkout import (migrate_superblock, reinstall_superblock,
+                               take_superblock)
+        from .faults import fault_point
+        from .partition import plan_migration
         fault_point("online.trigger", self.store)
         t0 = time.perf_counter()
         gamma = self.gamma_factor * self.store.graph.n_records

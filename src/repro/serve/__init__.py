@@ -1,5 +1,9 @@
-from .checkout import BatchedCheckoutServer, CheckoutStats
+from .checkout import BatchedCheckoutServer, CheckoutStats, RetryPolicy
 from .serve_step import greedy_decode, make_prefill_step, make_serve_step
+from .tenancy import (MultiTenantServer, Overloaded, QuotaExceeded,
+                      TenantQuota, TenantStats, jain_index)
 
-__all__ = ["BatchedCheckoutServer", "CheckoutStats", "greedy_decode",
-           "make_prefill_step", "make_serve_step"]
+__all__ = ["BatchedCheckoutServer", "CheckoutStats", "RetryPolicy",
+           "MultiTenantServer", "Overloaded", "QuotaExceeded",
+           "TenantQuota", "TenantStats", "jain_index",
+           "greedy_decode", "make_prefill_step", "make_serve_step"]

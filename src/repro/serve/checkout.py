@@ -43,9 +43,13 @@ run density, and BETWEEN DELIVERED waves — never while a wave is in
 flight, so a migration can never race a launched kernel — the trigger
 re-clusters hot scattered versions with LYRESPLIT + incremental migration
 (``apply_migration`` + ``migrate_superblock``), so the run-DMA path
-recovers without a serving stall.  The server mirrors its in-flight state
-onto ``store._inflight_waves`` so the trigger's own guard holds even for
-out-of-band ``observe()`` calls.
+recovers without a serving stall.  Every dispatched wave holds a
+per-epoch ``core.faults.ReadLease`` for its whole dispatch→deliver life —
+the lease pins the epoch the wave planned against and mirrors itself onto
+``store._inflight_waves``, so the trigger's own guard holds even for
+out-of-band ``observe()`` calls, and a multi-tenant migration
+coordinator can DRAIN the current epoch's leases instead of racing them
+(``serve.tenancy.MultiTenantServer``).
 
 Failure paths (all regression-tested): a failed dispatch OR delivery
 re-queues the whole coalesced wave (tickets stay serviceable) and rolls
@@ -80,7 +84,7 @@ import numpy as np
 from ..core.checkout import (_default_use_kernel, _validate_vids,
                              checkout_partitioned, get_superblock,
                              get_superblock_groups)
-from ..core.faults import fault_point, inflight_counter
+from ..core.faults import acquire_read_lease, fault_point
 
 logger = logging.getLogger(__name__)
 
@@ -206,6 +210,9 @@ class _InflightWave:
     uniq: list                     # sorted unique vids the gather ran over
     handle: object                 # core.checkout.WaveResult
     group_delta: tuple             # group-manager counter delta at dispatch
+    lease: object                  # core.faults.ReadLease pinning the epoch
+                                   # the wave planned against (idempotent
+                                   # release; owns the _inflight_waves count)
 
 
 _GROUP_COUNTER_ZERO = (0, 0, 0, 0, 0)
@@ -247,6 +254,7 @@ class BatchedCheckoutServer:
                  deadline_s: Optional[float] = None,
                  trigger=None, pipeline: bool = True,
                  retry: Optional[RetryPolicy] = None,
+                 tenant: Optional[str] = None,
                  clock: Callable[[], float] = time.monotonic):
         if trigger is not None and engine != "wave":
             # density is only recorded by the wave engine; a trigger on the
@@ -261,6 +269,11 @@ class BatchedCheckoutServer:
         self.trigger = trigger
         self.pipeline = pipeline
         self.retry = retry
+        # the ticket NAMESPACE: global ticket identity is (tenant, ticket),
+        # so N servers fronting one store — or restored from one snapshot —
+        # never mint colliding ids (core.durability persists the watermark
+        # per tenant)
+        self.tenant = tenant
         self._breaker = TierBreaker(retry.breaker_threshold
                                     if retry is not None else 3)
         self._closed = False
@@ -268,8 +281,6 @@ class BatchedCheckoutServer:
         self._pending: list[tuple[int, int, float]] = []  # (ticket, vid, t)
         self._next_ticket = 0
         self._inflight: Optional[_InflightWave] = None
-        self._marked = 0    # this server's contribution to the store-level
-                            # _inflight_waves count (see _sync_inflight_marker)
         # a wave re-queued by a failed flush must NOT be re-fired by the
         # deadline flusher on the very next poll() (its timestamps are
         # already past deadline — that's a hot loop hammering a failing
@@ -378,12 +389,19 @@ class BatchedCheckoutServer:
                     raise
             uniq = sorted({v for _, v, _ in wave})
             g0 = self._group_counters()
+            # the lease is taken BEFORE planning: it pins the epoch the
+            # plan will be built against, raises the store-level
+            # _inflight_waves count for the new wave NOW, and blocks a
+            # concurrent migration drain from landing a layout swap under
+            # the plan.  A failed dispatch releases it (nothing in flight).
+            lease = acquire_read_lease(self.store)
             try:
                 handle = self._dispatch(uniq)
             except BaseException:
                 # a failed gather must not destroy the coalesced wave:
                 # re-queue every request so the tickets stay serviceable,
                 # and gate the deadline retry (see _deadline_armed)
+                lease.release()
                 self._pending = wave + self._pending
                 self._deadline_armed = False
                 self.stats.requeues += 1
@@ -392,18 +410,12 @@ class BatchedCheckoutServer:
             dispatched = _InflightWave(
                 tickets=wave,
                 ticket_ids=frozenset(t for t, _, _ in wave),
-                uniq=uniq, handle=handle,
+                uniq=uniq, handle=handle, lease=lease,
                 group_delta=tuple(b - a for a, b in zip(g0, g1)))
             self.stats.waves += 1
             self.stats.requests += len(wave)
             self.stats.unique_versions += len(uniq)
         prev, self._inflight = self._inflight, dispatched
-        if dispatched is not None:
-            # raise the store-level count for the new wave NOW; on the
-            # dispatched-None path the count must keep covering ``prev``
-            # until its delivery join completes (_deliver_wave's finally
-            # owns that decrement)
-            self._sync_inflight_marker()
         out = self._deliver_wave(prev) if prev is not None else bubbled
         if not self.pipeline and self._inflight is not None:
             out = self.deliver()
@@ -443,9 +455,10 @@ class BatchedCheckoutServer:
 
     def close(self, *, deliver: bool = True) -> None:
         """Drain and shut down.  IDEMPOTENT — a second close is a no-op,
-        and the store-level ``_inflight_waves`` contribution is released
-        exactly once (delta-tracked, so a double close cannot underflow
-        the guarded counter).
+        and the in-flight wave's read lease (the store-level
+        ``_inflight_waves`` contribution) is released exactly once
+        (``ReadLease.release`` is idempotent, so a double close cannot
+        underflow the guarded counter).
 
         ``deliver=True`` (default) joins the in-flight wave and delivers
         its results (claimable via ``result`` even after close); a
@@ -472,7 +485,7 @@ class BatchedCheckoutServer:
                 self.stats.requests -= len(wave.tickets)
                 self.stats.unique_versions -= len(wave.uniq)
                 self.stats.requeues += 1
-        self._sync_inflight_marker()
+                wave.lease.release()
         self._reserved.clear()
         self._closed = True
 
@@ -581,10 +594,10 @@ class BatchedCheckoutServer:
             raise
         finally:
             # only NOW is the wave's kernel no longer in flight (joined or
-            # dead) — dropping the store-level count before materialize()
-            # would open a window where an out-of-band observe() migrates
-            # under a still-running kernel
-            self._sync_inflight_marker()
+            # dead) — releasing the lease before materialize() would open a
+            # window where an out-of-band observe() (or a coordinator's
+            # drain) migrates under a still-running kernel
+            wave.lease.release()
         done = self._clock()
         slot = {v: i for i, v in enumerate(wave.uniq)}
         # per-ticket split/stamp, bulk-shaped: this stage runs UNDER the
@@ -645,26 +658,6 @@ class BatchedCheckoutServer:
         self.stats.group_launches += d[2]
         self.stats.group_evictions += d[3]
         self.stats.straggler_requests += d[4]
-
-    def _sync_inflight_marker(self) -> None:
-        """Mirror the in-flight state onto the store so the trigger's own
-        no-wave-in-flight guard (``core.online.RepartitionTrigger``) holds
-        even for out-of-band observe() calls.  ``_inflight_waves`` is a
-        COUNT, adjusted by this server's own contribution only — several
-        servers fronting one store must not clear each other's marker.
-        The store-side count is a ``core.faults.GuardedCounter`` (a legacy
-        bare int is upgraded in place): a double-release clamps at zero
-        and is counted instead of silently going negative, which would
-        disarm the trigger's in-flight gate forever."""
-        mark = 0 if self._inflight is None else 1
-        delta = mark - self._marked
-        if not delta:
-            return
-        counter = inflight_counter(self.store)
-        if counter is None:
-            return
-        counter.adjust(delta)
-        self._marked = mark
 
     # -- convenience -----------------------------------------------------------
     def warmup(self) -> None:

@@ -156,6 +156,48 @@ def test_ticket_watermark_restored(tmp_path):
     srv2.close()
 
 
+def test_per_tenant_ticket_watermarks_restored(tmp_path):
+    """Multi-tenant snapshot: each tenant server's watermark persists
+    under its own namespace, restore seeds each tenant's new server past
+    ITS OWN stream (not the global max), anonymous restored servers get
+    distinct auto-namespaces, and aliased namespaces refuse to
+    snapshot."""
+    store, tree, graph, data = _scattered_store()
+    from repro.serve.checkout import BatchedCheckoutServer
+    sa = BatchedCheckoutServer(store, use_kernel=False, tenant="a")
+    sb = BatchedCheckoutServer(store, use_kernel=False, tenant="b")
+    for v in (1, 2, 3, 4, 5):
+        sa.submit(v)
+    sa.flush()
+    sb.submit(7)
+    sb.flush()
+    dur = StoreDurability(str(tmp_path))
+    snap = dur.snapshot(store, servers={"a": sa, "b": sb})
+    assert snap.meta["ticket_watermarks"] == {"a": 5, "b": 1}
+    assert snap.meta["ticket_watermark"] == 5        # legacy scalar = max
+    rs = dur.restore()
+    ra = rs.make_server(use_kernel=False, tenant="a")
+    rb = rs.make_server(use_kernel=False, tenant="b")
+    assert ra._next_ticket == 5 and rb._next_ticket == 1
+    assert ra.submit(0) == 5                          # resumes a's stream
+    assert rb.submit(0) == 1                          # NOT the global max
+    # an unknown tenant falls back to the legacy (max) watermark —
+    # conservative: never collides with any persisted stream
+    rz = rs.make_server(use_kernel=False, tenant="z")
+    assert rz._next_ticket == 5
+    # anonymous restores get distinct auto-namespaces past the watermark
+    r0 = rs.make_server(use_kernel=False)
+    r1 = rs.make_server(use_kernel=False)
+    assert r0.tenant is None and r1.tenant == "restored-1"
+    assert r0._next_ticket == r1._next_ticket == 5
+    # two servers sharing a namespace cannot both snapshot
+    dup = BatchedCheckoutServer(store, use_kernel=False, tenant="a")
+    with pytest.raises(ValueError, match="namespace"):
+        dur.snapshot(store, servers=[sa, dup])
+    for s in (sa, sb, ra, rb, rz, r0, r1, dup):
+        s.close()
+
+
 def test_snapshots_parent_chain_and_dedup(tmp_path):
     """Consecutive snapshots dedup unchanged rows through the checkpoint
     CVD's split-by-rlist model: two identical snapshots cost ~one."""

@@ -342,6 +342,39 @@ def test_regroup_consolidates_hot_partitions(rng):
     assert mgr.pinned_bytes <= mgr.budget
 
 
+def test_auto_regroup_fires_on_hot_set_drift(rng):
+    """The heat-driven automatic regroup: once the LIVE hot ranking
+    drifts past ``drift_threshold`` from the prefix the plan packed
+    around, the periodic ``maybe_regroup`` checkpoint re-forms the
+    groups from current heat — hot partitions consolidate without an
+    explicit ``regroup()`` call, and serving stays bit-identical."""
+    store = _uniform_store(rng, p=8)
+    store.superblock_max_bytes = estimate_superblock_bytes(store) - 1
+    pol = get_hot_set_policy(store, create=True)
+    for _ in range(6):
+        pol.touch([0, 1])                         # initial hot set {0, 1}
+    phase_a = [v for v in range(32) if v % 8 in (0, 1)]
+    _assert_wave_equal(store, phase_a, use_kernel=True)
+    mgr = get_superblock_groups(store)
+    assert mgr.regroup_drift() == 0.0             # plan matches live heat
+    mgr.auto_regroup_every = 2                    # tighten for the test
+    # traffic shifts wholesale to partitions {6, 7}: the EWMA re-ranks,
+    # drift crosses the threshold, and a periodic wave checkpoint fires
+    # the regroup on its own
+    for _ in range(40):
+        pol.touch([6, 7])
+    assert mgr.regroup_drift() >= mgr.drift_threshold
+    phase_b = [v for v in range(32) if v % 8 in (6, 7)]
+    for _ in range(4):
+        _assert_wave_equal(store, phase_b, use_kernel=True)
+    assert mgr.auto_regroups >= 1
+    assert mgr.regroup_drift() < mgr.drift_threshold
+    lead = [q for key in mgr.planned for q in key][:2]
+    assert set(lead) == {6, 7}                    # hot pair consolidated
+    assert mgr.pinned_bytes <= mgr.budget
+    assert mgr.pins - mgr.evictions == len(mgr.groups)
+
+
 def test_oversize_partition_is_permanent_straggler(rng):
     store = _uniform_store(rng, p=4)
     seg = partition_segment_bytes(store)

@@ -1,0 +1,402 @@
+"""Multi-tenant serve coordinator (``serve/tenancy.py``): admission
+control + explicit shedding (bounded backlog, per-tenant quotas),
+deficit-round-robin fairness (grant-log audited), pinned-byte share
+throttling, epoch-consistent reads under concurrent migration (lease
+drain), threaded 4-tenant bit-identity with balanced accounting, and the
+ISSUE 7 acceptance bar: any single injected fault at any catalogued site
+— including the new ``serve.admit`` / ``serve.shed`` / ``tenant.preempt``
+/ ``lease.expire`` sites — leaves every tenant's delivered stream
+bit-identical to its fault-free serial run with every counter balanced.
+"""
+import contextlib
+
+import numpy as np
+import pytest
+
+from repro.core.checkout import (estimate_superblock_bytes,
+                                 get_superblock_groups)
+from repro.core.faults import (SITES, FaultPlan, GuardedCounter,
+                               read_leases)
+from repro.core.graph import BipartiteGraph
+from repro.core.online import RepartitionTrigger
+from repro.core.partition import PartitionedCVD
+from repro.core.version_graph import WeightedTree
+from repro.serve import (MultiTenantServer, Overloaded, QuotaExceeded,
+                         TenantQuota, jain_index)
+from repro.serve.checkout import BatchedCheckoutServer, RetryPolicy
+
+NEW_SITES = ("serve.admit", "serve.shed", "tenant.preempt", "lease.expire")
+
+
+def _scattered_store(seed=7, n_versions=12, n_records=512, size=24,
+                     n_attrs=8):
+    """Same shape as the fault suite's store: scattered rlists trip the
+    density trigger mid-stream, so one run exercises dispatch, delivery,
+    migration and the group layer under multi-tenant contention."""
+    rng = np.random.default_rng(seed)
+    rls = [np.sort(rng.choice(n_records, size,
+                              replace=False)).astype(np.int64)
+           for _ in range(n_versions)]
+    graph = BipartiteGraph.from_rlists(rls, n_records=n_records)
+    data = rng.integers(0, 1 << 20, (n_records, n_attrs)).astype(np.int32)
+    store = PartitionedCVD(graph, data, np.zeros(n_versions, np.int64))
+    tree = WeightedTree(
+        parent=np.concatenate([[-1], np.zeros(n_versions - 1, np.int64)]),
+        n_records=np.array([len(r) for r in rls], np.int64),
+        edge_w=np.zeros(n_versions, np.int64))
+    return store, tree, graph, data
+
+
+# the canonical 3-tenant contention stream: phase-barrier submits (submit
+# everything, then drain — admission state at each submit is therefore a
+# pure function of the stream, so sheds replay identically in any
+# fault-injected run).  Tenant c is deliberately over-subscribed: with
+# MAX_BACKLOG=9 its phase-2 tail sheds Overloaded and its phase-3 tail
+# sheds QuotaExceeded, exercising both shed paths on every run.
+TENANTS = {
+    "a": TenantQuota(wave_share=2.0, max_wave=2),
+    "b": TenantQuota(wave_share=1.0, max_wave=3),
+    "c": TenantQuota(max_inflight=3, max_wave=2),
+}
+MAX_BACKLOG = 9
+PHASES = (
+    {"a": [0, 3, 7, 11], "b": [1, 4, 8], "c": [2, 5]},
+    {"a": [6, 10, 0, 2, 9], "b": [11, 3], "c": [7, 1, 4, 8]},
+    {"a": [5, 8], "b": [6, 9, 10], "c": [0, 11, 5, 9]},
+)
+# what admission control must do with the stream (derived by hand from
+# MAX_BACKLOG / max_inflight; asserted, not assumed)
+EXPECT_ADMIT = {
+    "a": [[0, 3, 7, 11], [6, 10, 0, 2, 9], [5, 8]],
+    "b": [[1, 4, 8], [11, 3], [6, 9, 10]],
+    "c": [[2, 5], [7, 1], [0, 11, 5]],
+}
+EXPECT_SHEDS = [("c", 4, "Overloaded"), ("c", 8, "Overloaded"),
+                ("c", 9, "QuotaExceeded")]
+
+
+def _run_tenant_stream(*, plan=None, retry=None, use_kernel=False):
+    """The full multi-tenant serve run: budget-limited scattered store,
+    coordinator-owned drain-mode trigger, inline (deterministic)
+    scheduling.  Returns (mts, store, per-tenant delivered arrays in
+    submission order, sheds)."""
+    store, tree, graph, data = _scattered_store()
+    store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+    trig = RepartitionTrigger(store, tree, min_waves=2,
+                              use_kernel=use_kernel, drain_timeout_s=5.0)
+    mts = MultiTenantServer(store, threads=False, quotas=TENANTS,
+                            max_backlog=MAX_BACKLOG, retry=retry,
+                            trigger=trig, use_kernel=use_kernel)
+    delivered = {t: [] for t in TENANTS}
+    sheds = []
+    ctx = plan.armed() if plan is not None else contextlib.nullcontext()
+    with ctx:
+        for phase in PHASES:
+            tickets = {t: [] for t in TENANTS}
+            for tid, vids in phase.items():
+                for v in vids:
+                    try:
+                        tickets[tid].append(mts.submit(tid, v))
+                    except (QuotaExceeded, Overloaded) as e:
+                        sheds.append((tid, v, type(e).__name__))
+            for tid, tks in tickets.items():
+                for tk in tks:
+                    delivered[tid].append(
+                        np.asarray(mts.result(tid, tk)))
+        mts.close()
+    return mts, store, delivered, sheds
+
+
+def _serial_oracle(use_kernel=False):
+    """Each tenant's fault-free SERIAL run: its admitted stream through a
+    lone single-tenant server on a fresh identical store — the reference
+    the multi-tenant delivered streams must be bit-identical to."""
+    out = {}
+    for tid in TENANTS:
+        store, tree, graph, data = _scattered_store()
+        store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+        srv = BatchedCheckoutServer(store, use_kernel=use_kernel)
+        outs = []
+        for phase_vids in EXPECT_ADMIT[tid]:
+            outs.extend(np.asarray(m) for m in srv.serve(phase_vids))
+        srv.close()
+        out[tid] = outs
+    return out
+
+
+def _assert_balanced(mts, store):
+    """The post-close balance sheet: zero backlog/inflight/reservations,
+    zero held leases, no counter underflows, group pins balanced."""
+    acct = mts.accounting()
+    assert acct["backlog"] == 0
+    assert acct["leases_held"] == 0
+    for tid, t in acct["tenants"].items():
+        assert t["queued"] == 0, (tid, t)
+        assert t["inflight"] == 0, (tid, t)
+        assert t["reserved"] == 0, (tid, t)
+    cnt = getattr(store, "_inflight_waves", None)
+    assert int(cnt or 0) == 0
+    if isinstance(cnt, GuardedCounter):
+        assert cnt.underflows == 0
+    reg = read_leases(store, create=False)
+    assert reg is not None and reg.held() == 0
+    mgr = get_superblock_groups(store)
+    if mgr is not None:
+        assert mgr.pins - mgr.evictions == len(mgr.groups)
+        assert mgr.pinned_bytes <= mgr.budget
+
+
+# ------------------------------------------------------------- validation --
+def test_quota_and_registration_validation():
+    store, *_ = _scattered_store()
+    with pytest.raises(ValueError, match="max_inflight"):
+        TenantQuota(max_inflight=0)
+    with pytest.raises(ValueError, match="wave_share"):
+        TenantQuota(wave_share=0)
+    with pytest.raises(ValueError, match="pinned_share"):
+        TenantQuota(pinned_share=1.5)
+    with pytest.raises(ValueError, match="max_wave"):
+        TenantQuota(max_wave=0)
+    with pytest.raises(ValueError, match="max_backlog"):
+        MultiTenantServer(store, max_backlog=0)
+    mts = MultiTenantServer(store, threads=False, quotas={"a": None})
+    with pytest.raises(ValueError, match="already registered"):
+        mts.register("a")
+    with pytest.raises(KeyError):
+        mts.submit("ghost", 0)
+    with pytest.raises(ValueError, match="unknown version"):
+        mts.submit("a", 99)
+    mts.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        mts.submit("a", 0)
+
+
+# ----------------------------------------------- inline stream bit-identity --
+@pytest.fixture(scope="module")
+def serial_oracle():
+    return _serial_oracle()
+
+
+def test_inline_stream_bit_identical_to_serial_runs(serial_oracle):
+    """The tentpole contract, fault-free: every tenant's delivered stream
+    through the shared coordinator is bit-identical to its own serial
+    single-server run, sheds land exactly where admission state says,
+    and the books balance after close()."""
+    mts, store, delivered, sheds = _run_tenant_stream()
+    assert sheds == EXPECT_SHEDS
+    for tid, outs in delivered.items():
+        want = serial_oracle[tid]
+        assert len(outs) == len(want) == sum(
+            len(p) for p in EXPECT_ADMIT[tid])
+        for g, w in zip(outs, want):
+            np.testing.assert_array_equal(g, w)
+    # the bounded-queue invariant: admission never let the backlog past
+    # the bound (peak hits the bound exactly — the stream was built to)
+    assert mts.peak_backlog <= MAX_BACKLOG
+    # per-tenant books
+    sa, sb, sc = (mts.stats(t) for t in ("a", "b", "c"))
+    assert sa.submitted == 11 and sa.delivered == 11 and sa.failed == 0
+    assert sb.submitted == 8 and sb.delivered == 8
+    assert sc.submitted == 7 and sc.delivered == 7
+    assert sc.shed_overload == 2 and sc.shed_quota == 1
+    assert sa.preempts > 0            # phase-2 backlog outlived a's deficit
+    # the stream's contention really drove a migration through the drain
+    assert mts.repartitions >= 1 and store.epoch >= 1
+    _assert_balanced(mts, store)
+
+
+# -------------------------------------------------------------- fair share --
+def test_drr_weighted_grant_log():
+    """DRR with 2:1 wave shares: while both tenants are backlogged every
+    round grants a twice and b once; when a drains, b gets every round.
+    The grant log is the auditable record."""
+    store, *_ = _scattered_store()
+    mts = MultiTenantServer(
+        store, threads=False,
+        quotas={"a": TenantQuota(wave_share=2.0, max_wave=2),
+                "b": TenantQuota(wave_share=1.0, max_wave=2)})
+    for v in range(12):
+        mts.submit("a", v % 12)
+        mts.submit("b", (v + 5) % 12)
+    mts.pump()
+    assert mts.grant_log == ["a", "a", "b"] * 3 + ["b"] * 3
+    mts.close()
+    _assert_balanced(mts, store)
+
+
+def test_drr_equal_share_bounded_wait():
+    """Equal shares, one ticket per wave: strict round robin — between two
+    consecutive grants to any backlogged tenant at most N-1 other grants
+    land (the bounded-wait W of the scheduler)."""
+    store, *_ = _scattered_store()
+    ids = ("a", "b", "c")
+    mts = MultiTenantServer(
+        store, threads=False,
+        quotas={t: TenantQuota(max_wave=1) for t in ids})
+    for v in range(4):
+        for t in ids:
+            mts.submit(t, v)
+    mts.pump()
+    assert mts.grant_log == list(ids) * 4
+    for t in ids:
+        idx = [i for i, g in enumerate(mts.grant_log) if g == t]
+        assert max(b - a for a, b in zip(idx, idx[1:])) <= len(ids)
+    mts.close()
+    # a perfectly fair run scores a perfect Jain index
+    assert jain_index([mts.stats(t).delivered for t in ids]) == 1.0
+
+
+def test_idle_tenant_does_not_hoard_deficit():
+    """A tenant idle for many rounds must not bank deficit and burst past
+    everyone on return: its first round back grants wave_share waves,
+    not wave_share * idle_rounds."""
+    store, *_ = _scattered_store()
+    mts = MultiTenantServer(
+        store, threads=False,
+        quotas={"busy": TenantQuota(max_wave=1),
+                "idle": TenantQuota(max_wave=1)})
+    for v in range(6):
+        mts.submit("busy", v)
+    mts.pump()                         # idle earns nothing while absent
+    for v in range(4):
+        mts.submit("idle", v)
+        mts.submit("busy", v + 6)
+    mts.pump()
+    # the return round interleaves 1:1 — no burst
+    tail = mts.grant_log[6:]
+    assert tail.count("idle") == 4
+    assert max(tail.count("idle") - tail.count("busy"), 0) <= 1
+    mts.close()
+
+
+# ------------------------------------------------------- pinned-byte share --
+def test_pinned_share_throttles_to_perpart_bit_identically():
+    """A tenant past its pinned-byte share dispatches perpart (no new
+    pins, no evicting the other tenant's groups) — results stay
+    bit-identical, and the throttle is visible in its stats.  The store
+    is partitioned so single-partition groups form: hog's traffic pins
+    one group (over its 5% share), norm's pins another, both co-resident
+    under the budget (no LRU interference)."""
+    store, tree, graph, data = _scattered_store()
+    store.repartition(np.arange(graph.n_versions) % 4)
+    store.superblock_max_bytes = 3 * estimate_superblock_bytes(store) // 4
+    hog_vids, norm_vids = [0, 4, 8], [1, 5, 9]         # pids {0} vs {1}
+    mts = MultiTenantServer(
+        store, threads=False, use_kernel=True,
+        quotas={"hog": TenantQuota(pinned_share=0.05, max_wave=4),
+                "norm": TenantQuota(max_wave=4)})
+    for rnd in range(3):
+        th = mts.submit_many("hog", hog_vids)
+        tn = mts.submit_many("norm", norm_vids)
+        for v, m in zip(hog_vids, mts.results("hog", th)):
+            np.testing.assert_array_equal(np.asarray(m),
+                                          data[graph.rlist(v)])
+        for v, m in zip(norm_vids, mts.results("norm", tn)):
+            np.testing.assert_array_equal(np.asarray(m),
+                                          data[graph.rlist(v)])
+    assert mts.stats("hog").pin_throttled_waves >= 1
+    assert mts.stats("norm").pin_throttled_waves == 0
+    acct = mts.accounting()
+    # ownership never exceeds what is actually pinned
+    assert acct["owned_pin_bytes"] <= acct["pinned_bytes"]
+    mts.close()
+    _assert_balanced(mts, store)
+
+
+# ----------------------------------------------------------- threaded mode --
+def test_threaded_four_tenants_bit_identical_and_balanced():
+    """4 concurrent tenants on worker threads over one store: every
+    delivered array matches the checkout oracle, delivery order within a
+    tenant is submission order, and the books balance after close()."""
+    store, tree, graph, data = _scattered_store()
+    store.superblock_max_bytes = estimate_superblock_bytes(store) // 3
+    ids = ("a", "b", "c", "d")
+    mts = MultiTenantServer(
+        store, threads=True,
+        quotas={t: TenantQuota(max_wave=3) for t in ids})
+    vids = {t: [(i + 3 * k) % 12 for i in range(9)]
+            for k, t in enumerate(ids)}
+    tks = {t: mts.submit_many(t, vids[t]) for t in ids}
+    for t in ids:
+        outs = mts.results(t, tks[t], timeout=120)
+        for v, m in zip(vids[t], outs):
+            np.testing.assert_array_equal(np.asarray(m),
+                                          data[graph.rlist(v)])
+    assert mts.drain(timeout=60)
+    mts.close()
+    for t in ids:
+        assert mts.stats(t).delivered == 9
+    assert jain_index([mts.stats(t).delivered for t in ids]) == 1.0
+    _assert_balanced(mts, store)
+
+
+def test_threaded_migration_under_contention_drains_leases():
+    """Concurrent tenant traffic + a drain-mode trigger: the migration
+    lands mid-stream by DRAINING the epoch's read leases (never racing a
+    launched kernel), service continues bit-identically after the epoch
+    bump, and the lease registry shows the drain."""
+    store, tree, graph, data = _scattered_store()
+    trig = RepartitionTrigger(store, tree, min_waves=2, use_kernel=False,
+                              drain_timeout_s=5.0)
+    mts = MultiTenantServer(
+        store, threads=True, trigger=trig, use_kernel=False,
+        quotas={"a": TenantQuota(max_wave=4),
+                "b": TenantQuota(max_wave=4)})
+    for rnd in range(10):
+        ta = mts.submit_many("a", [0, 3, 7, 11])
+        tb = mts.submit_many("b", [1, 4, 8, 2])
+        for v, m in zip([0, 3, 7, 11], mts.results("a", ta, timeout=120)):
+            np.testing.assert_array_equal(np.asarray(m),
+                                          data[graph.rlist(v)])
+        for v, m in zip([1, 4, 8, 2], mts.results("b", tb, timeout=120)):
+            np.testing.assert_array_equal(np.asarray(m),
+                                          data[graph.rlist(v)])
+        if mts.repartitions:
+            break
+    assert mts.repartitions >= 1 and store.epoch >= 1
+    reg = read_leases(store, create=False)
+    assert reg.drains >= 1
+    mts.close()
+    _assert_balanced(mts, store)
+
+
+def test_close_errors_undelivered_tickets_and_balances():
+    """close(drain=False) on a backlogged coordinator errors every
+    never-granted ticket (futures resolve, books roll to zero) instead of
+    leaking them."""
+    store, *_ = _scattered_store()
+    mts = MultiTenantServer(store, threads=False, quotas={"a": None})
+    tks = mts.submit_many("a", [0, 1, 2])
+    mts.close(drain=False)
+    for tk in tks:
+        with pytest.raises(RuntimeError, match="closed"):
+            mts.result("a", tk)
+    assert mts.stats("a").failed == 3
+    _assert_balanced(mts, store)
+    mts.close()                        # idempotent
+
+
+# ------------------------------------------------- single-fault recovery --
+@pytest.mark.parametrize("site", SITES)
+def test_single_fault_stream_bit_identical_per_tenant(site, serial_oracle):
+    """ISSUE 7's acceptance bar: any single injected fault at any
+    catalogued site — including the four new multi-tenant sites — under
+    3-tenant contention leaves every tenant's delivered stream
+    bit-identical to its fault-free SERIAL run, the shed set unchanged,
+    and every counter balanced after close()."""
+    plan = FaultPlan.single(site)
+    mts, store, delivered, sheds = _run_tenant_stream(
+        plan=plan, retry=RetryPolicy(sleep=lambda s: None))
+    assert sheds == EXPECT_SHEDS
+    for tid, outs in delivered.items():
+        want = serial_oracle[tid]
+        assert len(outs) == len(want)
+        for g, w in zip(outs, want):
+            np.testing.assert_array_equal(g, w)
+    _assert_balanced(mts, store)
+    # the new concurrency sites must actually be exercised by the stream
+    # (the sweep must not silently test nothing), and an absorbed fault
+    # must be visible in telemetry
+    if site in NEW_SITES:
+        assert [r.site for r in plan.fired] == [site]
+        assert (mts.absorbed_faults + mts.trigger_failures) > 0
