@@ -4,9 +4,9 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-cov test-faults test-tenancy bench bench-multipart \
-	bench-smoke bench-migration bench-group bench-serve bench-fault \
-	bench-multitenant bench-all lint
+.PHONY: test test-cov test-faults test-tenancy test-journal bench \
+	bench-multipart bench-smoke bench-migration bench-group bench-serve \
+	bench-fault bench-multitenant bench-journal bench-all lint
 
 # Line-coverage floor for src/repro/core (the CI gate behind `make test-cov`).
 # Baseline'd under the current suite; ratchet UP as coverage grows, never down.
@@ -23,6 +23,9 @@ test-faults:    ## fault-injection + durability suites under one seed
 test-tenancy:   ## multi-tenant serve suites (fault-seed aware, CI matrix)
 	$(PY) -m pytest -x -q tests/test_tenancy.py \
 		tests/test_tenancy_property.py
+
+test-journal:   ## WAL + integrity-scrub suites under one seed (CI matrix)
+	$(PY) -m pytest -x -q tests/test_journal.py tests/test_scrub.py
 
 test-cov:       ## tier-1 + line-coverage floor on src/repro/core (CI gate)
 	@if $(PY) -c "import pytest_cov" >/dev/null 2>&1; then \
@@ -51,6 +54,7 @@ bench-smoke:    ## tiny-shape kernel-path canary (CI): wave engine + online migr
 	BENCH_SMOKE=1 $(PY) -m benchmarks.pipelined_serve
 	BENCH_SMOKE=1 $(PY) -m benchmarks.fault_recovery
 	BENCH_SMOKE=1 $(PY) -m benchmarks.multitenant_serve
+	BENCH_SMOKE=1 $(PY) -m benchmarks.journal_recovery
 
 bench-migration: ## incremental vs rebuild migration (BENCH_online_migration.json)
 	$(PY) -m benchmarks.online_migration
@@ -66,6 +70,9 @@ bench-fault:    ## snapshot overhead + kill/restore recovery (BENCH_fault_recove
 
 bench-multitenant: ## N-tenant serve vs one server: throughput/fairness/shed (BENCH_multitenant_serve.json)
 	$(PY) -m benchmarks.multitenant_serve
+
+bench-journal:  ## journal write overhead + RPO + recovery curve (BENCH_journal_recovery.json)
+	$(PY) -m benchmarks.journal_recovery
 
 bench-all:      ## every paper-figure benchmark
 	$(PY) -m benchmarks.run

@@ -166,6 +166,20 @@ Failure-site catalogue + recovery invariants (``core.faults``)::
       lease.expire        EpochReadLeases.draining entry — nothing blocked
                           or drained yet; the migration defers and the
                           density streak survives for the retry
+      journal.append      core.journal.Journal.append: fires before any
+                          bytes are written — data-plane appends run
+                          BEFORE the in-memory swap, so nothing mutated
+                          and a plain retry is safe
+      journal.fsync       between the buffered frame write and its fsync —
+                          the repair truncates the unacknowledged frame,
+                          the retry appends it clean
+      journal.replay      journal.replay_into entry, before any record is
+                          applied — a retried restore() replays from the
+                          same verified snapshot
+      disk.torn_write /   Journal._write_frame: a half/corrupted frame
+      disk.bitflip        hits disk FIRST, then the fault raises — the
+                          in-process repair (or, after a kill, the
+                          reader's first-bad-record truncation) removes it
 
     The invariants every site is placed to preserve (and the fault suite
     asserts): a fault leaves no half-applied state — pins/evictions stay
@@ -176,6 +190,24 @@ Failure-site catalogue + recovery invariants (``core.faults``)::
     balances to zero after ``close()``, and a retried/degraded wave
     delivers results bit-identical to the fault-free run — per tenant,
     even under contention.
+
+Crash-recovery contract (``core.durability`` + ``core.journal``)::
+
+    snapshot   every SNAP_EVERY waves: graph/data/assignment bitexact +
+               maintenance-loop meta, parent-chained for content dedup,
+               per-leaf crc32 digests in the checkpoint manifest
+    journal    every store mutation BETWEEN snapshots appends a framed,
+               checksummed record to journal-<snapshot_vid>.wal; commit/
+               migration records fsync before the in-memory swap (an op
+               that returned survives any crash — RPO 0), watermark/
+               layout records ride buffered (advisory)
+    restore    newest snapshot whose digests verify (falling back along
+               the parent chain past corrupt generations), then replay
+               of every newer generation's journal — truncated at the
+               first torn/bad record, idempotent by epoch/vid guards
+    scrub      offline integrity pass: recompute every generation's leaf
+               digests + every journal's record checksums; detection
+               only, restore() does the healing
 """
 from __future__ import annotations
 
@@ -987,10 +1019,15 @@ class SuperblockGroups:
         hot partitions scattered across cold-order groups; this one
         starts clean, so the hot set packs into dense co-resident groups
         (fewer launches per wave).  Costs a full re-pin on the next
-        waves."""
+        waves.  The RESULT (not the heat trigger) is journaled as an
+        advisory record when a ``core.journal`` journal is attached, so a
+        restored store replays the layout directly — heat EWMAs between
+        snapshots are not journaled per wave."""
         self.evict_all()
         self._plan_epoch = -1
         self.ensure_plan()
+        from .journal import journal_regroup     # lazy: no import cycle
+        journal_regroup(self)
 
     def regroup_drift(self) -> float:
         """How far the LIVE hot ranking has drifted from the prefix the

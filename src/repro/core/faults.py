@@ -7,9 +7,9 @@ trigger fire, migration commit) were each hardened ad hoc as bugs surfaced.
 This module makes the failure surface explicit and exercisable:
 
   * ``SITES`` is the catalogue of named failure points threaded through
-    ``core.checkout``, ``core.partition``, ``core.online`` and
-    ``serve.checkout`` via ``fault_point(site)`` — a no-op (one module
-    global read) unless a plan is armed;
+    ``core.checkout``, ``core.partition``, ``core.online``,
+    ``core.journal`` and ``serve.checkout`` via ``fault_point(site)`` — a
+    no-op (one module global read) unless a plan is armed;
   * ``FaultPlan`` is a DETERMINISTIC schedule of which hit of which site
     raises ``InjectedFault``: an explicit ``{site: [hit indices]}`` map
     (``FaultPlan.single`` for the one-fault case the recovery tests sweep),
@@ -69,6 +69,16 @@ SITES = (
     "serve.shed",           # MultiTenantServer.submit: backpressure shed
     "tenant.preempt",       # DRR scheduler ending a backlogged tenant's turn
     "lease.expire",         # EpochReadLeases.draining: pre-drain entry
+    # write-ahead journal + disk-integrity sites (core/journal.py)
+    "journal.append",       # Journal.append: before any bytes are written
+    "journal.fsync",        # Journal.append: after the buffered write,
+                            # before the fsync (bytes repaired by truncate)
+    "journal.replay",       # journal.replay_into entry: before any record
+                            # is applied to the restored store
+    "disk.torn_write",      # Journal._write_frame: a HALF frame hits disk
+                            # first — the repair/reader truncation cleans it
+    "disk.bitflip",         # Journal._write_frame: a corrupted frame hits
+                            # disk first — crc catches it on read
 )
 
 

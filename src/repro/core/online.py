@@ -11,6 +11,14 @@ partitioning — intelligently (morph the closest existing partition, matching
 computed on the *version graph*, not the record sets) or naively (from
 scratch).  Migration cost is counted in record-row insertions + deletions,
 the unit the paper's Figs 14b/15b wall times are proportional to.
+
+Durability: the maintenance loop's state machines here (heat EWMAs,
+density streaks, trigger debounce) are snapshot-only — ``core.durability``
+persists them at each snapshot and a restart warms them back up from
+traffic.  The migrations they TRIGGER, by contrast, mutate the store and
+go through ``PartitionedCVD.apply_migration``/``repartition``, which
+write-ahead journal themselves (``core.journal``): an acknowledged
+migration survives any crash even between snapshots.
 """
 from __future__ import annotations
 

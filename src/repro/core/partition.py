@@ -23,11 +23,14 @@ same plan against the device-resident superblock.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Optional, Sequence
 
 import numpy as np
 
 from .graph import BipartiteGraph
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -86,15 +89,123 @@ class PartitionedCVD:
         released immediately.  Any attached hot-set ranking is dropped too
         (partition indices changed meaning with no morph map to carry the
         heat through).  The incremental path is ``apply_migration`` +
-        ``core.checkout.migrate_superblock``."""
+        ``core.checkout.migrate_superblock``.
+
+        Journaled (``core.journal``): the ``repartition`` record is
+        appended + fsynced BEFORE the in-memory rebuild — a failed append
+        leaves the store untouched (plain retry), and a crash after the
+        append replays the rebuild deterministically."""
         from .checkout import evict_superblocks
-        self.assignment = np.asarray(assignment, dtype=np.int64)
+        from .journal import _enc, get_journal
+        assignment = np.asarray(assignment, dtype=np.int64)
+        j = get_journal(self)
+        if j is not None:
+            j.append("repartition", {"assignment": _enc(assignment),
+                                     "epoch_after": int(self.epoch) + 1},
+                     sync=True)
+        self.assignment = assignment
         self.vid_to_pid = np.full(self.graph.n_versions, -1, np.int64)
         self._build()
         evict_superblocks(self)
         pol = getattr(self, "_hot_set_policy", None)
         if pol is not None:
             pol.reset()
+
+    def commit_version(self, rlist, *, parent: Optional[int] = None,
+                       new_rows: Optional[np.ndarray] = None,
+                       pid: Optional[int] = None) -> int:
+        """Append ONE new version to the live store — the write path's
+        minimal unit (the paper's commit, bolted onto the partitioned
+        physical layout).
+
+        ``rlist`` are the GLOBAL rids the version contains; it may
+        reference existing records and the ``len(new_rows)`` fresh rids
+        allocated densely at the end of the base data.  The version lands
+        in its parent's partition (the online append rule) unless ``pid``
+        names a partition label explicitly; a parentless commit opens a
+        fresh partition.  Bumps the epoch and eagerly evicts cached
+        superblocks (the receiving partition's block grew — stale device
+        copies must not serve it).
+
+        Journaled (``core.journal``): the commit record is appended +
+        fsynced BEFORE the in-memory swap.  A failed append mutates
+        nothing (retry-safe); once ``commit_version`` returns, the commit
+        survives any crash — the zero-RPO contract ``StoreDurability``
+        replays on restore."""
+        from .checkout import evict_superblocks
+        from .journal import _enc, get_journal
+        rlist = np.unique(np.asarray(rlist, dtype=np.int64))
+        if new_rows is not None and len(new_rows) == 0:
+            new_rows = None
+        if new_rows is not None:
+            new_rows = np.ascontiguousarray(
+                np.asarray(new_rows, dtype=self.data.dtype))
+            if new_rows.ndim != 2 or new_rows.shape[1] != self.data.shape[1]:
+                raise ValueError(
+                    f"new_rows shape {new_rows.shape} does not match the "
+                    f"base data width {self.data.shape[1]}")
+        k = 0 if new_rows is None else len(new_rows)
+        n0 = int(self.graph.n_records)
+        if len(rlist) and (rlist[0] < 0 or rlist[-1] >= n0 + k):
+            raise ValueError(
+                f"rlist references rid {int(rlist[-1])} outside "
+                f"[0, {n0 + k}) (existing records + new rows)")
+        if parent is not None:
+            parent = int(parent)
+            if not 0 <= parent < self.graph.n_versions:
+                raise ValueError(f"parent vid {parent} out of range")
+        if pid is None:
+            pid = (int(self.assignment[parent]) if parent is not None
+                   else int(self.assignment.max()) + 1
+                   if len(self.assignment) else 0)
+        pid = int(pid)
+        vid = int(self.graph.n_versions)
+        # -- STAGE: everything off to the side, store still untouched -------
+        data = (self.data if new_rows is None
+                else np.concatenate([self.data, new_rows], axis=0))
+        indptr = np.append(self.graph.indptr,
+                           self.graph.indptr[-1] + len(rlist))
+        indices = np.concatenate([self.graph.indices, rlist])
+        assignment = np.append(self.assignment, pid)
+        j = get_journal(self)
+        if j is not None:
+            j.append("commit", {
+                "vid": vid,
+                "parent": parent,
+                "pid": pid,
+                "rlist": _enc(rlist),
+                "new_rows": None if new_rows is None else _enc(new_rows),
+                "epoch_after": int(self.epoch) + 1,
+                "n_versions_after": vid + 1}, sync=True)
+        # -- COMMIT: swap + rebuild the one partition that grew -------------
+        self.data = data
+        self.graph.indptr = indptr
+        self.graph.indices = indices
+        self.graph.n_records = n0 + k
+        self.assignment = assignment
+        vids = np.flatnonzero(self.assignment == pid)
+        part = build_partition(self.graph, self.data, pid, vids)
+        slot = next((i for i, p in enumerate(self.partitions)
+                     if p.pid == pid), None)
+        if slot is None:
+            self.partitions.append(part)
+            slot = len(self.partitions) - 1
+        else:
+            self.partitions[slot] = part
+        self.vid_to_pid = np.append(self.vid_to_pid, -1)
+        self.vid_to_pid[vids] = slot
+        self.epoch += 1
+        try:
+            evict_superblocks(self)
+        except Exception:
+            # eager release is an optimization: every superblock cache is
+            # epoch-keyed and rebuilds lazily, so a transient eviction
+            # failure must not torpedo an already-durable commit (a retry
+            # would double-append the version)
+            logger.warning("post-commit superblock eviction failed; stale "
+                           "device copies will lapse on next access",
+                           exc_info=True)
+        return vid
 
     def apply_migration(self, plan: "MigrationPlan") -> None:
         """Adopt a ``plan_migration`` plan IN PLACE: morph the partition set
@@ -118,10 +229,20 @@ class PartitionedCVD:
         A failure during staging (including an injected ``migration.commit``
         fault at the boundary) leaves the store bit-identical to its
         pre-migration state — same epoch, same partitions, same pinned
-        groups — so the caller can simply retry or walk away."""
+        groups — so the caller can simply retry or walk away.
+
+        Journaled (``core.journal``) as an intent→commit pair bracketing
+        the stage: the buffered ``migration.intent`` record lands after
+        staging, the fsynced ``migration.commit`` record BEFORE the swap.
+        An intent without a commit is the crashed-mid-migration signature
+        replay ignores; a failed commit-record append leaves the store
+        unmutated (retry restages), and once the record is durable the
+        swap is deterministic — a crash between them replays the
+        migration from the record."""
         from .checkout import (evict_superblocks, migrate_groups,
                                take_group_superblocks)
         from .faults import fault_point
+        from .journal import _enc, get_journal
         if len(plan.assignment) != self.graph.n_versions:
             raise ValueError(
                 f"plan covers {len(plan.assignment)} versions, store has "
@@ -156,7 +277,16 @@ class PartitionedCVD:
                 vid_to_slot={int(v): k for k, v in enumerate(vids)}))
             vid_to_pid[vids] = i
         new_assignment = plan.assignment.copy()
+        j = get_journal(self)
+        if j is not None:
+            j.append_advisory("migration.intent",
+                              {"assignment": _enc(new_assignment),
+                               "epoch_before": int(self.epoch)})
         fault_point("migration.commit", self)
+        if j is not None:
+            j.append("migration.commit",
+                     {"assignment": _enc(new_assignment),
+                      "epoch_after": int(self.epoch) + 1}, sync=True)
         # -- COMMIT: point of no return --------------------------------------
         taken_groups = take_group_superblocks(self)
         self.assignment = new_assignment

@@ -280,6 +280,7 @@ class BatchedCheckoutServer:
         self._clock = clock
         self._pending: list[tuple[int, int, float]] = []  # (ticket, vid, t)
         self._next_ticket = 0
+        self._journaled_ticket = 0   # watermark last recorded in the journal
         self._inflight: Optional[_InflightWave] = None
         # a wave re-queued by a failed flush must NOT be re-fired by the
         # deadline flusher on the very next poll() (its timestamps are
@@ -336,6 +337,22 @@ class BatchedCheckoutServer:
             self.flush()
         return tickets
 
+    def _journal_watermark(self) -> None:
+        """Advisory ``ticket`` record of this tenant's watermark, appended
+        when it has advanced since the last record.  Buffered and
+        failure-absorbed (``append_advisory``): the serve path must never
+        fail on telemetry, and a lost tail only widens the restored
+        watermark gap — never a ticket collision, since restore takes the
+        max of the snapshot and journal records."""
+        from ..core.journal import get_journal
+        j = get_journal(self.store)
+        if j is None or self._next_ticket <= self._journaled_ticket:
+            return
+        if j.append_advisory("ticket", {
+                "tenant": "" if self.tenant is None else str(self.tenant),
+                "watermark": int(self._next_ticket)}):
+            self._journaled_ticket = self._next_ticket
+
     def poll(self) -> bool:
         """Event-loop hook: deliver the in-flight wave if its device result
         is ready (never blocks on the device), then deadline-flush iff the
@@ -366,6 +383,7 @@ class BatchedCheckoutServer:
         ``pipeline=False``.  Every result is also retained for
         ``result(ticket)`` — ticket-oriented callers are mode-agnostic."""
         self._check_open()
+        self._journal_watermark()
         wave = self._pending
         self._pending = []
         dispatched = None
@@ -471,6 +489,7 @@ class BatchedCheckoutServer:
         ``RuntimeError`` afterwards (``poll()`` returns False)."""
         if self._closed:
             return
+        self._journal_watermark()    # final watermark record (advisory)
         wave, self._inflight = self._inflight, None
         if wave is not None:
             if deliver:

@@ -276,6 +276,21 @@ class MultiTenantServer:
             raise KeyError(f"unknown tenant {tenant_id!r}")
         return t
 
+    def tenant_servers(self) -> dict:
+        """``{tenant_id: BatchedCheckoutServer}`` — what lets
+        ``core.durability.StoreDurability.snapshot(servers=...)`` take a
+        ``MultiTenantServer`` directly and persist every tenant's ticket
+        watermark.  Each server's counter is folded forward to cover the
+        coordinator's ADMISSION counter too (tickets admitted but not yet
+        granted never reached the server, but clients hold them — a
+        restored server must not re-mint them).  Folding forward is safe:
+        the counter only ever mints fresh ids."""
+        with self._lock:
+            for t in self._tenants.values():
+                t.server._next_ticket = max(t.server._next_ticket,
+                                            t.next_ticket)
+            return {t.id: t.server for t in self._tenants.values()}
+
     # -- admission plane -------------------------------------------------------
     def submit(self, tenant_id: str, vid: int) -> int:
         """Admit one checkout request for ``tenant_id``; returns its

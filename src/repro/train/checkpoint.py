@@ -21,6 +21,7 @@ import dataclasses
 import json
 import os
 import pickle
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -48,10 +49,21 @@ class CheckpointStore:
         self._manifest_path = os.path.join(self.directory, "manifest.json")
         self._cvd_path = os.path.join(self.directory, "cvd.pkl")
         if os.path.exists(self._cvd_path):
-            with open(self._cvd_path, "rb") as f:
-                self.cvd: SplitByRlist = pickle.load(f)
-            with open(self._manifest_path) as f:
-                self.manifest = json.load(f)
+            try:
+                with open(self._cvd_path, "rb") as f:
+                    self.cvd: SplitByRlist = pickle.load(f)
+                with open(self._manifest_path) as f:
+                    self.manifest = json.load(f)
+            except Exception as e:
+                raise ValueError(
+                    f"corrupt checkpoint store in {self.directory!r}: "
+                    f"{e} — the manifest/CVD pair is unreadable; recover "
+                    "from a replica or remove the directory") from e
+            if not isinstance(self.manifest, dict) \
+                    or "versions" not in self.manifest:
+                raise ValueError(
+                    f"corrupt checkpoint manifest in {self.directory!r}: "
+                    "missing the versions table")
         else:
             # records: (shard_rows,) fp32 blocks => n_attrs = shard_rows
             self.cvd = SplitByRlist(n_attrs=self.shard_rows)
@@ -84,9 +96,11 @@ class CheckpointStore:
                 arr = padded8.view(np.int32)
                 entry["nbytes"] = nbytes
                 entry["encoding"] = "raw"
+                entry["crc32"] = zlib.crc32(raw.tobytes())
             else:
                 arr = np.asarray(
                     jax.device_get(leaf)).astype(np.float32).ravel()
+                entry["crc32"] = zlib.crc32(arr.tobytes())
             n_blocks = max(1, -(-len(arr) // self.shard_rows))
             padded = np.zeros(n_blocks * self.shard_rows, arr.dtype)
             padded[:len(arr)] = arr
@@ -153,6 +167,87 @@ class CheckpointStore:
             tree = jax.tree.map(jax.device_put, tree, sh)
         return tree
 
+    def verify(self, vid: int) -> list[str]:
+        """Recompute every leaf's digest for ``vid`` against the per-leaf
+        ``crc32`` the manifest recorded at save time; returns the paths
+        that FAIL (empty = verified).  A flipped bit anywhere in a
+        version's stored rows — base data chunks, a scrambled row
+        permutation, a corrupt rlist — changes some leaf's decoded bytes
+        and trips its digest.  Leaves saved by a pre-digest writer carry
+        no crc and are skipped (nothing to verify against); a version
+        whose rows cannot be decoded at all fails wholesale."""
+        try:
+            info = self.manifest["versions"][str(vid)]
+            table_i32 = self.cvd.checkout(vid)
+            if "row_perm" in info:
+                table_i32 = table_i32[np.asarray(info["row_perm"],
+                                                 np.int64)]
+            table_f32 = table_i32.view(np.float32)
+        except Exception:
+            return [f"<version {vid}>"]
+        bad: list[str] = []
+        off = 0
+        for entry in info["layout"]:
+            want = entry.get("crc32")
+            blocks = table_i32[off:off + entry["n_blocks"]]
+            off += entry["n_blocks"]
+            if want is None:
+                continue
+            try:
+                if entry.get("encoding") == "raw":
+                    got = zlib.crc32(np.ascontiguousarray(blocks).view(
+                        np.uint8).ravel()[:entry["nbytes"]].tobytes())
+                else:
+                    n = (int(np.prod(entry["shape"]))
+                         if entry["shape"] else 1)
+                    flat = table_f32[
+                        off - entry["n_blocks"]:off].ravel()[:n]
+                    got = zlib.crc32(np.ascontiguousarray(flat).tobytes())
+            except Exception:
+                got = None
+            if got != int(want):
+                bad.append(entry["path"])
+        return bad
+
+    def compact(self, keep_vids: list[int]) -> dict:
+        """Rebuild the CVD retaining ONLY ``keep_vids``, re-chained in the
+        given order: the first kept version re-anchors as a parentless
+        full commit, each later one parents on its predecessor — so
+        content dedup between retained generations survives the drop of
+        everything older.  Versions not listed (including non-checkpoint
+        versions a caller committed into the same CVD) are gone for good.
+        Persists atomically and returns ``{old_vid: new_vid}``."""
+        keep = [int(v) for v in keep_vids]
+        for v in keep:
+            if str(v) not in self.manifest["versions"]:
+                raise ValueError(f"vid {v} not in this checkpoint store")
+        new_cvd = SplitByRlist(n_attrs=self.shard_rows)
+        new_manifest: dict = {"versions": {}}
+        mapping: dict = {}
+        prev_new: Optional[int] = None
+        for v in keep:
+            info = self.manifest["versions"][str(v)]
+            table = self.cvd.checkout(v)
+            if "row_perm" in info:
+                table = table[np.asarray(info["row_perm"], np.int64)]
+            parents = () if prev_new is None else (prev_new,)
+            nv = new_cvd.commit(table, parents=parents,
+                                t=float(info.get("step", 0)))
+            entry = {k: val for k, val in info.items() if k != "row_perm"}
+            co = new_cvd.checkout(nv)
+            if not np.array_equal(co, table):
+                ck, tk = _raw_keys(co), _raw_keys(table)
+                order = np.argsort(ck, kind="stable")
+                pos = np.searchsorted(ck[order], tk)
+                entry["row_perm"] = order[pos].tolist()
+            new_manifest["versions"][str(nv)] = entry
+            mapping[v] = nv
+            prev_new = nv
+        self.cvd = new_cvd
+        self.manifest = new_manifest
+        self._persist()
+        return mapping
+
     def lineage(self, vid: int) -> list[int]:
         return self.cvd.vgraph.ancestors(vid)
 
@@ -177,3 +272,9 @@ class CheckpointStore:
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, path)
+        # fsync the DIRECTORY too: os.replace made the rename atomic, but
+        # the new directory entry itself is not durable until the dir
+        # inode is flushed — a crash right after rename could resurface
+        # the old file or none at all
+        from ..core.journal import fsync_dir
+        fsync_dir(self.directory)
