@@ -4,9 +4,10 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-cov test-faults test-tenancy test-journal bench \
-	bench-multipart bench-smoke bench-migration bench-group bench-serve \
-	bench-fault bench-multitenant bench-journal bench-all lint
+.PHONY: test test-cov test-faults test-tenancy test-journal test-ingest \
+	bench bench-multipart bench-smoke bench-migration bench-group \
+	bench-serve bench-fault bench-multitenant bench-journal bench-ingest \
+	bench-all lint
 
 # Line-coverage floor for src/repro/core (the CI gate behind `make test-cov`).
 # Baseline'd under the current suite; ratchet UP as coverage grows, never down.
@@ -26,6 +27,9 @@ test-tenancy:   ## multi-tenant serve suites (fault-seed aware, CI matrix)
 
 test-journal:   ## WAL + integrity-scrub suites under one seed (CI matrix)
 	$(PY) -m pytest -x -q tests/test_journal.py tests/test_scrub.py
+
+test-ingest:    ## fused commit-wave suite under one seed (CI matrix)
+	$(PY) -m pytest -x -q tests/test_ingest.py
 
 test-cov:       ## tier-1 + line-coverage floor on src/repro/core (CI gate)
 	@if $(PY) -c "import pytest_cov" >/dev/null 2>&1; then \
@@ -55,6 +59,7 @@ bench-smoke:    ## tiny-shape kernel-path canary (CI): wave engine + online migr
 	BENCH_SMOKE=1 $(PY) -m benchmarks.fault_recovery
 	BENCH_SMOKE=1 $(PY) -m benchmarks.multitenant_serve
 	BENCH_SMOKE=1 $(PY) -m benchmarks.journal_recovery
+	BENCH_SMOKE=1 $(PY) -m benchmarks.commit_ingest
 
 bench-migration: ## incremental vs rebuild migration (BENCH_online_migration.json)
 	$(PY) -m benchmarks.online_migration
@@ -73,6 +78,9 @@ bench-multitenant: ## N-tenant serve vs one server: throughput/fairness/shed (BE
 
 bench-journal:  ## journal write overhead + RPO + recovery curve (BENCH_journal_recovery.json)
 	$(PY) -m benchmarks.journal_recovery
+
+bench-ingest:   ## fused commit wave vs serial commit loop (BENCH_commit_ingest.json)
+	$(PY) -m benchmarks.commit_ingest
 
 bench-all:      ## every paper-figure benchmark
 	$(PY) -m benchmarks.run

@@ -1,0 +1,234 @@
+"""Fused commit ingestion waves vs the serial commit loop.
+
+The write-side twin of the batched-checkout benchmark: K pending commits
+land either as K ``commit_version`` calls (the serial baseline — K CSR
+rebuilds, K partition rebuilds of the SAME hot partitions, K whole-
+superblock refreshes, K journal fsyncs) or as ONE
+``PartitionedCVD.commit_many`` ingest wave (one bulk CSR append, one
+rebuild per touched partition label, one in-place superblock extension
+via the ``segment_append`` kernel, ONE group-committed fsync).
+
+Measured per tier (kernel = device-resident superblock extended in
+place; host = host-only cache):
+
+  * wall time of the serial loop vs the fused wave over IDENTICAL
+    batches on identical stores, medians over fresh-store reps;
+  * journal fsyncs per ingest (the group-commit witness: K serial vs 1);
+  * superblock bytes re-uploaded by the wave (captured off
+    ``refresh_superblocks_after_commit``) — bounded by the new
+    BN-aligned tiles, never a whole-store re-derivation.
+
+Emits CSV lines (benchmarks/run.py convention) and writes
+``BENCH_commit_ingest.json`` at the repo root; ``BENCH_SMOKE=1`` (the CI
+canary, ``make bench-smoke``) shrinks shapes and writes ``*.smoke.json``.
+The canary ASSERTS post-ingest bit-identity to the serial oracle, the
+one-fsync-per-wave witness, and the bounded upload; the wall-clock
+headline — K=16 ingest ≥ 5x over the serial loop on the kernel tier —
+is asserted on the full run only (smoke shapes on shared CI machines are
+too noisy for a timing gate).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import repro.core.checkout as checkout_mod
+from repro.core.checkout import checkout_partitioned, get_superblock
+from repro.core.graph import BipartiteGraph
+from repro.core.journal import Journal, attach_journal, read_records
+from repro.core.partition import PartitionedCVD
+
+from .common import emit
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+SEED = 17
+
+P = 4 if SMOKE else 8                    # partitions
+R, D = (1024, 32) if SMOKE else (8192, 64)
+N_VERSIONS = 16 if SMOKE else 48
+ROWS_PER_VERSION = 48 if SMOKE else 192
+K_COMMITS = 16                           # the ISSUE headline wave size
+NEW_ROWS = 8 if SMOKE else 24            # fresh rows per commit
+REPS = 3 if SMOKE else 5                 # fresh-store reps; medians
+
+
+def _make_store(rng):
+    rls = [np.sort(rng.choice(R, ROWS_PER_VERSION,
+                              replace=False)).astype(np.int64)
+           for _ in range(N_VERSIONS)]
+    graph = BipartiteGraph.from_rlists(rls, n_records=R)
+    data = rng.integers(0, 1 << 20, (R, D)).astype(np.int32)
+    return PartitionedCVD(graph, data, np.arange(N_VERSIONS) % P)
+
+
+def _make_batch(rng):
+    """K_COMMITS dicts: mostly tail-append ingests (fresh rows onto a
+    random parent — the common write shape), a few subset snapshots.
+    New rids are store-relative, resolved at apply time."""
+    batch = []
+    for i in range(K_COMMITS):
+        parent = int(rng.integers(0, N_VERSIONS))
+        if i % 4 == 3:
+            m = int(rng.integers(8, ROWS_PER_VERSION))
+            batch.append({"kind": "subset", "parent": parent, "m": m})
+        else:
+            new = rng.integers(0, 1 << 20, (NEW_ROWS, D)).astype(np.int32)
+            batch.append({"kind": "append", "parent": parent, "new": new})
+    return batch
+
+
+def _resolve(store, batch):
+    """Bind the batch's new rids to the store's CURRENT tail (both paths
+    see the identical dicts: the wave resolves staged growth itself, the
+    serial loop re-binds per commit)."""
+    n = int(store.graph.n_records)
+    out = []
+    for b in batch:
+        if b["kind"] == "append":
+            nn = len(b["new"])
+            rl = np.concatenate([store.graph.rlist(b["parent"]),
+                                 np.arange(n, n + nn, dtype=np.int64)])
+            out.append({"rlist": rl, "parent": b["parent"],
+                        "new_rows": b["new"]})
+            n += nn
+        else:
+            out.append({"rlist": store.graph.rlist(b["parent"])[:b["m"]],
+                        "parent": b["parent"]})
+    return out
+
+
+def _pin(store, use_kernel):
+    sb, _ = get_superblock(store)
+    if use_kernel:
+        sb.device()
+    return sb
+
+
+def _journal(store, scratch, tag):
+    j = Journal(os.path.join(scratch, f"{tag}.owj"), owner=store)
+    attach_journal(store, j)
+    return j
+
+
+def _identical(a, b):
+    assert np.array_equal(a.graph.indptr, b.graph.indptr)
+    assert np.array_equal(a.graph.indices, b.graph.indices)
+    assert np.array_equal(np.asarray(a.data), np.asarray(b.data))
+    assert np.array_equal(a.assignment, b.assignment)
+    assert np.array_equal(a.vid_to_pid, b.vid_to_pid)
+
+
+def _bench_tier(use_kernel, scratch):
+    t_serial, t_wave, uploads = [], [], []
+    fsyncs_serial = fsyncs_wave = None
+    # one batch for every rep: delta shapes repeat, so rep 0 pays the jit
+    # compile for BOTH paths and the medians measure steady-state ingest
+    batch = _make_batch(np.random.default_rng(SEED))
+    for rep in range(REPS):
+        serial = _make_store(np.random.default_rng(SEED))
+        _pin(serial, use_kernel)
+        js = _journal(serial, scratch, f"s_{use_kernel}_{rep}")
+        commits = _resolve(serial, batch)
+        t0 = time.perf_counter()
+        for c in commits:
+            serial.commit_version(c["rlist"], parent=c["parent"],
+                                  new_rows=c.get("new_rows"))
+        t_serial.append(time.perf_counter() - t0)
+        fsyncs_serial = js.synced
+
+        wave = _make_store(np.random.default_rng(SEED))
+        _pin(wave, use_kernel)
+        jw = _journal(wave, scratch, f"w_{use_kernel}_{rep}")
+        captured = {}
+        orig = checkout_mod.refresh_superblocks_after_commit
+
+        def spy(*a, **kw):
+            captured["stats"] = out = orig(*a, **kw)
+            return out
+
+        checkout_mod.refresh_superblocks_after_commit = spy
+        try:
+            t0 = time.perf_counter()
+            wave.commit_many(commits)
+            t_wave.append(time.perf_counter() - t0)
+        finally:
+            checkout_mod.refresh_superblocks_after_commit = orig
+        fsyncs_wave = jw.synced
+        uploads.append(captured["stats"]["bytes_uploaded"])
+
+        # canaries every rep: the wave IS the serial loop, bit for bit,
+        # and the journals witnessed group commit (K fsyncs vs ONE)
+        _identical(wave, serial)
+        vids = [0, N_VERSIONS, N_VERSIONS + K_COMMITS - 1]
+        for x, y in zip(checkout_partitioned(wave, vids, use_kernel=False),
+                        checkout_partitioned(serial, vids,
+                                             use_kernel=False)):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+        recs, bad = read_records(jw.path)
+        assert bad is None and [r.kind for r in recs] == ["commit.batch"]
+        sb = checkout_mod.peek_superblock(wave)
+        assert captured["stats"]["bytes_uploaded"] <= sb.host.nbytes
+
+    med_s, med_w = float(np.median(t_serial)), float(np.median(t_wave))
+    return {
+        "tier": "kernel" if use_kernel else "host",
+        "serial_s": med_s,
+        "wave_s": med_w,
+        "speedup": med_s / med_w,
+        "commits_per_s_serial": K_COMMITS / med_s,
+        "commits_per_s_wave": K_COMMITS / med_w,
+        "journal_fsyncs_serial": int(fsyncs_serial),
+        "journal_fsyncs_wave": int(fsyncs_wave),
+        "superblock_bytes_uploaded": int(np.median(uploads)),
+    }
+
+
+def main() -> None:
+    scratch = tempfile.mkdtemp(prefix="bench_commit_ingest_")
+    try:
+        results = [_bench_tier(uk, scratch) for uk in (True, False)]
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+    for row in results:
+        emit(f"commit_ingest_{row['tier']}", row["wave_s"] * 1e6,
+             f"speedup={row['speedup']:.2f}x "
+             f"fsyncs={row['journal_fsyncs_wave']}/"
+             f"{row['journal_fsyncs_serial']} "
+             f"uploaded={row['superblock_bytes_uploaded']}")
+
+    name = ("BENCH_commit_ingest.smoke.json" if SMOKE
+            else "BENCH_commit_ingest.json")
+    out_path = pathlib.Path(__file__).resolve().parent.parent / name
+    out_path.write_text(json.dumps({
+        "config": {"smoke": SMOKE, "seed": SEED, "p": P, "r": R, "d": D,
+                   "n_versions": N_VERSIONS,
+                   "rows_per_version": ROWS_PER_VERSION,
+                   "k_commits": K_COMMITS, "new_rows": NEW_ROWS,
+                   "reps": REPS},
+        "results": results}, indent=2))
+    print(f"wrote {out_path}")
+
+    # ---- canary ------------------------------------------------------------
+    for row in results:
+        # group commit: the whole wave paid exactly ONE fsync (the serial
+        # loop paid one per commit)
+        assert row["journal_fsyncs_wave"] == 1, row
+        assert row["journal_fsyncs_serial"] == K_COMMITS, row
+        assert row["superblock_bytes_uploaded"] >= 0, row
+    if not SMOKE:
+        # the ISSUE headline, full run + kernel tier only
+        krow = next(r for r in results if r["tier"] == "kernel")
+        assert krow["speedup"] >= 5.0, \
+            f"K={K_COMMITS} ingest wave speedup {krow['speedup']:.2f}x " \
+            f"< 5x over the serial commit loop on the kernel tier"
+
+
+if __name__ == "__main__":
+    main()

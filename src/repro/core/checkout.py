@@ -39,6 +39,34 @@ previous one-gather-PER-PARTITION path survives as
 ``checkout_partitioned_perpart`` (the oracle and benchmark baseline), and
 ``checkout_versions_loop`` is the seed per-version gather loop.
 
+Commit ingest waves — the write-side twin (``core.partition`` +
+this module)::
+
+    commits: K = [{rlist|table, parent, pid}, ...]   (serve write tickets)
+      └─ PartitionedCVD.commit_many                  core.partition
+      │    STAGE: per-commit delta extraction (the sorted-join
+      │    ``datamodels.diff_against_parents`` for table-form commits —
+      │    parents may be staged earlier in the SAME wave), then ONE bulk
+      │    CSR/assignment/data append and ONE ``build_partition`` per
+      │    touched label (not per commit); everything before the journal
+      │    append is side-effect-free
+      └─ journal group commit                        core.journal
+      │    ONE ``commit.batch`` record + ONE fsync covers the whole wave;
+      │    replay applies all K commits or none (all-or-nothing, same
+      │    kill-matrix contract as single commits)
+      └─ COMMIT: pure field swaps + one epoch bump   core.partition
+      └─ refresh_superblocks_after_commit            (this module)
+           targeted device-state maintenance instead of the old
+           nuke-every-superblock: pinned groups the wave did NOT touch
+           revalidate at the new epoch in place (zero work, stay pinned);
+           touched superblocks extend IN PLACE via
+           ``extend_superblock_after_commit`` — ONE
+           ``kernels.ops.segment_append`` pallas_call reuses every
+           untouched BN-aligned tile device-to-device (sel 0), uploads
+           only the new tiles (sel 1) and zero-fills alignment slack on
+           device (sel 2), so an ingest wave's host→device traffic is
+           bounded by the new rows, not the store size
+
 Telemetry -> trigger -> migration loop (the online-repartitioning half,
 paper §4.3)::
 
@@ -166,6 +194,16 @@ Failure-site catalogue + recovery invariants (``core.faults``)::
       lease.expire        EpochReadLeases.draining entry — nothing blocked
                           or drained yet; the migration defers and the
                           density streak survives for the retry
+      ingest.extract      PartitionedCVD.commit_many entry — nothing
+                          staged, nothing durable; a plain retry restages
+                          the whole wave from scratch
+      ingest.commit       commit_version/commit_many at the stage→journal
+                          boundary — store AND journal both untouched, so
+                          a retry re-stages and re-appends cleanly
+      ingest.append       extend_superblock_after_commit entry — the old
+                          superblock (host + device) is still whole; the
+                          refresh degrades to evicting just that group,
+                          which rebuilds lazily on next touch
       journal.append      core.journal.Journal.append: fires before any
                           bytes are written — data-plane appends run
                           BEFORE the in-memory swap, so nothing mutated
@@ -1896,6 +1934,269 @@ def migrate_superblock(store, old_sb: Superblock, plan, *,
         bytes_uploaded=int(bytes_uploaded), bytes_total=int(host.nbytes),
         used_device=used_device, wall_s=time.perf_counter() - t0)
     return new_sb, stats
+
+
+# ------------------------------------- commit ingestion: in-place append --
+
+def extend_superblock_after_commit(store, old_sb: Superblock,
+                                   touched_old_grids: dict, *,
+                                   pids: Optional[Sequence[int]] = None,
+                                   use_kernel: Optional[bool] = None
+                                   ) -> tuple[Superblock, MigrationStats]:
+    """Grow a superblock IN PLACE after a commit wave: reuse the OLD device
+    buffer, upload only the new BN-aligned tiles.
+
+    Called AFTER ``commit_version``/``commit_many`` swapped the store, with
+    the PRE-commit superblock and ``touched_old_grids`` — the pre-commit
+    ``grids`` array per touched partition SLOT (``store.partitions``
+    index).  Commits only GROW partitions (existing rows keep their grids;
+    new rids interleave into the sorted grid set), so every post-commit row
+    either maps to an old superblock row (searchsorted against the old
+    grids) or is new:
+
+      * BN-row tiles whose rows sit consecutively inside one aligned old
+        segment are device-to-device copies (``kernels.ops.segment_append``
+        sel 0 — untouched partitions reuse ALL their tiles);
+      * tiles holding any new/shifted row ride a small host delta (sel 1 —
+        the only bytes a commit wave sends over the link);
+      * freshly aligned all-pad tiles zero-fill on device (sel 2 — no
+        upload, no source read).
+
+    ``pids`` selects a partition GROUP (the new superblock covers those
+    slots); None extends a whole-store superblock — a commit that opened a
+    brand-new partition appends it as an all-delta segment.  Raises
+    ValueError when the commit changed the tiling (d/bd/bn) — callers
+    degrade to eviction + lazy rebuild.  Returns (new_sb, stats);
+    ``stats.bytes_uploaded`` is the delta bytes the acceptance gate bounds.
+    """
+    # fires before ANY work — the old superblock (host + device copy) and
+    # the group manager's accounting are untouched, so the caller degrades
+    # to evicting just this group
+    fault_point("ingest.append", store)
+    t0 = time.perf_counter()
+    parts_idx = (list(range(len(store.partitions))) if pids is None
+                 else [int(q) for q in pids])
+    parts = [store.partitions[q] for q in parts_idx]
+    bn, row_offsets, bounds, d, bd, d_pad, total, dtype = _superblock_layout(
+        parts, old_sb.block_n, old_sb.bd)
+    if d != old_sb.d or bd != old_sb.bd or bn != old_sb.block_n:
+        raise ValueError(
+            f"commit changed the superblock tiling (d {old_sb.d}->{d}, "
+            f"bd {old_sb.bd}->{bd}, bn {old_sb.block_n}->{bn}) — rebuild "
+            "with build_superblock instead")
+    n_tiles = total // bn
+    sel = np.ones(n_tiles, np.int32)          # default: delta
+    starts = np.zeros(n_tiles, np.int32)
+    host = np.zeros((total, d_pad), dtype=dtype)
+    delta_rows: list[np.ndarray] = []
+    n_old_seg = len(old_sb.row_offsets)
+    for g, (p, off) in enumerate(zip(parts, row_offsets)):
+        q = parts_idx[g]
+        r = p.block.shape[0]
+        t = int((bounds[g] - off) // bn)
+        if t == 0:
+            continue
+        # per-row source position in the OLD superblock (-1 = new row)
+        src = np.full(t * bn, -1, np.int64)
+        if g < n_old_seg:
+            old_off = int(old_sb.row_offsets[g])
+            if q not in touched_old_grids:
+                # untouched partition: identical block, identity mapping
+                src[:r] = old_off + np.arange(r)
+            else:
+                og = np.asarray(touched_old_grids[q], np.int64)
+                if len(og):
+                    pos = np.clip(np.searchsorted(og, p.grids), 0,
+                                  len(og) - 1)
+                    hit = og[pos] == p.grids
+                    src[:r][hit] = old_off + pos[hit]
+        # tail-pad continuation (see migrate_superblock): the padding rows
+        # of the last tile carry no data, so extend the final run
+        pad = t * bn - r
+        if pad and r and src[r - 1] >= 0:
+            src[r:] = src[r - 1] + 1 + np.arange(pad)
+        chunks = src.reshape(t, bn)
+        ok = chunks[:, 0] >= 0
+        if bn > 1:
+            ok &= np.all(np.diff(chunks, axis=1) == 1, axis=1)
+        if n_old_seg:
+            s0 = chunks[:, 0]
+            opid = np.clip(np.searchsorted(old_sb.bounds, s0, side="right"),
+                           0, n_old_seg - 1)
+            # the whole BN-row run must stay inside ONE aligned old segment
+            ok &= s0 + bn <= old_sb.bounds[opid]
+        else:
+            ok[:] = False
+        t_base = int(off) // bn
+        ok_idx = np.flatnonzero(ok)
+        if len(ok_idx):
+            sel[t_base + ok_idx] = 0
+            starts[t_base + ok_idx] = chunks[ok_idx, 0]
+            src_rows = (chunks[ok_idx, 0][:, None]
+                        + np.arange(bn)).reshape(-1)
+            dst_rows = (int(off) + ok_idx[:, None] * bn
+                        + np.arange(bn)).reshape(-1)
+            host[dst_rows] = old_sb.host[src_rows]
+        for k in np.flatnonzero(~ok):
+            lo = int(k) * bn
+            valid = min(bn, r - lo) if r > lo else 0
+            if valid <= 0:
+                sel[t_base + k] = 2     # alignment slack: zero-fill on
+                continue                # device, upload nothing
+            rows = np.zeros((bn, d_pad), dtype=dtype)
+            rows[:valid, :d] = p.block[lo:lo + valid]
+            starts[t_base + k] = len(delta_rows) * bn
+            delta_rows.append(rows)
+            host[int(off) + lo:int(off) + lo + bn] = rows
+
+    delta = np.concatenate(delta_rows, axis=0) if delta_rows else None
+    reused = int((sel == 0).sum())
+    n_delta = int((sel == 1).sum())
+    bytes_uploaded = 0
+    new_sb = Superblock(host=host, row_offsets=row_offsets, bounds=bounds,
+                        d=d, bd=bd, block_n=bn,
+                        epoch=int(getattr(store, "epoch", 0)),
+                        pids=None if pids is None
+                        else np.asarray(parts_idx, np.int64))
+    used_device = (old_sb._device is not None if use_kernel is None
+                   else bool(use_kernel) and old_sb._device is not None)
+    if used_device:
+        import jax.numpy as jnp
+        from ..kernels import ops as K
+        if delta is None:
+            delta_dev = jnp.zeros((bn, d_pad), dtype=dtype)
+        else:
+            delta_dev = jnp.asarray(delta)
+            bytes_uploaded = delta.nbytes
+        new_sb._device = K.segment_append(old_sb._device, delta_dev,
+                                          sel, starts,
+                                          block_n=bn, block_d=bd)
+        new_sb.uploads = 1 if bytes_uploaded else 0
+    stats = MigrationStats(
+        n_tiles=n_tiles, reused_tiles=reused, delta_tiles=n_delta,
+        bytes_uploaded=int(bytes_uploaded), bytes_total=int(host.nbytes),
+        used_device=used_device, wall_s=time.perf_counter() - t0)
+    return new_sb, stats
+
+
+def refresh_superblocks_after_commit(store, touched_old_grids: dict, *,
+                                     extend: bool = True,
+                                     use_kernel: Optional[bool] = None
+                                     ) -> dict:
+    """Targeted post-commit superblock maintenance — the commit-path
+    replacement for ``evict_superblocks``'s nuke-everything.
+
+    ``touched_old_grids`` maps each partition SLOT the commit grew to its
+    PRE-commit ``grids``.  Policy, per cached superblock:
+
+      * a pinned group whose partitions the commit did NOT touch is
+        revalidated at the new epoch in place — zero work, zero upload
+        (commits only grow the receiving partitions; untouched slots keep
+        their exact blocks), so cold groups STAY pinned;
+      * a touched superblock (group or whole-store) is extended in place
+        via ``extend_superblock_after_commit`` — only the new BN-aligned
+        tiles cross the host link; on any failure (tiling change, budget,
+        injected ``ingest.append`` fault) THAT superblock alone degrades
+        to eviction + lazy rebuild;
+      * genuinely stale entries (pre-dating the commit's epoch) are
+        evicted as before.
+
+    Absorbs nothing itself — callers (``commit_version``/``commit_many``)
+    wrap it in the same warn-and-continue guard the old eviction had.
+    Returns a report dict: revalidated/extended/evicted counts plus the
+    wave's bytes_uploaded and delta_tiles."""
+    report = {"revalidated": 0, "extended": 0, "evicted": 0,
+              "bytes_uploaded": 0, "delta_tiles": 0}
+    epoch = int(getattr(store, "epoch", 0))
+    touched = set(int(s) for s in touched_old_grids)
+    cache = getattr(store, "_superblock_cache", None)
+    evicted = 0
+    if cache:
+        for ck in list(cache):
+            sb = cache[ck]
+            if sb.epoch == epoch - 1 and extend:
+                try:
+                    new_sb, st = extend_superblock_after_commit(
+                        store, sb, touched_old_grids,
+                        use_kernel=use_kernel)
+                except Exception:
+                    cache.pop(ck)._device = None
+                    evicted += 1
+                    logger.warning(
+                        "in-place superblock append failed; whole-store "
+                        "copy rebuilds lazily", exc_info=True)
+                    continue
+                new_sb.cache_key = ck
+                cache[ck] = new_sb
+                sb._device = None
+                report["extended"] += 1
+                report["bytes_uploaded"] += st.bytes_uploaded
+                report["delta_tiles"] += st.delta_tiles
+            else:
+                cache.pop(ck)._device = None
+                evicted += 1
+    if evicted:
+        try:
+            store._superblock_evictions = \
+                getattr(store, "_superblock_evictions", 0) + evicted
+        except AttributeError:
+            pass
+        report["evicted"] += evicted
+    mgr = getattr(store, "_superblock_groups", None)
+    if mgr is None:
+        return report
+    kept: set[tuple] = set(
+        k for k, sb in mgr.groups.items() if sb.epoch == epoch - 1)
+    for key in list(mgr.groups):
+        sb = mgr.groups.get(key)
+        if sb is None:          # a _make_room below already evicted it
+            kept.discard(key)
+            continue
+        if sb.epoch != epoch - 1:
+            mgr._evict(key)
+            report["evicted"] += 1
+            continue
+        if not (set(key) & touched):
+            # cold group: no member grew, its bytes are still exact —
+            # revalidate at the new epoch, zero work, stays pinned
+            sb.epoch = epoch
+            report["revalidated"] += 1
+            continue
+        if not extend:
+            kept.discard(key)
+            mgr._evict(key)
+            report["evicted"] += 1
+            continue
+        try:
+            need = estimate_superblock_bytes(
+                store, block_n=mgr.block_n, block_d=mgr.block_d, pids=key)
+            grow = need - int(sb.host.nbytes)
+            if grow > 0 and not mgr._make_room(grow, protected=kept):
+                raise ValueError(
+                    f"grown group {key} no longer fits the budget")
+            new_sb, st = extend_superblock_after_commit(
+                store, sb, touched_old_grids, pids=key,
+                use_kernel=use_kernel)
+        except Exception:
+            kept.discard(key)
+            if key in mgr.groups:
+                mgr._evict(key)
+            report["evicted"] += 1
+            logger.warning("in-place group superblock append failed; "
+                           "group rebuilds lazily on next touch",
+                           exc_info=True)
+            continue
+        # swap in place: len(groups) unchanged, so pins - evictions still
+        # equals the pinned-group count; LRU position is preserved
+        new_sb.cache_key = key
+        mgr.groups[key] = new_sb
+        mgr.group_bytes[key] = int(new_sb.host.nbytes)
+        mgr.pinned_bytes += int(new_sb.host.nbytes) - int(sb.host.nbytes)
+        sb._device = None
+        report["extended"] += 1
+        report["bytes_uploaded"] += st.bytes_uploaded
+        report["delta_tiles"] += st.delta_tiles
+    return report
 
 
 # ------------------------------------------------------------- entry points --

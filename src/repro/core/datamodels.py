@@ -50,6 +50,39 @@ def _raw_keys(rows: np.ndarray) -> np.ndarray:
     return rows.view(np.dtype((np.void, width))).ravel()
 
 
+def diff_against_parents(table: np.ndarray, parent_rows: np.ndarray,
+                         parent_rids: np.ndarray
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Split ``table`` into (matched parent rids, new row block).
+
+    Row identity is full-row value equality against the parent(s) only
+    (*no cross-version diff* rule).  Vectorized sorted join on raw-byte
+    row keys; on a key collision among parent rows the LAST parent rid
+    wins, matching the dict-build order of the seed loop.  Module-level so
+    the partitioned store's ingest wave (``PartitionedCVD.commit_many``)
+    shares the exact extraction path the storage models use.
+    """
+    table = np.asarray(table)
+    if len(parent_rids) == 0:
+        return np.zeros(0, np.int64), table
+    if len(table) == 0:
+        return np.zeros(0, np.int64), table
+    pkeys = _raw_keys(parent_rows)
+    tkeys = _raw_keys(table)
+    if pkeys.dtype != tkeys.dtype:    # row byte-widths differ: no matches
+        return np.zeros(0, np.int64), table
+    order = np.argsort(pkeys, kind="stable")
+    skeys = pkeys[order]
+    # last equal key in stable order == last dict write in the seed loop
+    pos = np.searchsorted(skeys, tkeys, side="right") - 1
+    hit = (pos >= 0) & (skeys[pos.clip(0)] == tkeys)
+    matched = np.asarray(parent_rids)[order[pos[hit]]].astype(np.int64)
+    new = table[~hit]
+    if len(new) == 0:
+        new = np.zeros((0, table.shape[1]), table.dtype)
+    return matched, new
+
+
 class StorageModel:
     """Shared bookkeeping: a VersionGraph and per-version row sets."""
 
@@ -103,29 +136,10 @@ class StorageModel:
         """Split ``table`` into (matched parent rids, new row block).
 
         Row identity is full-row value equality against the parent(s) only
-        (*no cross-version diff* rule).  Vectorized sorted join on raw-byte
-        row keys; on a key collision among parent rows the LAST parent rid
-        wins, matching the dict-build order of the seed loop.
+        (*no cross-version diff* rule).  Delegates to the module-level
+        ``diff_against_parents`` (shared with the partitioned ingest wave).
         """
-        table = np.asarray(table)
-        if len(parent_rids) == 0:
-            return np.zeros(0, np.int64), table
-        if len(table) == 0:
-            return np.zeros(0, np.int64), table
-        pkeys = _raw_keys(parent_rows)
-        tkeys = _raw_keys(table)
-        if pkeys.dtype != tkeys.dtype:    # row byte-widths differ: no matches
-            return np.zeros(0, np.int64), table
-        order = np.argsort(pkeys, kind="stable")
-        skeys = pkeys[order]
-        # last equal key in stable order == last dict write in the seed loop
-        pos = np.searchsorted(skeys, tkeys, side="right") - 1
-        hit = (pos >= 0) & (skeys[pos.clip(0)] == tkeys)
-        matched = np.asarray(parent_rids)[order[pos[hit]]].astype(np.int64)
-        new = table[~hit]
-        if len(new) == 0:
-            new = np.zeros((0, table.shape[1]), table.dtype)
-        return matched, new
+        return diff_against_parents(table, parent_rows, parent_rids)
 
     def _diff_against_parents_loop(self, table, parent_rows, parent_rids
                                    ) -> tuple[np.ndarray, np.ndarray]:
@@ -143,6 +157,18 @@ class StorageModel:
                 matched.append(rid)
         new = np.stack(new_rows) if new_rows else np.zeros((0, table.shape[1]), table.dtype)
         return np.asarray(matched, dtype=np.int64), new
+
+
+def _single_parent_edge_w(parents: Sequence[int], matched: np.ndarray
+                          ) -> Optional[list[int]]:
+    """Commit-time parent-edge weight for the common single-parent case:
+    every matched rid came from THE parent, so w(p, v) is the count of
+    distinct matched rids.  Multi-parent commits return None (the matched
+    rids don't attribute per parent here) and fall back to the lazy memo
+    in ``version_graph._edge_weight``."""
+    if len(parents) != 1:
+        return None
+    return [int(len(np.unique(matched)))]
 
 
 class _RidStore(StorageModel):
@@ -225,7 +251,9 @@ class _VlistStore(_RidStore):
         # like the seed's per-row append); physical index: one CSR entry
         self._n_edges += len(matched) + len(new_rids)
         self._rlists.append(np.unique(np.concatenate([matched, new_rids])))
-        return self.vgraph.add_version(parents, commit_t=t)
+        return self.vgraph.add_version(parents, commit_t=t,
+                                       edge_w=_single_parent_edge_w(
+                                           parents, matched))
 
 
 class CombinedTable(_VlistStore):
@@ -278,7 +306,9 @@ class SplitByRlist(_RidStore):
         new_rids = self._append_rows(new)
         # the cheap path: ONE versioning tuple
         self.rlists.append(np.sort(np.concatenate([matched, new_rids])))
-        return self.vgraph.add_version(parents, commit_t=t)
+        return self.vgraph.add_version(parents, commit_t=t,
+                                       edge_w=_single_parent_edge_w(
+                                           parents, matched))
 
     def checkout(self, vid):
         # unnest(rlist) then join with the data table == positional gather

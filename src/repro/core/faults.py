@@ -79,6 +79,14 @@ SITES = (
                             # first — the repair/reader truncation cleans it
     "disk.bitflip",         # Journal._write_frame: a corrupted frame hits
                             # disk first — crc catches it on read
+    # commit ingestion-wave sites (PartitionedCVD.commit_many + the
+    # in-place superblock append in core/checkout.py)
+    "ingest.extract",       # commit_many: staging/delta-extraction entry,
+                            # before anything durable — store untouched
+    "ingest.append",        # extend_group_superblocks: in-place device
+                            # append — failure degrades to group eviction
+    "ingest.commit",        # commit_version/commit_many: stage->journal
+                            # boundary — store AND journal still untouched
 )
 
 

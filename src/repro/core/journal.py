@@ -8,11 +8,14 @@ This module closes that window with the classic WAL contract:
   * every store mutation between snapshots appends ONE framed,
     crc-checksummed record to an append-only per-generation journal file
     (``journal-<snapshot_vid>.wal`` next to the checkpoint manifest);
-  * data-plane records (``commit``, ``migration.commit``) are appended
-    and fsynced BEFORE the in-memory state swap — an operation that
-    returned has its record durable (fsync-acknowledged), and an
-    operation whose append failed mutated nothing, so a plain retry is
-    always safe;
+  * data-plane records (``commit``, ``commit.batch``,
+    ``migration.commit``) are appended and fsynced BEFORE the in-memory
+    state swap — an operation that returned has its record durable
+    (fsync-acknowledged), and an operation whose append failed mutated
+    nothing, so a plain retry is always safe; a ``commit.batch`` record
+    is a whole ``commit_many`` ingest wave group-committed under ONE
+    fsync, and replays all-or-nothing (K commits inside one checksummed
+    frame);
   * advisory records (``ticket`` watermarks, ``regroup`` layout) ride
     the same file buffered (no fsync of their own — they piggyback on
     the next synced record or ``close()``): losing the tail of them
@@ -72,7 +75,7 @@ _FRAME_MIN = len(MAGIC) + _HEADER.size
 
 # record kinds whose replay mutates the store (appended sync=True by the
 # mutation that owns them); everything else is advisory telemetry
-DATA_KINDS = ("commit", "migration.commit", "repartition")
+DATA_KINDS = ("commit", "commit.batch", "migration.commit", "repartition")
 ADVISORY_KINDS = ("migration.intent", "regroup", "ticket")
 
 
@@ -333,6 +336,24 @@ def replay_into(store, records: list[JournalRecord]) -> dict:
             store.commit_version(_dec(p["rlist"]),
                                  parent=p["parent"], new_rows=new_rows,
                                  pid=int(p["pid"]))
+            applied += 1
+        elif kind == "commit.batch":
+            # group commit: ONE record covers a whole commit_many wave.
+            # All-or-nothing by construction — the wave's K commits either
+            # all sit inside this (checksummed) record or the record never
+            # made it to disk; replay re-applies them through commit_many
+            # itself, which swaps in-memory state only after staging the
+            # entire wave.
+            if store.graph.n_versions > int(p["vid0"]):
+                skipped += 1
+                continue
+            store.commit_many([
+                {"rlist": _dec(c["rlist"]),
+                 "new_rows": (None if c["new_rows"] is None
+                              else _dec(c["new_rows"])),
+                 "parent": c["parent"],
+                 "pid": int(c["pid"])}
+                for c in p["commits"]])
             applied += 1
         elif kind in ("migration.commit", "repartition"):
             if int(getattr(store, "epoch", 0)) >= int(p["epoch_after"]):

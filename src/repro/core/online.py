@@ -357,12 +357,12 @@ class RepartitionTrigger:
                  drain_timeout_s: Optional[float] = None,
                  use_kernel: Optional[bool] = None):
         from .checkout import get_density_stats
-        if tree.n != store.graph.n_versions:
-            raise ValueError(
-                f"tree has {tree.n} versions, store has "
-                f"{store.graph.n_versions}")
         self.store = store
         self.tree = tree
+        # a tree BEHIND the store (commits landed since it was built) is
+        # resynced from the store's commit log; only a tree AHEAD of the
+        # store is unrepairable and raises (inside _resync)
+        self._resync()
         self.gamma_factor = gamma_factor
         self.min_waves = min_waves
         self.min_gain = min_gain
@@ -378,6 +378,48 @@ class RepartitionTrigger:
         stats = get_density_stats(store, create=True)
         if stats is not None:
             stats.low_threshold = low_density
+
+    def _resync(self) -> bool:
+        """Extend the weighted tree with versions committed since it was
+        built — a ``commit_version``/``commit_many`` landing between
+        observations must not error the serve flush that armed the
+        trigger.  Lineage (parent, edge weight, record count) comes from
+        the store's commit log (``core.partition._log_commit``); a vid
+        missing from the log (a store rebuilt by hand) degrades to a
+        parentless node with a recomputed record count.  Returns whether
+        anything was added; raises only when the tree is AHEAD of the
+        store, which no resync can repair."""
+        t = self.tree
+        n_store = int(self.store.graph.n_versions)
+        if t.n == n_store:
+            return False
+        if t.n > n_store:
+            raise ValueError(
+                f"tree has {t.n} versions, store has {n_store} — the "
+                "tree is ahead of the store")
+        log = getattr(self.store, "_commit_log", None) or {}
+        parents, weights, sizes = [], [], []
+        for v in range(t.n, n_store):
+            parent, w, size = log.get(v, (-1, 0, -1))
+            if size < 0:
+                size = len(self.store.graph.rlist(v))
+            parents.append(parent)
+            weights.append(w)
+            sizes.append(size)
+        k = len(parents)
+        t.parent = np.concatenate(
+            [t.parent, np.asarray(parents, np.int64)])
+        t.n_records = np.concatenate(
+            [t.n_records, np.asarray(sizes, np.int64)])
+        t.edge_w = np.concatenate(
+            [t.edge_w, np.asarray(weights, np.int64)])
+        if t.n_attrs is not None:
+            t.n_attrs = np.concatenate(
+                [t.n_attrs, np.zeros(k, t.n_attrs.dtype)])
+        if t.edge_attrs is not None:
+            t.edge_attrs = np.concatenate(
+                [t.edge_attrs, np.zeros(k, t.edge_attrs.dtype)])
+        return True
 
     def should_fire(self) -> bool:
         from .checkout import get_density_stats
@@ -403,6 +445,10 @@ class RepartitionTrigger:
         timeout."""
         from .checkout import get_density_stats
         from .faults import read_leases
+        # keep the tree current even on non-firing observations: a
+        # commit_version/commit_many landing between waves is folded in
+        # from the commit log (no-op when nothing landed)
+        self._resync()
         stats = get_density_stats(self.store, create=True)
         if stats is None or stats.low_streak < self.min_waves:
             return None
@@ -433,6 +479,7 @@ class RepartitionTrigger:
         from .partition import plan_migration
         fault_point("online.trigger", self.store)
         t0 = time.perf_counter()
+        self._resync()      # commits may have landed since the last look
         gamma = self.gamma_factor * self.store.graph.n_records
         sr = lyresplit_for_budget(self.tree, gamma,
                                   max_iters=self.lyresplit_iters)

@@ -123,16 +123,28 @@ class PartitionedCVD:
         allocated densely at the end of the base data.  The version lands
         in its parent's partition (the online append rule) unless ``pid``
         names a partition label explicitly; a parentless commit opens a
-        fresh partition.  Bumps the epoch and eagerly evicts cached
-        superblocks (the receiving partition's block grew — stale device
-        copies must not serve it).
+        fresh partition.  Bumps the epoch; superblock maintenance is
+        TARGETED (``core.checkout.refresh_superblocks_after_commit``) —
+        only the receiving partition's group superblock is touched
+        (extended in place or evicted), cold pinned groups revalidate at
+        the new epoch instead of being nuked.
+
+        TRANSACTIONAL in memory: the staged arrays AND the receiving
+        partition's rebuild all happen before any field swap, so a failure
+        anywhere in staging (allocator, injected fault) leaves the live
+        store bit-identical to its pre-commit state.  The COMMIT half is
+        pure field swaps that cannot fail — the in-memory commit is
+        all-or-nothing, matching what ``StoreDurability.restore()`` would
+        replay.
 
         Journaled (``core.journal``): the commit record is appended +
-        fsynced BEFORE the in-memory swap.  A failed append mutates
-        nothing (retry-safe); once ``commit_version`` returns, the commit
-        survives any crash — the zero-RPO contract ``StoreDurability``
-        replays on restore."""
-        from .checkout import evict_superblocks
+        fsynced AFTER staging and BEFORE the swap.  A failed append
+        mutates nothing (retry-safe); once ``commit_version`` returns, the
+        commit survives any crash — the zero-RPO contract
+        ``StoreDurability`` replays on restore."""
+        from .checkout import refresh_superblocks_after_commit
+        from .faults import fault_point
+        from .graph import intersect_size
         from .journal import _enc, get_journal
         rlist = np.unique(np.asarray(rlist, dtype=np.int64))
         if new_rows is not None and len(new_rows) == 0:
@@ -167,6 +179,22 @@ class PartitionedCVD:
                            self.graph.indptr[-1] + len(rlist))
         indices = np.concatenate([self.graph.indices, rlist])
         assignment = np.append(self.assignment, pid)
+        # the receiving partition rebuilds AGAINST THE STAGED state: a
+        # failure mid-rebuild leaves the live store untouched instead of
+        # half-swapped (graph/data updated, partitions/vid_to_pid not)
+        staged_graph = BipartiteGraph(indptr=indptr, indices=indices,
+                                      n_records=n0 + k)
+        vids = np.flatnonzero(assignment == pid)
+        part = build_partition(staged_graph, data, pid, vids)
+        slot = next((i for i, p in enumerate(self.partitions)
+                     if p.pid == pid), None)
+        old_grids = (np.zeros(0, np.int64) if slot is None
+                     else self.partitions[slot].grids)
+        edge_w = (intersect_size(self.graph.rlist(parent), rlist)
+                  if parent is not None else 0)
+        # fires at the stage->journal boundary: store AND journal are both
+        # still untouched, so a plain retry re-stages from scratch
+        fault_point("ingest.commit", self)
         j = get_journal(self)
         if j is not None:
             j.append("commit", {
@@ -177,16 +205,12 @@ class PartitionedCVD:
                 "new_rows": None if new_rows is None else _enc(new_rows),
                 "epoch_after": int(self.epoch) + 1,
                 "n_versions_after": vid + 1}, sync=True)
-        # -- COMMIT: swap + rebuild the one partition that grew -------------
+        # -- COMMIT: pure field swaps (nothing below can fail) --------------
         self.data = data
         self.graph.indptr = indptr
         self.graph.indices = indices
         self.graph.n_records = n0 + k
         self.assignment = assignment
-        vids = np.flatnonzero(self.assignment == pid)
-        part = build_partition(self.graph, self.data, pid, vids)
-        slot = next((i for i, p in enumerate(self.partitions)
-                     if p.pid == pid), None)
         if slot is None:
             self.partitions.append(part)
             slot = len(self.partitions) - 1
@@ -195,17 +219,220 @@ class PartitionedCVD:
         self.vid_to_pid = np.append(self.vid_to_pid, -1)
         self.vid_to_pid[vids] = slot
         self.epoch += 1
+        _log_commit(self, vid, parent, edge_w, len(rlist))
         try:
-            evict_superblocks(self)
+            refresh_superblocks_after_commit(self, {slot: old_grids})
         except Exception:
-            # eager release is an optimization: every superblock cache is
-            # epoch-keyed and rebuilds lazily, so a transient eviction
+            # device-state refresh is an optimization: every superblock
+            # cache is epoch-keyed and rebuilds lazily, so a transient
             # failure must not torpedo an already-durable commit (a retry
             # would double-append the version)
-            logger.warning("post-commit superblock eviction failed; stale "
+            logger.warning("post-commit superblock refresh failed; stale "
                            "device copies will lapse on next access",
                            exc_info=True)
         return vid
+
+    def commit_many(self, commits: Sequence[dict], *,
+                    extend_superblocks: bool = True) -> list[int]:
+        """Batch K commits into ONE ingest wave — the write-side twin of
+        ``checkout_many``'s wave engine.
+
+        Each element of ``commits`` is a mapping describing one commit:
+
+        * ``rlist`` (+ optional ``new_rows``) — the explicit form
+          ``commit_version`` takes, or
+        * ``table`` — a full row table; the delta against the parent's rows
+          is extracted via the sorted-join ``diff_against_parents`` path
+          (matched rows keep their parent rids, the rest become fresh rows),
+
+        plus optional ``parent`` / ``pid``.  A commit may name a parent
+        staged EARLIER IN THE SAME WAVE (its vid is ``vid0 + i``) — chains
+        ingest in one call.
+
+        One wave does the whole batch's work once: a single bulk CSR /
+        assignment / data append, ONE partition rebuild per touched
+        partition label (not per commit), ONE journal record
+        (``commit.batch``) fsynced once for the whole wave with
+        all-or-nothing replay semantics, ONE epoch bump, and targeted
+        superblock maintenance (``refresh_superblocks_after_commit``) that
+        extends the touched pinned groups in place with BN-aligned new
+        tiles instead of nuking device state.
+
+        TRANSACTIONAL exactly like ``commit_version``: staging (including
+        every partition rebuild) completes before the journal append, and
+        the COMMIT half is pure field swaps.  Fault sites:
+        ``ingest.extract`` at entry (nothing staged), ``ingest.commit`` at
+        the stage->journal boundary (store and journal untouched).
+
+        Returns the new vids, ``[vid0, vid0 + K)``."""
+        from .checkout import refresh_superblocks_after_commit
+        from .datamodels import diff_against_parents
+        from .faults import fault_point
+        from .graph import intersect_size
+        from .journal import _enc, get_journal
+        commits = [dict(c) for c in commits]
+        if not commits:
+            return []
+        fault_point("ingest.extract", self)
+        vid0 = int(self.graph.n_versions)
+        n0 = int(self.graph.n_records)
+        width = self.data.shape[1]
+        # -- STAGE 1: per-commit delta extraction against (possibly staged)
+        #    parents; the store is read, never written --------------------
+        data_blocks: list[np.ndarray] = [self.data]
+        n_cur = n0
+        cat_cache: list[Optional[np.ndarray]] = [None]
+
+        def staged_rows(rids: np.ndarray) -> np.ndarray:
+            # gather parent rows across the staged blocks; concatenate
+            # lazily and only re-concatenate after the staged data grew
+            if len(data_blocks) == 1:
+                return self.data[rids]
+            if cat_cache[0] is None or len(cat_cache[0]) < n_cur:
+                cat_cache[0] = np.concatenate(data_blocks, axis=0)
+            return cat_cache[0][rids]
+
+        assignment = self.assignment.copy()
+        rlists: list[np.ndarray] = []
+        parents: list[Optional[int]] = []
+        pids: list[int] = []
+        new_blocks: list[Optional[np.ndarray]] = []
+        for i, c in enumerate(commits):
+            vid = vid0 + i
+            parent = c.get("parent")
+            if parent is not None:
+                parent = int(parent)
+                if not 0 <= parent < vid:
+                    raise ValueError(
+                        f"commit #{i}: parent vid {parent} out of range "
+                        f"[0, {vid}) (earlier wave entries are allowed)")
+            if c.get("table") is not None:
+                if parent is None:
+                    raise ValueError(
+                        f"commit #{i}: table-form commits need a parent "
+                        f"to diff against")
+                table = np.ascontiguousarray(
+                    np.asarray(c["table"], dtype=self.data.dtype))
+                if table.ndim != 2 or table.shape[1] != width:
+                    raise ValueError(
+                        f"commit #{i}: table shape {table.shape} does not "
+                        f"match the base data width {width}")
+                p_rids = (self.graph.rlist(parent) if parent < vid0
+                          else rlists[parent - vid0])
+                matched, new_rows = diff_against_parents(
+                    table, staged_rows(p_rids), p_rids)
+                if len(new_rows) == 0:
+                    new_rows = None
+                k = 0 if new_rows is None else len(new_rows)
+                rlist = np.unique(np.concatenate(
+                    [matched, n_cur + np.arange(k, dtype=np.int64)]))
+            else:
+                rlist = np.unique(np.asarray(c["rlist"], dtype=np.int64))
+                new_rows = c.get("new_rows")
+                if new_rows is not None and len(new_rows) == 0:
+                    new_rows = None
+                if new_rows is not None:
+                    new_rows = np.ascontiguousarray(
+                        np.asarray(new_rows, dtype=self.data.dtype))
+                    if new_rows.ndim != 2 or new_rows.shape[1] != width:
+                        raise ValueError(
+                            f"commit #{i}: new_rows shape {new_rows.shape} "
+                            f"does not match the base data width {width}")
+                k = 0 if new_rows is None else len(new_rows)
+                if len(rlist) and (rlist[0] < 0 or rlist[-1] >= n_cur + k):
+                    raise ValueError(
+                        f"commit #{i}: rlist references rid "
+                        f"{int(rlist[-1])} outside [0, {n_cur + k})")
+            pid = c.get("pid")
+            if pid is None:
+                pid = (int(assignment[parent]) if parent is not None
+                       else int(assignment.max()) + 1
+                       if len(assignment) else 0)
+            pid = int(pid)
+            if new_rows is not None:
+                data_blocks.append(new_rows)
+                n_cur += k
+            assignment = np.append(assignment, pid)
+            rlists.append(rlist)
+            parents.append(parent)
+            pids.append(pid)
+            new_blocks.append(new_rows)
+        # -- STAGE 2: one bulk CSR append + one rebuild per touched
+        #    partition label ---------------------------------------------
+        K = len(commits)
+        counts = np.array([len(r) for r in rlists], dtype=np.int64)
+        indptr = np.concatenate([
+            self.graph.indptr,
+            self.graph.indptr[-1] + np.cumsum(counts)])
+        indices = np.concatenate([self.graph.indices] + rlists)
+        data = (data_blocks[0] if len(data_blocks) == 1
+                else np.concatenate(data_blocks, axis=0))
+        staged_graph = BipartiteGraph(indptr=indptr, indices=indices,
+                                      n_records=n_cur)
+        slot_of = {p.pid: s for s, p in enumerate(self.partitions)}
+        staged_parts: dict[int, Partition] = {}
+        slot_for_pid: dict[int, int] = {}
+        old_grids: dict[int, np.ndarray] = {}
+        next_slot = len(self.partitions)
+        for pid in sorted(set(pids)):
+            vids = np.flatnonzero(assignment == pid)
+            staged_parts[pid] = build_partition(staged_graph, data, pid, vids)
+            s = slot_of.get(pid)
+            if s is None:
+                s, next_slot = next_slot, next_slot + 1
+                old_grids[s] = np.zeros(0, np.int64)
+            else:
+                old_grids[s] = self.partitions[s].grids
+            slot_for_pid[pid] = s
+        edge_ws = [intersect_size(staged_graph.rlist(p), rlists[i])
+                   if (p := parents[i]) is not None else 0
+                   for i in range(K)]
+        # fires at the stage->journal boundary: store AND journal are both
+        # still untouched, so a plain retry re-stages from scratch
+        fault_point("ingest.commit", self)
+        j = get_journal(self)
+        if j is not None:
+            # group commit: ONE fsynced record covers the whole wave —
+            # replay applies all K commits or none of them
+            j.append("commit.batch", {
+                "vid0": vid0,
+                "commits": [{
+                    "vid": vid0 + i,
+                    "parent": parents[i],
+                    "pid": pids[i],
+                    "rlist": _enc(rlists[i]),
+                    "new_rows": (None if new_blocks[i] is None
+                                 else _enc(new_blocks[i]))}
+                    for i in range(K)],
+                "epoch_after": int(self.epoch) + 1,
+                "n_versions_after": vid0 + K}, sync=True)
+        # -- COMMIT: pure field swaps (nothing below can fail) --------------
+        self.data = data
+        self.graph.indptr = indptr
+        self.graph.indices = indices
+        self.graph.n_records = n_cur
+        self.assignment = assignment
+        self.vid_to_pid = np.concatenate(
+            [self.vid_to_pid, np.full(K, -1, np.int64)])
+        for pid in sorted(slot_for_pid):   # new slots append in order
+            part, s = staged_parts[pid], slot_for_pid[pid]
+            if s < len(self.partitions):
+                self.partitions[s] = part
+            else:
+                self.partitions.append(part)
+            self.vid_to_pid[part.vids] = s
+        self.epoch += 1
+        for i in range(K):
+            _log_commit(self, vid0 + i, parents[i], edge_ws[i],
+                        int(counts[i]))
+        try:
+            refresh_superblocks_after_commit(
+                self, old_grids, extend=extend_superblocks)
+        except Exception:
+            logger.warning("post-ingest superblock refresh failed; stale "
+                           "device copies will lapse on next access",
+                           exc_info=True)
+        return list(range(vid0, vid0 + K))
 
     def apply_migration(self, plan: "MigrationPlan") -> None:
         """Adopt a ``plan_migration`` plan IN PLACE: morph the partition set
@@ -353,6 +580,20 @@ def build_partition(graph: BipartiteGraph, data: np.ndarray, pid: int,
     return Partition(pid=pid, vids=np.asarray(vids, np.int64), grids=grids,
                      block=block, indptr=indptr, indices=indices,
                      vid_to_slot={int(v): i for i, v in enumerate(vids)})
+
+
+def _log_commit(store: PartitionedCVD, vid: int, parent: Optional[int],
+                edge_w: int, size: int) -> None:
+    """Record commit lineage on the store — ``vid -> (parent, w, |rlist|)``
+    — so late observers (``online.RepartitionTrigger`` resyncing its
+    weighted tree after commits landed between observations) can extend
+    their state without recomputing record intersects."""
+    try:
+        log = store._commit_log
+    except AttributeError:
+        log = store._commit_log = {}
+    log[int(vid)] = (-1 if parent is None else int(parent),
+                     int(edge_w), int(size))
 
 
 # ------------------------------------------------------------- migration --

@@ -42,6 +42,11 @@ class VersionGraph:
         self.children: list[list[int]] = []
         self.attr_table: list[AttributeEntry] = []
         self._attr_index: dict[tuple[str, str], int] = {}
+        # (parent, child) -> w(parent, child): maintained incrementally at
+        # commit time (``add_version(edge_w=...)``) and lazily back-filled
+        # by ``edge_weights``/``to_tree`` — trigger evaluations stop paying
+        # an O(edges) intersect_size recompute per invocation
+        self._edge_w: dict[tuple[int, int], int] = {}
 
     # -- attribute table (Fig 5) -------------------------------------------
     def intern_attribute(self, name: str, dtype: str) -> int:
@@ -55,13 +60,25 @@ class VersionGraph:
     # -- versions -----------------------------------------------------------
     def add_version(self, parents: Sequence[int], commit_t: float = 0.0,
                     checkout_t: Optional[float] = None, msg: str = "",
-                    attributes: Sequence[int] = ()) -> int:
+                    attributes: Sequence[int] = (),
+                    edge_w: Optional[Sequence[int]] = None) -> int:
+        """Register a version.  ``edge_w`` (aligned with ``parents``) seeds
+        the parent-edge weight memo at commit time — the committer already
+        knows how many records it shares with each parent, so recording it
+        here spares every later ``to_tree`` the intersect recompute."""
         vid = len(self.meta)
         self.meta.append(VersionMeta(vid, tuple(parents), checkout_t, commit_t, msg,
                                      tuple(attributes)))
         self.children.append([])
         for p in parents:
             self.children[p].append(vid)
+        if edge_w is not None:
+            if len(edge_w) != len(parents):
+                raise ValueError(
+                    f"edge_w has {len(edge_w)} entries for "
+                    f"{len(parents)} parents")
+            for p, w in zip(parents, edge_w):
+                self._edge_w[(int(p), vid)] = int(w)
         return vid
 
     @property
@@ -131,12 +148,25 @@ class WeightedTree:
         return ch
 
 
+def _edge_weight(graph: BipartiteGraph, vg: VersionGraph, p: int, v: int
+                 ) -> int:
+    """w(p, v), memoized on the version graph: commit-time seeded weights
+    (``add_version(edge_w=...)``) are free; misses compute ONE intersect and
+    back-fill the memo, so repeated trigger evaluations pay only for edges
+    added since the last call."""
+    memo = getattr(vg, "_edge_w", None)
+    if memo is None:
+        memo = vg._edge_w = {}
+    w = memo.get((p, v))
+    if w is None:
+        w = intersect_size(graph.rlist(p), graph.rlist(v))
+        memo[(p, v)] = w
+    return w
+
+
 def edge_weights(graph: BipartiteGraph, vg: VersionGraph) -> dict[tuple[int, int], int]:
-    out: dict[tuple[int, int], int] = {}
-    for v in range(vg.n_versions):
-        for p in vg.parents(v):
-            out[(p, v)] = intersect_size(graph.rlist(p), graph.rlist(v))
-    return out
+    return {(p, v): _edge_weight(graph, vg, p, v)
+            for v in range(vg.n_versions) for p in vg.parents(v)}
 
 
 def to_tree(graph: BipartiteGraph, vg: VersionGraph) -> tuple[WeightedTree, int]:
@@ -153,7 +183,7 @@ def to_tree(graph: BipartiteGraph, vg: VersionGraph) -> tuple[WeightedTree, int]
         ps = vg.parents(v)
         if not ps:
             continue
-        ws = [intersect_size(graph.rlist(p), graph.rlist(v)) for p in ps]
+        ws = [_edge_weight(graph, vg, p, v) for p in ps]
         best = int(np.argmax(ws))
         parent[v] = ps[best]
         edge_w[v] = ws[best]

@@ -16,6 +16,7 @@ import numpy as np
 from . import checkout_batched as _cb
 from . import checkout_gather as _cg
 from . import ref as _ref
+from . import segment_append as _sa
 from . import segment_move as _sm
 from . import version_agg as _va
 from . import vlist_membership as _vm
@@ -188,6 +189,31 @@ def segment_move(src, delta, sel, starts, *, block_n: int = _cg.DEFAULT_BN,
             f"superblock D={d} not a multiple of the lane tile {bd} — "
             "migrate via core.checkout.migrate_superblock (which pre-pads)")
     return _sm.segment_move(
+        src, delta, jnp.asarray(sel), jnp.asarray(starts),
+        block_n=block_n, block_d=bd,
+        interpret=not _on_tpu() if interpret is None else interpret)
+
+
+def segment_append(src, delta, sel, starts, *,
+                   block_n: int = _cg.DEFAULT_BN,
+                   block_d: int = _cg.DEFAULT_BD,
+                   interpret: bool | None = None) -> jax.Array:
+    """In-place superblock append for a commit ingest wave: assemble the
+    grown superblock in ONE ``pallas_call``, reusing BN-aligned tiles of
+    the OLD device-resident superblock (sel 0), uploading only the new
+    BN-aligned tiles from a small host delta (sel 1), and zero-filling
+    alignment-slack tiles on device (sel 2).  Both sources must already be
+    lane-tile padded (``core.checkout`` builds them that way)."""
+    src = jnp.asarray(src)
+    delta = jnp.asarray(delta)
+    d = src.shape[1]
+    bd = min(block_d, max(128, d))
+    if d % bd:
+        raise ValueError(
+            f"superblock D={d} not a multiple of the lane tile {bd} — "
+            "extend via core.checkout.refresh_superblocks_after_commit "
+            "(which pre-pads)")
+    return _sa.segment_append(
         src, delta, jnp.asarray(sel), jnp.asarray(starts),
         block_n=block_n, block_d=bd,
         interpret=not _on_tpu() if interpret is None else interpret)

@@ -51,6 +51,19 @@ out-of-band ``observe()`` calls, and a multi-tenant migration
 coordinator can DRAIN the current epoch's leases instead of racing them
 (``serve.tenancy.MultiTenantServer``).
 
+The WRITE plane rides the same schedule: ``submit_commit(commits)`` mints
+WRITE TICKETS in the checkout ticket namespace, and ``flush()`` lands every
+pending write as ONE ``PartitionedCVD.commit_many`` ingest wave BEFORE
+dispatching the read wave — so the reads just coalesced observe the
+versions just committed.  A commit bumps the store epoch and retires the
+old device superblock buffers, so a write wave first JOINS the in-flight
+read wave and then enters the lease registry's ``draining()`` window
+(mirroring the migration protocol): out-of-band leases — another tenant's
+in-flight wave — deliver against the epoch they planned on before the
+ingest touches a group.  A drain timeout DEFERS the write wave (re-queued,
+retried at the next flush) rather than racing a straggler kernel.
+``result(write_ticket)`` yields the assigned vid.
+
 Failure paths (all regression-tested): a failed dispatch OR delivery
 re-queues the whole coalesced wave (tickets stay serviceable) and rolls
 back its dispatch accounting; a re-queued wave is gated off the deadline
@@ -84,7 +97,7 @@ import numpy as np
 from ..core.checkout import (_default_use_kernel, _validate_vids,
                              checkout_partitioned, get_superblock,
                              get_superblock_groups)
-from ..core.faults import acquire_read_lease, fault_point
+from ..core.faults import acquire_read_lease, fault_point, read_leases
 
 logger = logging.getLogger(__name__)
 
@@ -162,6 +175,13 @@ class CheckoutStats:
     group_launches: int = 0        # fused kernel launches those waves paid
     group_evictions: int = 0       # LRU evictions the budget forced
     straggler_requests: int = 0    # vids that fell through to perpart
+    # write plane (commit ingest waves — PartitionedCVD.commit_many)
+    commit_waves: int = 0          # landed write waves (ONE journal fsync
+                                   # and ONE epoch bump each)
+    commits_ingested: int = 0      # commits those waves carried
+    commit_deferrals: int = 0      # write waves a lease-drain timeout
+                                   # deferred (re-queued, retried at the
+                                   # next flush)
     # sliding window (deque, maxlen) — unbounded growth would leak on a
     # long-running server; `requests` keeps the all-time count.  Append via
     # ``record_latency`` (it invalidates the percentile cache).
@@ -247,6 +267,12 @@ class BatchedCheckoutServer:
                 degradation ladder and a per-epoch circuit breaker (see
                 the module docstring).  None (default) keeps the
                 raise-to-caller failure semantics.
+    write_drain_timeout_s: how long a write wave waits in the lease
+                registry's drain window for out-of-band epoch leases
+                (another server's in-flight wave over the same store)
+                before DEFERRING the commit to the next flush.  None
+                (default) waits until the epoch drains — the right choice
+                for a single server, whose only lease it just joined.
     """
 
     def __init__(self, store, *, use_kernel: Optional[bool] = None,
@@ -255,6 +281,7 @@ class BatchedCheckoutServer:
                  trigger=None, pipeline: bool = True,
                  retry: Optional[RetryPolicy] = None,
                  tenant: Optional[str] = None,
+                 write_drain_timeout_s: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic):
         if trigger is not None and engine != "wave":
             # density is only recorded by the wave engine; a trigger on the
@@ -278,7 +305,11 @@ class BatchedCheckoutServer:
                                     if retry is not None else 3)
         self._closed = False
         self._clock = clock
+        self.write_drain_timeout_s = write_drain_timeout_s
         self._pending: list[tuple[int, int, float]] = []  # (ticket, vid, t)
+        # the write plane's queue: (ticket, commit dict, t_submit); landed
+        # as ONE commit_many ingest wave at the next flush boundary
+        self._pending_writes: list[tuple[int, dict, float]] = []
         self._next_ticket = 0
         self._journaled_ticket = 0   # watermark last recorded in the journal
         self._inflight: Optional[_InflightWave] = None
@@ -337,6 +368,36 @@ class BatchedCheckoutServer:
             self.flush()
         return tickets
 
+    def submit_commit(self, commits: Sequence[dict]) -> list[int]:
+        """Queue a write wave: one WRITE TICKET per commit dict (the
+        ``PartitionedCVD.commit_many`` forms — ``rlist``/``new_rows`` or
+        ``table``, plus ``parent``/``pid``), minted from the same
+        namespace as checkout tickets.  The whole pending write queue
+        lands as ONE fused ingest wave at the next ``flush()`` — before
+        that flush's read dispatch, so coalesced reads observe the new
+        versions — and ``result(ticket)`` then yields the assigned vid.
+        Same-wave parent chaining works across submits: a parent index
+        ``>= n_versions`` resolves against the earlier commits of the
+        same flushed batch.  Deep validation happens at flush time inside
+        ``commit_many`` (before any state changes), so a malformed commit
+        fails — and re-queues — the whole write wave.  May trigger a
+        size-based flush, exactly like ``submit``."""
+        self._check_open()
+        commits = [dict(c) for c in commits]
+        if not commits:
+            return []
+        t = self._clock()
+        base = self._next_ticket
+        self._next_ticket = base + len(commits)
+        tickets = list(range(base, self._next_ticket))
+        self._pending_writes.extend(zip(tickets, commits,
+                                        [t] * len(commits)))
+        self._deadline_armed = True
+        if (self.max_wave is not None
+                and len(self._pending_writes) >= self.max_wave):
+            self.flush()
+        return tickets
+
     def _journal_watermark(self) -> None:
         """Advisory ``ticket`` record of this tenant's watermark, appended
         when it has advanced since the last record.  Buffered and
@@ -364,9 +425,12 @@ class BatchedCheckoutServer:
             return False
         if self._inflight is not None and self._inflight.handle.ready():
             self.deliver()
-        if (self._pending and self.deadline_s is not None
+        oldest = min([t for _, _, t in self._pending[:1]]
+                     + [t for _, _, t in self._pending_writes[:1]],
+                     default=None)
+        if (oldest is not None and self.deadline_s is not None
                 and self._deadline_armed
-                and self._clock() - self._pending[0][2] >= self.deadline_s):
+                and self._clock() - oldest >= self.deadline_s):
             self.flush()
             return True
         return False
@@ -384,6 +448,10 @@ class BatchedCheckoutServer:
         ``result(ticket)`` — ticket-oriented callers are mode-agnostic."""
         self._check_open()
         self._journal_watermark()
+        # land the write wave FIRST: the read wave detached below then
+        # plans against (and serves) the post-commit epoch.  A failed or
+        # deferred write wave leaves the pending reads untouched.
+        self._flush_writes()
         wave = self._pending
         self._pending = []
         dispatched = None
@@ -458,6 +526,9 @@ class BatchedCheckoutServer:
         if (ticket not in self._results and self._inflight is not None
                 and ticket in self._inflight.ticket_ids):
             self.deliver()
+        if (ticket not in self._results
+                and any(t == ticket for t, _, _ in self._pending_writes)):
+            self.flush()      # a queued write ticket: land its wave now
         out = self._results.pop(ticket)
         self._reserved.discard(ticket)
         return out
@@ -568,6 +639,82 @@ class BatchedCheckoutServer:
                 return handle
         raise last_exc if last_exc is not None else RuntimeError(
             "all dispatch tiers circuit-broken")
+
+    # -- write plane -----------------------------------------------------------
+    def _flush_writes(self) -> list[int]:
+        """Land every queued write ticket as ONE ``commit_many`` ingest
+        wave, mirroring the migration protocol: join the in-flight read
+        wave (a commit retires the device buffers its kernel may still be
+        reading), then enter the lease registry's ``draining()`` window so
+        out-of-band leases — another server's wave over the same store —
+        deliver against the epoch they planned on before the ingest
+        touches a group.  A drain timeout DEFERS the wave (re-queued,
+        ``stats.commit_deferrals``); a commit failure re-queues and raises
+        exactly like a failed read dispatch (deadline-gated retry).
+        Returns the assigned vids ([] when deferred or nothing queued)."""
+        if not self._pending_writes:
+            return []
+        batch, self._pending_writes = self._pending_writes, []
+        if self._inflight is not None:
+            self.deliver()
+        reg = read_leases(self.store)
+        try:
+            if reg is None:     # attribute-less store: no leases to drain
+                vids = self._commit([c for _, c, _ in batch])
+            else:
+                with reg.draining(self.store,
+                                  self.write_drain_timeout_s) as drained:
+                    if not drained:
+                        self._pending_writes = batch + self._pending_writes
+                        self._deadline_armed = False
+                        self.stats.commit_deferrals += 1
+                        return []
+                    vids = self._commit([c for _, c, _ in batch])
+        except BaseException:
+            self._pending_writes = batch + self._pending_writes
+            self._deadline_armed = False
+            self.stats.requeues += 1
+            raise
+        done = self._clock()
+        self._results.update(zip((t for t, _, _ in batch),
+                                 (np.int64(v) for v in vids)))
+        self.stats.record_latencies([done - t0 for _, _, t0 in batch])
+        if len(self._results) > RETAIN_RESULTS:
+            for t in list(self._results):
+                if len(self._results) <= RETAIN_RESULTS:
+                    break
+                if t not in self._reserved:
+                    del self._results[t]
+        self.stats.commit_waves += 1
+        self.stats.commits_ingested += len(batch)
+        return vids
+
+    def _commit(self, commits: list) -> list[int]:
+        """The ``commit_many`` call, retried under the policy.  The ingest
+        fault sites (``ingest.extract``/``ingest.commit``) fire BEFORE any
+        store or journal mutation, so a retry replays into the identical
+        commit; ``ingest.append`` is absorbed inside ``commit_many``
+        itself (a failed superblock extension evicts only the touched
+        group)."""
+        if self.retry is None:
+            return self.store.commit_many(commits)
+        backoff = self.retry.backoff_s
+        deadline = (None if self.retry.deadline_s is None
+                    else self._clock() + self.retry.deadline_s)
+        for k in range(max(1, self.retry.attempts)):
+            try:
+                return self.store.commit_many(commits)
+            except Exception:
+                self.stats.retries += 1
+                if (k + 1 >= max(1, self.retry.attempts)
+                        or (deadline is not None
+                            and self._clock() >= deadline)):
+                    raise
+                logger.warning("commit attempt %d failed; backing off "
+                               "%.3gs", k, backoff, exc_info=True)
+                self.retry.sleep(backoff)
+                backoff *= 2
+        raise AssertionError("unreachable")  # pragma: no cover
 
     # -- delivery plane --------------------------------------------------------
     def _materialize(self, wave: _InflightWave):

@@ -34,6 +34,15 @@ and threads four mechanisms between them:
     runs with ``drain_timeout_s`` set, so a migration DRAINS the current
     epoch's leases (new waves block briefly, in-flight waves deliver
     against the epoch they planned on) instead of racing them.
+  * WRITE WAVES — ``submit_commit(tenant, commits)`` admits commits
+    under the SAME backlog/quota gates and the DRR scheduler grants them
+    as whole write waves (one deficit unit each, granted before the
+    tenant's reads so a mixed backlog reads its own writes).  A granted
+    write wave lands as ONE ``PartitionedCVD.commit_many`` ingest wave
+    under the store lock; the tenant server's write plane drains the
+    epoch's read leases first — other tenants' in-flight waves deliver
+    on their worker threads OUTSIDE the store lock, so the drain makes
+    progress — mirroring the migration protocol.
 
 Pinned-byte shares: a tenant whose ``pinned_share`` of the group-layer
 budget is exhausted (ownership attributed wave-by-wave: a pinned group is
@@ -159,12 +168,14 @@ class _Request:
     lock only when it has to block on an undelivered ticket, and the
     completion paths set it only if a waiter materialized one."""
     ticket: int
-    vid: int
+    vid: int                       # -1 for a write request (vid unknown
+                                   # until its commit wave lands)
     done: bool = False
     event: Optional[threading.Event] = None
     value: Optional[np.ndarray] = None
     error: Optional[BaseException] = None
     server_ticket: Optional[int] = None
+    commit: Optional[dict] = None  # the commit_many dict (write requests)
 
 
 class _Tenant:
@@ -177,6 +188,7 @@ class _Tenant:
         self.quota = quota
         self.server = server
         self.queue: collections.deque[_Request] = collections.deque()
+        self.write_queue: collections.deque[_Request] = collections.deque()
         self.requests: dict[int, _Request] = {}
         self.next_ticket = 0
         self.inflight = 0          # admitted - (delivered + failed)
@@ -215,6 +227,7 @@ class MultiTenantServer:
                  use_kernel: Optional[bool] = None,
                  retry: Optional[RetryPolicy] = None,
                  trigger=None,
+                 write_drain_timeout_s: Optional[float] = 1.0,
                  clock: Callable[[], float] = time.monotonic):
         if max_backlog < 1:
             raise ValueError(f"max_backlog must be >= 1 ({max_backlog})")
@@ -224,6 +237,11 @@ class MultiTenantServer:
         self.use_kernel = use_kernel
         self.retry = retry
         self.trigger = trigger
+        # BOUNDED drain for tenant write waves (unlike the single-server
+        # default of None): another tenant's in-flight wave delivers on
+        # its own worker thread, but a wedged one must defer the commit,
+        # not deadlock the scheduler
+        self.write_drain_timeout_s = write_drain_timeout_s
         self._clock = clock
         self._tenants: dict[str, _Tenant] = {}
         # _lock guards admission state (queues, backlog, inflight counts);
@@ -264,6 +282,7 @@ class MultiTenantServer:
             srv = BatchedCheckoutServer(
                 self.store, use_kernel=self.use_kernel, engine="wave",
                 pipeline=True, retry=self.retry, tenant=tenant_id,
+                write_drain_timeout_s=self.write_drain_timeout_s,
                 clock=self._clock)
             t = _Tenant(tenant_id, quota or TenantQuota(), srv)
             self._tenants[tenant_id] = t
@@ -358,6 +377,53 @@ class MultiTenantServer:
                 tickets.append(ticket)
             t.stats.max_queue_depth = max(t.stats.max_queue_depth,
                                           len(t.queue))
+            self.peak_backlog = max(self.peak_backlog, self._backlog)
+        if tickets:
+            self._kick()
+        if shed_quota is not None:
+            with self._lock:
+                self._shed_locked(t, quota=shed_quota)
+        return tickets
+
+    def submit_commit(self, tenant_id: str,
+                      commits: Sequence[dict]) -> list[int]:
+        """Admit a WRITE batch for ``tenant_id`` under the same gates as
+        reads: each commit dict (the ``PartitionedCVD.commit_many``
+        forms) costs one ticket against the global backlog bound and the
+        tenant's ``max_inflight`` quota, shedding at the first breach
+        (the admitted prefix stays queued and serviceable).  The DRR
+        scheduler grants the queue as whole write waves — one deficit
+        unit each, granted BEFORE the tenant's pending reads so a mixed
+        backlog reads its own writes — and ``result(tenant, ticket)``
+        yields the assigned vid once the wave lands."""
+        self._check_open()
+        t = self._tenant(tenant_id)
+        commits = [dict(c) for c in commits]
+        if not commits:
+            return []
+        self._guard("serve.admit")
+        tickets: list[int] = []
+        shed_quota: Optional[bool] = None
+        with self._lock:
+            for c in commits:
+                if self._backlog >= self.max_backlog:
+                    shed_quota = False
+                    break
+                if t.inflight >= t.quota.max_inflight:
+                    shed_quota = True
+                    break
+                ticket = t.next_ticket
+                t.next_ticket += 1
+                req = _Request(ticket=ticket, vid=-1, commit=c)
+                t.write_queue.append(req)
+                t.requests[ticket] = req
+                t.inflight += 1
+                t.stats.submitted += 1
+                self._backlog += 1
+                tickets.append(ticket)
+            t.stats.max_queue_depth = max(
+                t.stats.max_queue_depth,
+                len(t.queue) + len(t.write_queue))
             self.peak_backlog = max(self.peak_backlog, self._backlog)
         if tickets:
             self._kick()
@@ -513,6 +579,13 @@ class MultiTenantServer:
             self._backlog -= n
         return batch
 
+    def _take_write_batch(self, t: _Tenant) -> list[_Request]:
+        with self._lock:
+            n = min(len(t.write_queue), t.quota.max_wave)
+            batch = [t.write_queue.popleft() for _ in range(n)]
+            self._backlog -= n
+        return batch
+
     def _round(self, *, inline: bool) -> int:
         """ONE deficit-round-robin round: every backlogged tenant earns
         its share and spends whole units as granted waves; then the
@@ -521,7 +594,7 @@ class MultiTenantServer:
         granted = 0
         for t in list(self._tenants.values()):
             with self._lock:
-                backlog = len(t.queue)
+                backlog = len(t.queue) + len(t.write_queue)
             if backlog == 0:
                 # DRR without credit hoarding: an idle tenant must not
                 # bank deficit and burst past everyone when it returns
@@ -531,7 +604,8 @@ class MultiTenantServer:
                 continue            # worker saturated: credit postponed
             t.deficit += t.quota.wave_share
             while t.deficit >= 1.0:
-                batch = self._take_batch(t)
+                # writes first: a mixed backlog reads its own commits
+                batch = self._take_write_batch(t) or self._take_batch(t)
                 if not batch:
                     break
                 t.deficit -= 1.0
@@ -544,7 +618,7 @@ class MultiTenantServer:
                     if t.grants.qsize() >= GRANT_DEPTH:
                         break
             with self._lock:
-                leftover = len(t.queue)
+                leftover = len(t.queue) + len(t.write_queue)
             if leftover:
                 # deficit spent, backlog remains: this turn is preempted
                 # until the next round — accounting only, nothing granted
@@ -597,6 +671,10 @@ class MultiTenantServer:
         deliver (join + split + fulfill) outside it.  A failed wave errors
         its batch's futures and rolls the admission accounting — it never
         kills the worker or the scheduler."""
+        if batch and batch[0].commit is not None:
+            # granted batches are homogeneous: a write wave comes whole
+            # from _take_write_batch
+            return self._execute_commit_wave(t, batch)
         vids = [r.vid for r in batch]
         try:
             with self._store_lock:
@@ -619,6 +697,34 @@ class MultiTenantServer:
         except BaseException as exc:
             self._fail_batch(t, batch, exc)
 
+    def _execute_commit_wave(self, t: _Tenant,
+                             batch: list[_Request]) -> None:
+        """One granted WRITE wave: the tenant server lands the whole
+        batch as ONE ``commit_many`` ingest wave under the store lock.
+        Its write plane first drains the epoch's read leases (bounded by
+        ``write_drain_timeout_s``) — other tenants' in-flight waves
+        deliver on their own worker threads OUTSIDE the store lock, so
+        the drain makes progress — and a drain that still times out
+        surfaces as a failed wave (the coordinator owns retries).
+        Futures resolve to the assigned vids."""
+        try:
+            with self._store_lock:
+                tickets = t.server.submit_commit(
+                    [r.commit for r in batch])
+                for r, tk in zip(batch, tickets):
+                    r.server_ticket = tk
+                    t.server._reserved.add(tk)
+                t.server.flush()
+                if t.server._pending_writes:
+                    raise RuntimeError(
+                        "commit wave deferred: epoch read leases did "
+                        "not drain within write_drain_timeout_s")
+            for r in batch:
+                r.value = t.server.result(r.server_ticket)
+            self._complete_batch(t, batch, delivered=True)
+        except BaseException as exc:
+            self._fail_batch(t, batch, exc)
+
     def _fail_batch(self, t: _Tenant, batch: Sequence[_Request],
                     exc: BaseException) -> None:
         """Error out one failed wave: the tenant server re-queued the
@@ -626,6 +732,7 @@ class MultiTenantServer:
         server-side requeue, release the reservations, and surface the
         error through every future."""
         t.server._pending.clear()
+        t.server._pending_writes.clear()
         for r in batch:
             if r.server_ticket is not None:
                 t.server._reserved.discard(r.server_ticket)
@@ -784,15 +891,16 @@ class MultiTenantServer:
         closed_exc = RuntimeError("MultiTenantServer closed")
         with self._lock:
             for t in self._tenants.values():
-                while t.queue:
-                    req = t.queue.popleft()
-                    self._backlog -= 1
-                    t.inflight -= 1
-                    t.stats.failed += 1
-                    req.error = closed_exc
-                    req.done = True
-                    if req.event is not None:
-                        req.event.set()
+                for q in (t.queue, t.write_queue):
+                    while q:
+                        req = q.popleft()
+                        self._backlog -= 1
+                        t.inflight -= 1
+                        t.stats.failed += 1
+                        req.error = closed_exc
+                        req.done = True
+                        if req.event is not None:
+                            req.event.set()
         for t in self._tenants.values():
             t.server.close()
 
@@ -824,7 +932,7 @@ class MultiTenantServer:
             tenants = {}
             for t in self._tenants.values():
                 tenants[t.id] = {
-                    "queued": len(t.queue),
+                    "queued": len(t.queue) + len(t.write_queue),
                     "inflight": t.inflight,
                     "reserved": len(t.server._reserved),
                     "deficit": t.deficit,
