@@ -165,7 +165,9 @@ Failure-site catalogue + recovery invariants (``core.faults``)::
     every stateful step above carries a named ``fault_point`` — a no-op
     until a deterministic ``FaultPlan`` is armed — so the recovery tests
     (and the CI ``REPRO_FAULT_SEED`` matrix) can exercise each failure
-    mode on purpose instead of waiting for it:
+    mode on purpose instead of waiting for it.  22 catalogued fault
+    sites (``core.faults.SITES``; count checked against the catalogue by
+    ``tools.analyze`` rule REPRO001):
 
       superblock.upload   Superblock.device(): fires BEFORE the transfer —
                           ``_device`` stays None, a retry re-uploads

@@ -20,7 +20,9 @@ What a ``StoreSnapshot`` captures — and deliberately does NOT:
     ``restore()`` returns a store whose first ``warmup()`` (or first
     wave) re-pins them lazily, hot-first, under the same budget.
 
-The crash-recovery contract (the fault suite's bar):
+The crash-recovery contract (the fault suite's bar — swept across all
+22 catalogued fault sites in ``core.faults.SITES``; the count is kept
+in sync by ``tools.analyze`` rule REPRO001):
 
   * **journal** — every store mutation after a snapshot (version commits,
     migration intent→commit pairs, repartitions, regroup layouts, ticket

@@ -228,9 +228,9 @@ class Journal:
                 self._f.flush()
                 os.fsync(self._f.fileno())
                 self.repairs += 1
+                self.seq = recs[-1].seq + 1 if recs else 0
             logger.warning("journal %s truncated at byte %d "
                            "(%d records keep)", self.path, bad, len(recs))
-            self.seq = recs[-1].seq + 1 if recs else 0
         return recs
 
 

@@ -249,6 +249,9 @@ class MultiTenantServer:
         # window) against the shared store — delivery joins run outside it
         self._lock = threading.Lock()
         self._store_lock = threading.Lock()
+        # leaf lock for bare stat counters bumped from both planes; never
+        # held across any other acquisition
+        self._stats_lock = threading.Lock()
         self._backlog = 0
         self.peak_backlog = 0          # the bounded-queue invariant witness
         self.repartitions = 0
@@ -455,7 +458,8 @@ class MultiTenantServer:
                 fault_point(site, self.store)
                 return
             except Exception:
-                self.absorbed_faults += 1
+                with self._stats_lock:
+                    self.absorbed_faults += 1
                 if k + 1 >= max(1, self.retry.attempts):
                     raise
                 logger.warning("fault at %s absorbed (attempt %d); backing "
@@ -646,7 +650,8 @@ class MultiTenantServer:
     def _pin_charge_locked(self, tenant_id: str) -> int:
         """Bytes of pinned groups charged to ``tenant_id`` (owner = tenant
         whose wave last touched the group).  Evicted groups drop off the
-        ownership map here, so ownership never outlives the pin."""
+        ownership map here, so ownership never outlives the pin.  Store
+        lock held: pruning here races with nothing that pins."""
         mgr = get_superblock_groups(self.store)
         if mgr is None:
             return 0
@@ -654,6 +659,18 @@ class MultiTenantServer:
                            if k in mgr.groups}
         return sum(int(mgr.groups[k].host.nbytes)
                    for k, v in self._pin_owner.items() if v == tenant_id)
+
+    def _pin_charge_view(self, tenant_id: str) -> int:
+        """Read-only pin charge for accounting: same figure as
+        ``_pin_charge_locked`` but without pruning, so it is safe under
+        ``_lock`` while a wave on the store plane reassigns ownership."""
+        mgr = get_superblock_groups(self.store)
+        if mgr is None:
+            return 0
+        owners = dict(self._pin_owner)
+        return sum(int(mgr.groups[k].host.nbytes)
+                   for k, v in owners.items()
+                   if v == tenant_id and k in mgr.groups)
 
     def _charge_pins_locked(self, t: _Tenant,
                             batch: Sequence[_Request]) -> None:
@@ -936,7 +953,7 @@ class MultiTenantServer:
                     "inflight": t.inflight,
                     "reserved": len(t.server._reserved),
                     "deficit": t.deficit,
-                    "pin_bytes": self._pin_charge_locked(t.id),
+                    "pin_bytes": self._pin_charge_view(t.id),
                     "stats": t.stats,
                 }
             owned = sum(v["pin_bytes"] for v in tenants.values())

@@ -1,0 +1,14 @@
+"""Planted engine module.
+
+5 catalogued fault sites.
+"""
+
+
+def run(store):
+    fault_point("a.one", store)
+    store.ran = True
+
+
+def mutate(store):
+    store.field = 1
+    fault_point("b.unknown", store)

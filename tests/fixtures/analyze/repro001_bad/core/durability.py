@@ -1,0 +1,5 @@
+"""Planted durability module whose docstring states no catalogue count."""
+
+
+def restore(path):
+    return path

@@ -1,0 +1,6 @@
+"""Planted REPRO001 fixture: catalogue with a never-fired ghost site."""
+
+SITES = (
+    "a.one",
+    "a.ghost",
+)

@@ -1,0 +1,15 @@
+"""Clean engine module.
+
+2 catalogued fault sites.
+"""
+
+
+def run(store):
+    staged = 1
+    fault_point("a.one", store)
+    store.ran = staged
+
+
+def other(store):
+    fault_point("a.two", store)
+    store.field = 2

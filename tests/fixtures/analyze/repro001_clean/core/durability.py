@@ -1,0 +1,8 @@
+"""Clean durability module.
+
+2 catalogued fault sites.
+"""
+
+
+def restore(path):
+    return path

@@ -1,0 +1,6 @@
+"""Clean REPRO001 fixture catalogue."""
+
+SITES = (
+    "a.one",
+    "a.two",
+)

@@ -1,0 +1,27 @@
+"""Planted REPRO002 fixture: mixed guard, inversion, blocking under store lock."""
+
+import threading
+
+
+class Server:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._store_lock = threading.Lock()
+        self._backlog = 0
+        self._inflight = {}
+
+    def submit(self, item):
+        with self._lock:
+            self._backlog += 1
+            with self._store_lock:  # admission lock wraps the store lock
+                self._dispatch(item)
+
+    def _dispatch(self, item):
+        self._inflight[item] = True
+
+    def drop(self, item):
+        self._backlog -= 1  # same counter, no lock: mixed-guard write
+
+    def wave(self, fut):
+        with self._store_lock:
+            return fut.result()  # blocking wait under the store lock

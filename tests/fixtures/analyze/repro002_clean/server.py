@@ -1,0 +1,34 @@
+"""Clean REPRO002 fixture: consistent guards, no nesting, waits outside."""
+
+import threading
+
+
+class Server:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._store_lock = threading.Lock()
+        self._backlog = 0
+        self._inflight = {}
+        self.dropped = 0  # single-writer unguarded counter: exempt
+
+    def submit(self, item):
+        with self._lock:
+            self._backlog += 1
+        with self._store_lock:
+            self._dispatch(item)
+
+    def _dispatch(self, item):
+        self._inflight[item] = True
+
+    def drop(self, item):
+        with self._lock:
+            self._backlog -= 1
+        self.dropped += 1
+
+    def wave(self, fut):
+        with self._store_lock:
+            ticket = self._submit_locked(fut)
+        return ticket.result()  # join outside the store lock
+
+    def _submit_locked(self, fut):
+        return fut

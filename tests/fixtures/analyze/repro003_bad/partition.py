@@ -1,0 +1,8 @@
+"""Planted REPRO003 fixture: swap before append, unsynced DATA append."""
+
+
+class Store:
+    def commit(self, payload):
+        self.version += 1  # in-memory swap BEFORE the journal append
+        self.journal.append("commit", payload)  # and no sync=True
+        self.data = payload

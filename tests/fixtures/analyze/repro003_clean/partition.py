@@ -1,0 +1,10 @@
+"""Clean REPRO003 fixture: stage into locals, append+fsync, then swap."""
+
+
+class Store:
+    def commit(self, payload):
+        staged = list(payload)
+        seq = len(staged)
+        self.journal.append("commit", staged, sync=True)
+        self.data = staged
+        self.version = seq

@@ -1,0 +1,16 @@
+"""Planted REPRO004 fixture: a lease leaks on the fall-through path."""
+
+
+def handle(store, fast):
+    lease = acquire_read_lease(store)
+    if fast:
+        return finish(lease)
+    return None  # leak: lease never released on this path
+
+
+def detach(store):
+    sb = take_superblock(store)
+    if sb is None:
+        return 0  # vacuous: nothing was detached
+    store.apply()
+    return 1  # leak: sb neither reinstalled nor handed off

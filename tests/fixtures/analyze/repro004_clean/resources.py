@@ -1,0 +1,24 @@
+"""Clean REPRO004 fixture: every path releases, reinstalls, or hands off."""
+
+
+def handle(store, fast):
+    lease = acquire_read_lease(store)
+    if fast:
+        return finish(lease)
+    lease.release()
+    return None
+
+
+def detach(store, plan):
+    sb = take_superblock(store)
+    try:
+        store.apply(plan)
+    except BaseException:
+        reinstall_superblock(store, sb)
+        raise
+    if sb is not None:
+        try:
+            migrate_superblock(store, plan, sb)
+        except Exception:
+            sb._device = None
+    return True

@@ -1,0 +1,12 @@
+"""Planted REPRO005 fixture: Python branch / concretize / dynamic size."""
+
+from jax.experimental import pallas as pl
+
+
+def bad_kernel(x_ref, o_ref):
+    t = pl.program_id(0)
+    if t > 0:  # Python-level branch on a traced value
+        o_ref[0] = x_ref[0]
+    v = x_ref[1]
+    n = int(v)  # concretizes a traced value
+    o_ref[pl.ds(t, n)] = x_ref[pl.ds(t, n)]  # non-static slice size

@@ -1,0 +1,16 @@
+"""Clean REPRO005 fixture: pl.when, static sizes, static loop bounds."""
+
+from jax.experimental import pallas as pl
+
+BLOCK = 8
+
+
+def good_kernel(x_ref, o_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t > 0)
+    def _copy():
+        o_ref[pl.ds(t * BLOCK, BLOCK)] = x_ref[pl.ds(t * BLOCK, BLOCK)]
+
+    for i in range(BLOCK):
+        o_ref[i] = x_ref[i] + 1

@@ -1,0 +1,12 @@
+"""Planted REPRO006 fixture: wall clock, legacy RNG, set iteration."""
+
+import time
+
+import numpy as np
+
+
+def stamp(store):
+    store.t = time.time()
+    store.noise = np.random.rand(4)
+    for key in set(store.keys):
+        store.order.append(key)

@@ -1,0 +1,11 @@
+"""Clean REPRO006 fixture: seeded RNG, logical clock, sorted iteration."""
+
+import numpy as np
+
+
+def stamp(store, seed):
+    rng = np.random.default_rng(seed)
+    store.t = store.seq + 1
+    store.noise = rng.random(4)
+    for key in sorted(set(store.keys)):
+        store.order.append(key)

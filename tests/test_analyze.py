@@ -1,0 +1,177 @@
+"""Fixture suite for the repro-analyze invariant checkers (REPRO001-006).
+
+Each rule is proven twice: its planted fixture under
+``tests/fixtures/analyze/repro00N_bad/`` must trip it (with the expected
+message fragments), and the matching ``_clean`` fixture must pass.  On
+top of that the live tree must analyze to zero non-baseline findings,
+``# noqa: REPRO0xx`` must suppress, and baseline entries must
+grandfather.  The analyzer is stdlib-only, so none of this needs JAX.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.analyze.engine import EXCLUDE_DIRS, main, run  # noqa: E402
+
+FIXTURES = REPO / "tests" / "fixtures" / "analyze"
+BASELINE = REPO / "tools" / "analyze" / "baseline.json"
+
+
+def findings_for(path, rule):
+    report = run([str(path)], rules=[rule], baseline_path=None)
+    return report["findings"]
+
+
+PLANTED = [
+    (
+        "REPRO001",
+        [
+            "not in core/faults.py SITES",
+            "never fires",
+            "docstring claims 5",
+            "states no fault-catalogue count",
+            "after a store mutation",
+        ],
+    ),
+    (
+        "REPRO002",
+        [
+            "admission lock must never wrap the store lock",
+            "racy mixed-guard write",
+            "blocking call .result()",
+        ],
+    ),
+    (
+        "REPRO003",
+        [
+            "store mutation precedes the DATA-kind journal append",
+            "without sync=True",
+        ],
+    ),
+    (
+        "REPRO004",
+        [
+            "acquire_read_lease()",
+            "take_superblock()",
+        ],
+    ),
+    (
+        "REPRO005",
+        [
+            "Python `if` on a traced value",
+            "int() concretizes a traced value",
+            "non-static size passed to ds()",
+        ],
+    ),
+    (
+        "REPRO006",
+        [
+            "wall-clock time.time()",
+            "unseeded global-state RNG",
+            "nondeterministic order",
+        ],
+    ),
+]
+
+
+@pytest.mark.parametrize("rule,fragments", PLANTED, ids=[r for r, _ in PLANTED])
+def test_planted_violation_caught(rule, fragments):
+    found = findings_for(FIXTURES / f"{rule.lower()}_bad", rule)
+    assert found, f"{rule} found nothing in its planted fixture"
+    assert all(f["rule"] == rule for f in found)
+    messages = "\n".join(f["message"] for f in found)
+    for fragment in fragments:
+        assert fragment in messages, f"{rule}: expected fragment {fragment!r} in:\n{messages}"
+
+
+@pytest.mark.parametrize("rule", [r for r, _ in PLANTED])
+def test_clean_fixture_passes(rule):
+    found = findings_for(FIXTURES / f"{rule.lower()}_clean", rule)
+    assert found == [], f"{rule} false positives: {found}"
+
+
+def test_live_tree_zero_non_baseline_findings():
+    report = run([str(REPO / "src" / "repro")], baseline_path=str(BASELINE))
+    assert report["rules"] == [f"REPRO00{i}" for i in range(1, 7)]
+    assert report["findings"] == [], (
+        "live tree violates its own invariants:\n"
+        + "\n".join(f"{f['path']}:{f['line']}: {f['rule']} {f['message']}" for f in report["findings"])
+    )
+
+
+def test_baseline_starts_near_empty():
+    entries = json.loads(BASELINE.read_text())
+    assert isinstance(entries, list)
+    assert len(entries) <= 3, "baseline.json must stay near-empty — fix findings instead"
+
+
+VIOLATION = "import time\n\n\ndef stamp(store):\n    store.t = time.time(){noqa}\n"
+
+
+def test_suppression_comment_roundtrip(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    target = core / "state.py"
+
+    target.write_text(VIOLATION.format(noqa=""))
+    report = run([str(tmp_path)], rules=["REPRO006"], baseline_path=None)
+    assert len(report["findings"]) == 1
+
+    target.write_text(VIOLATION.format(noqa="  # noqa: REPRO006"))
+    report = run([str(tmp_path)], rules=["REPRO006"], baseline_path=None)
+    assert report["findings"] == []
+    assert report["counts"]["suppressed"] == 1
+
+    # A noqa for a DIFFERENT rule must not silence this one.
+    target.write_text(VIOLATION.format(noqa="  # noqa: REPRO001"))
+    report = run([str(tmp_path)], rules=["REPRO006"], baseline_path=None)
+    assert len(report["findings"]) == 1
+
+
+def test_baseline_grandfathers_known_finding(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "state.py").write_text(VIOLATION.format(noqa=""))
+
+    report = run([str(tmp_path)], rules=["REPRO006"], baseline_path=None)
+    assert len(report["findings"]) == 1
+    entry = report["findings"][0]
+
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps([
+        {"rule": entry["rule"], "path": entry["path"], "message": entry["message"]}
+    ]))
+    report = run([str(tmp_path)], rules=["REPRO006"], baseline_path=str(baseline))
+    assert report["findings"] == []
+    assert report["counts"]["baselined"] == 1
+
+
+def test_seed_modules_excluded(tmp_path):
+    (tmp_path / "core").mkdir()
+    (tmp_path / "models").mkdir()
+    (tmp_path / "core" / "bad.py").write_text(VIOLATION.format(noqa=""))
+    # Same violation inside models/core/: must be skipped entirely.
+    (tmp_path / "models" / "core").mkdir(parents=True)
+    (tmp_path / "models" / "core" / "bad.py").write_text(VIOLATION.format(noqa=""))
+    assert "models" in EXCLUDE_DIRS
+    report = run([str(tmp_path)], rules=["REPRO006"], baseline_path=None)
+    assert len(report["findings"]) == 1
+    assert "models" not in report["findings"][0]["path"]
+
+
+def test_cli_exit_codes_and_json(capsys):
+    rc = main([str(FIXTURES / "repro006_bad"), "--no-baseline", "--rules", "REPRO006", "--json"])
+    out = capsys.readouterr().out
+    payload = json.loads(out)
+    assert rc == 1
+    assert payload["counts"]["new"] == len(payload["findings"]) >= 3
+
+    rc = main([str(REPO / "src" / "repro"), "--baseline", str(BASELINE)])
+    assert rc == 0

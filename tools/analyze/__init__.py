@@ -1,0 +1,27 @@
+"""repro-analyze: AST invariant lint suite for the wave engine.
+
+Stdlib-only — imports nothing from ``src`` so it runs on plain CPython
+(no JAX, no numpy).  Facts about the target tree (the fault-site
+catalogue, the journal DATA kinds) are recovered by parsing source, not
+by importing it.
+
+Entry points:
+
+    python -m tools.analyze src/repro          # CLI
+    make lint-invariants                       # Makefile gate
+    tools.analyze.engine.run(paths, ...)       # programmatic
+
+Rule IDs (see tools/analyze/README.md for the contracts):
+
+    REPRO001  fault-site catalogue sync + fire-before-mutation
+    REPRO002  lock discipline (mixed guards, lock-order, blocking calls)
+    REPRO003  write-ahead ordering (journal append before in-memory swap)
+    REPRO004  resource balance (lease/superblock acquire-release pairing)
+    REPRO005  Pallas kernel tracing safety
+    REPRO006  determinism (seeded RNG, no wall-clock, ordered iteration)
+
+Suppress a single finding with ``# noqa: REPRO0xx`` on the flagged line;
+grandfather with ``tools/analyze/baseline.json`` (kept near-empty).
+"""
+
+from tools.analyze.engine import Finding, Project, run  # noqa: F401

@@ -1,0 +1,334 @@
+"""Shared AST walking helpers for the repro-analyze checkers.
+
+Everything here is lexical/structural: no imports from the analyzed
+tree, no type inference.  The helpers encode the few conventions the
+checkers rely on:
+
+* "store mutation" means an assignment whose *root* is ``self``/``cls``
+  or a function parameter (locals are staging; ``x = self.partitions``
+  aliasing is out of scope and documented as a limitation);
+* "guard context" is the set of ``self.<lock>`` names held via
+  ``with self.<lock>:`` at a program point;
+* the mini-CFG outcome analysis used by the resource-balance checker
+  abstracts a statement list into the set of (exit-kind, consumed)
+  outcomes, where exit-kind is one of ``fall``/``return``/``raise``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Sequence, Set, Tuple
+
+FuncDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def parse_module(path: str, source: str) -> ast.Module:
+    return ast.parse(source, filename=path)
+
+
+def iter_functions(tree: ast.AST) -> Iterator[ast.AST]:
+    """Yield every function/method definition in the tree."""
+    for node in ast.walk(tree):
+        if isinstance(node, FuncDef):
+            yield node
+
+
+def iter_classes(tree: ast.AST) -> Iterator[ast.ClassDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            yield node
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """Root identifier of an attribute/subscript chain, if any.
+
+    ``self.a.b[c]`` -> ``self``;  ``x[0].y`` -> ``x``;  ``f().y`` -> None.
+    """
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    """Terminal name of the called function: ``a.b.c(...)`` -> ``c``."""
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``np.random.rand`` -> "np.random.rand"; None if not a pure chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def func_params(func: ast.AST) -> Set[str]:
+    a = func.args
+    names = set()
+    for group in (a.posonlyargs, a.args, a.kwonlyargs):
+        names.update(p.arg for p in group)
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names
+
+
+def assign_target_roots(stmt: ast.stmt) -> Set[str]:
+    """Root names written by an Assign/AugAssign/AnnAssign statement."""
+    roots: Set[str] = set()
+    targets: Sequence[ast.AST] = ()
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = (stmt.target,)
+    for t in targets:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for elt in t.elts:
+                r = root_name(elt)
+                if r:
+                    roots.add(r)
+        else:
+            r = root_name(t)
+            if r:
+                roots.add(r)
+    return roots
+
+
+def is_store_mutation(stmt: ast.stmt, params: Set[str]) -> bool:
+    """True if the statement writes through ``self``/``cls``/a parameter.
+
+    Only attribute/subscript writes count: rebinding a parameter name to
+    a new local value (``x = []``) is staging, ``x.field = v`` and
+    ``x[k] = v`` mutate shared state.
+    """
+    targets: Sequence[ast.AST] = ()
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = (stmt.target,)
+    else:
+        return False
+    for t in targets:
+        elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+        for elt in elts:
+            if not isinstance(elt, (ast.Attribute, ast.Subscript)):
+                continue
+            r = root_name(elt)
+            if r in ("self", "cls") or (r is not None and r in params):
+                return True
+    return False
+
+
+def statement_lists(node: ast.AST) -> Iterator[list]:
+    """Yield every statement list (block body) nested inside node."""
+    for child in ast.walk(node):
+        for field in ("body", "orelse", "finalbody"):
+            block = getattr(child, field, None)
+            if isinstance(block, list) and block and isinstance(block[0], ast.stmt):
+                yield block
+
+
+def enclosing_function(tree: ast.AST, target: ast.AST):
+    """Innermost function definition containing target (by position)."""
+    best = None
+    for func in iter_functions(tree):
+        if (
+            func.lineno <= target.lineno
+            and (func.end_lineno or func.lineno) >= (target.end_lineno or target.lineno)
+        ):
+            if best is None or func.lineno > best.lineno:
+                best = func
+    return best
+
+
+def with_lock_names(stmt: ast.With) -> Set[str]:
+    """Names of ``self.<attr>`` context managers in a with statement."""
+    names = set()
+    for item in stmt.items:
+        ctx = item.context_expr
+        if (
+            isinstance(ctx, ast.Attribute)
+            and isinstance(ctx.value, ast.Name)
+            and ctx.value.id == "self"
+        ):
+            names.add(ctx.attr)
+    return names
+
+
+def names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+# ---------------------------------------------------------------------------
+# Mini-CFG outcome analysis (resource-balance checker)
+# ---------------------------------------------------------------------------
+
+FALL, RETURN, RAISE = "fall", "return", "raise"
+
+Outcome = Tuple[str, bool]  # (exit kind, resource consumed?)
+
+
+def _is_none_check(test: ast.AST, var: str) -> Optional[bool]:
+    """Classify a test as a None/truthiness guard on ``var``.
+
+    Returns True if the test passing means ``var`` is *live* (non-None),
+    False if passing means it is vacuous (None), None if unrelated.
+    """
+    if isinstance(test, ast.Name) and test.id == var:
+        return True
+    if (
+        isinstance(test, ast.UnaryOp)
+        and isinstance(test.op, ast.Not)
+        and isinstance(test.operand, ast.Name)
+        and test.operand.id == var
+    ):
+        return False
+    if isinstance(test, ast.Compare) and len(test.ops) == 1:
+        left, right = test.left, test.comparators[0]
+        op = test.ops[0]
+        none_side = None
+        if isinstance(left, ast.Name) and left.id == var:
+            none_side = right
+        elif isinstance(right, ast.Name) and right.id == var:
+            none_side = left
+        if none_side is not None and isinstance(none_side, ast.Constant) and none_side.value is None:
+            if isinstance(op, ast.Is) or isinstance(op, ast.Eq):
+                return False  # branch taken when var IS None -> vacuous
+            if isinstance(op, ast.IsNot) or isinstance(op, ast.NotEq):
+                return True
+    return None
+
+
+def _consumes(stmt_or_expr: ast.AST, var: str) -> bool:
+    """Does this node *use* var in a way that hands off/releases it?
+
+    Anything except a pure None/truthiness test counts: passing it to a
+    call, attribute access/store on it, returning it, rebinding it.
+    """
+    for node in ast.walk(stmt_or_expr):
+        if isinstance(node, ast.Name) and node.id == var:
+            return True
+    return False
+
+
+class OutcomeAnalysis:
+    """Abstract interpreter over a statement list for one resource var.
+
+    Tracks, per control path, whether ``var`` has been consumed
+    (released/handed off/stored) by the time the path exits the block.
+    """
+
+    def __init__(self, var: str):
+        self.var = var
+
+    def block(self, stmts: Sequence[ast.stmt], consumed: bool) -> Set[Outcome]:
+        outcomes: Set[Outcome] = set()
+        states = {consumed}
+        for stmt in stmts:
+            next_states = set()
+            for st in states:
+                for kind, c in self.stmt(stmt, st):
+                    if kind == FALL:
+                        next_states.add(c)
+                    else:
+                        outcomes.add((kind, c))
+            states = next_states
+            if not states:
+                return outcomes
+        for st in states:
+            outcomes.add((FALL, st))
+        return outcomes
+
+    def stmt(self, stmt: ast.stmt, consumed: bool) -> Set[Outcome]:
+        var = self.var
+        if isinstance(stmt, ast.Return):
+            used = consumed or (stmt.value is not None and _consumes(stmt.value, var))
+            return {(RETURN, used)}
+        if isinstance(stmt, ast.Raise):
+            return {(RAISE, consumed)}
+        if isinstance(stmt, ast.If):
+            guard = _is_none_check(stmt.test, var)
+            out: Set[Outcome] = set()
+            # Then-branch: if the test passing implies var is None/vacuous,
+            # treat the resource as trivially consumed on that path.
+            then_consumed = consumed or guard is False
+            out |= self.block(stmt.body, then_consumed)
+            else_consumed = consumed or guard is True
+            if stmt.orelse:
+                out |= self.block(stmt.orelse, else_consumed)
+            else:
+                out.add((FALL, else_consumed))
+            return out
+        if isinstance(stmt, ast.Try):
+            out: Set[Outcome] = set()
+            body_out = self.block(stmt.body, consumed)
+            # Exceptions may fire anywhere in the body: handlers start
+            # from the try-entry consumed state (pessimistic).
+            handler_entry = consumed
+            handled: Set[Outcome] = set()
+            for handler in stmt.handlers:
+                handled |= self.block(handler.body, handler_entry)
+            after_else: Set[Outcome] = set()
+            for kind, c in body_out:
+                if kind == FALL and stmt.orelse:
+                    after_else |= self.block(stmt.orelse, c)
+                else:
+                    after_else.add((kind, c))
+            combined = set()
+            for kind, c in after_else:
+                if kind == RAISE and stmt.handlers:
+                    # Modeled as caught; handler outcomes added below.
+                    continue
+                combined.add((kind, c))
+            combined |= handled
+            if stmt.handlers and not any(k == RAISE for k, _ in combined):
+                # Body statements other than explicit `raise` are treated
+                # as non-raising (documented limitation) — but a bare
+                # try/except still funnels through the handlers above.
+                pass
+            if stmt.finalbody:
+                fin_consumes = any(_consumes(s, var) for s in stmt.finalbody)
+                final_out = set()
+                for kind, c in combined:
+                    fin = self.block(stmt.finalbody, c or fin_consumes)
+                    for fkind, fc in fin:
+                        # finally overrides exit kind only on its own
+                        # return/raise; otherwise original kind persists.
+                        final_out.add((kind if fkind == FALL else fkind, fc))
+                combined = final_out
+            return combined
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            used = consumed or any(_consumes(it.context_expr, var) for it in stmt.items)
+            return self.block(stmt.body, used)
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            body_out = self.block(stmt.body, consumed)
+            out = {(k, c) for k, c in body_out if k != FALL}
+            # Loop may run zero times or fall out after iterations.
+            out.add((FALL, consumed))
+            for k, c in body_out:
+                if k == FALL:
+                    out.add((FALL, c))
+            if stmt.orelse:
+                extended = set()
+                for k, c in out:
+                    if k == FALL:
+                        extended |= self.block(stmt.orelse, c)
+                    else:
+                        extended.add((k, c))
+                out = extended
+            return out
+        # Leaf statement: consumption is any use of the variable.
+        used = consumed or _consumes(stmt, self.var)
+        return {(FALL, used)}

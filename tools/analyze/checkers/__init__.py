@@ -1,0 +1,17 @@
+"""Checker registry: rule ID -> callable(Project) -> list[Finding]."""
+
+from tools.analyze.checkers.fault_sites import check as _fault_sites
+from tools.analyze.checkers.locks import check as _locks
+from tools.analyze.checkers.writeahead import check as _writeahead
+from tools.analyze.checkers.balance import check as _balance
+from tools.analyze.checkers.tracing import check as _tracing
+from tools.analyze.checkers.determinism import check as _determinism
+
+REGISTRY = {
+    "REPRO001": _fault_sites,
+    "REPRO002": _locks,
+    "REPRO003": _writeahead,
+    "REPRO004": _balance,
+    "REPRO005": _tracing,
+    "REPRO006": _determinism,
+}

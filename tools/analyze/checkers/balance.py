@@ -1,0 +1,87 @@
+"""REPRO004 — resource balance for leases and detached superblocks.
+
+``acquire_read_lease`` / ``take_superblock`` / ``take_group_superblocks``
+detach a resource that MUST be handed back on every control-flow path:
+released, reinstalled, migrated, stored into an owner object, or
+explicitly dropped (``sb._device = None``).  The checker runs a mini-CFG
+outcome analysis (try/except/early-return aware) from each acquisition
+to the end of the enclosing function and flags any path that exits —
+falls off, returns, or raises — while the resource variable was never
+used again.  ``if x is None: ...`` vacuous branches are exempt.
+
+Known limitation: only explicit ``raise`` statements create exception
+edges; a plain call that throws between acquire and release is invisible
+unless wrapped in try/except (the live tree wraps all three sites).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.analyze.astutil import (
+    FALL,
+    Outcome,
+    OutcomeAnalysis,
+    call_name,
+    iter_functions,
+)
+from tools.analyze.engine import Finding, Project
+
+RULE = "REPRO004"
+
+ACQUIRE_FUNCS = {"acquire_read_lease", "take_superblock", "take_group_superblocks"}
+
+
+class _BalanceAnalysis(OutcomeAnalysis):
+    """OutcomeAnalysis that arms the resource at its acquisition stmt."""
+
+    def __init__(self, var: str, acquisition: ast.stmt):
+        super().__init__(var)
+        self.acquisition = acquisition
+
+    def stmt(self, stmt: ast.stmt, consumed: bool) -> Set[Outcome]:
+        if stmt is self.acquisition:
+            return {(FALL, False)}
+        return super().stmt(stmt, consumed)
+
+
+def _acquisitions(func: ast.AST):
+    for node in ast.walk(func):
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and isinstance(node.value, ast.Call)
+            and call_name(node.value) in ACQUIRE_FUNCS
+        ):
+            yield node.targets[0].id, call_name(node.value), node
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        seen_funcs = set()
+        for func in iter_functions(mod.tree):
+            if id(func) in seen_funcs:
+                continue
+            seen_funcs.add(id(func))
+            for var, fn, stmt in _acquisitions(func):
+                analysis = _BalanceAnalysis(var, stmt)
+                # Start "consumed" so paths that never reach the
+                # acquisition cannot be flagged; the acquisition
+                # statement itself arms the tracker.
+                outcomes = analysis.block(func.body, True)
+                leaks = sorted({kind for kind, consumed in outcomes if not consumed})
+                if leaks:
+                    findings.append(
+                        Finding(
+                            RULE,
+                            mod.path,
+                            stmt.lineno,
+                            stmt.col_offset,
+                            f"'{var}' acquired via {fn}() can exit the function "
+                            f"({'/'.join(leaks)} path) without release/reinstall/hand-off",
+                        )
+                    )
+    return findings

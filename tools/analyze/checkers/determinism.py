@@ -1,0 +1,121 @@
+"""REPRO006 — determinism of journaled / hashed state in ``core/``.
+
+Journal replay and snapshot digests require bit-identical re-execution:
+anything nondeterministic that feeds store state breaks the zero-RPO
+recovery contract.  In ``core/`` modules the checker flags
+
+* legacy global-state NumPy RNG (``np.random.rand`` etc. — only the
+  seeded ``default_rng``/``Generator``/``SeedSequence`` API is allowed);
+* stdlib ``random.*`` calls;
+* wall-clock reads (``time.time``/``time.time_ns``) — timestamps must
+  come from logical sequence numbers;
+* iteration directly over a ``set``/``frozenset`` (or unsorted
+  ``os.listdir``/``glob``) — wrap in ``sorted(...)`` first.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analyze.astutil import dotted_name
+from tools.analyze.engine import Finding, Project
+
+RULE = "REPRO006"
+
+SEEDED_NP_API = {"default_rng", "Generator", "SeedSequence", "PCG64", "Philox"}
+STDLIB_RANDOM = {
+    "random", "randint", "randrange", "shuffle", "choice", "choices",
+    "sample", "uniform", "gauss", "getrandbits", "seed",
+}
+UNORDERED_PRODUCERS = {"set", "frozenset", "listdir", "iterdir", "glob"}
+
+
+def _in_core(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return "/core/" in norm or norm.startswith("core/")
+
+
+def _iter_targets(tree: ast.Module):
+    """Yield (node, iterated-expression) for every iteration site."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            yield node, node.iter
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+            for gen in node.generators:
+                yield node, gen.iter
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        if not _in_core(mod.path):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = dotted_name(node.func) or ""
+            parts = dotted.split(".")
+            if len(parts) >= 3 and parts[-2] == "random" and parts[0] in ("np", "numpy"):
+                if parts[-1] not in SEEDED_NP_API:
+                    findings.append(
+                        Finding(
+                            RULE,
+                            mod.path,
+                            node.lineno,
+                            node.col_offset,
+                            f"unseeded global-state RNG {dotted}() — "
+                            "use np.random.default_rng(seed)",
+                        )
+                    )
+            elif len(parts) == 2 and parts[0] == "random" and parts[1] in STDLIB_RANDOM:
+                findings.append(
+                    Finding(
+                        RULE,
+                        mod.path,
+                        node.lineno,
+                        node.col_offset,
+                        f"stdlib {dotted}() is process-global and unseeded here — "
+                        "nondeterministic state",
+                    )
+                )
+            elif dotted in ("time.time", "time.time_ns"):
+                findings.append(
+                    Finding(
+                        RULE,
+                        mod.path,
+                        node.lineno,
+                        node.col_offset,
+                        f"wall-clock {dotted}() feeding core state — "
+                        "use logical sequence numbers",
+                    )
+                )
+        for site, it in _iter_targets(mod.tree):
+            if isinstance(it, ast.Call):
+                fn = it.func
+                name = fn.id if isinstance(fn, ast.Name) else (
+                    fn.attr if isinstance(fn, ast.Attribute) else ""
+                )
+                if name in UNORDERED_PRODUCERS:
+                    findings.append(
+                        Finding(
+                            RULE,
+                            mod.path,
+                            site.lineno,
+                            site.col_offset,
+                            f"iteration directly over {name}(...) has nondeterministic "
+                            "order — wrap in sorted(...)",
+                        )
+                    )
+            elif isinstance(it, ast.Set):
+                findings.append(
+                    Finding(
+                        RULE,
+                        mod.path,
+                        site.lineno,
+                        site.col_offset,
+                        "iteration over a set literal has nondeterministic order — "
+                        "wrap in sorted(...)",
+                    )
+                )
+    return findings

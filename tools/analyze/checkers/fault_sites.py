@@ -1,0 +1,175 @@
+"""REPRO001 — fault-site catalogue sync + fire-before-mutation.
+
+Contract (PRs 6-9): every ``fault_point("x")`` / ``self._guard("x")``
+site name appears in ``core/faults.py::SITES`` and every catalogued
+site fires somewhere in the tree; the catalogue count claimed in the
+``core/checkout.py`` and ``core/durability.py`` module docstrings
+equals ``len(SITES)``; and each ``fault_point`` call lexically precedes
+any attribute/store mutation in its statement block, so an injected
+fault can never observe a half-applied mutation.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Set, Tuple
+
+from tools.analyze.astutil import (
+    call_name,
+    enclosing_function,
+    func_params,
+    is_store_mutation,
+    statement_lists,
+)
+from tools.analyze.engine import Finding, Project
+
+RULE = "REPRO001"
+
+# Call forms that fire a fault site with a literal name in arg 0.
+FIRE_FUNCS = {"fault_point", "_guard"}
+
+# Docstring claim: "... NN catalogued fault sites ...".
+CLAIM_RE = re.compile(r"\b(\d+)\s+catalogued\s+fault\s+sites?\b")
+
+# Modules whose docstrings must state the catalogue size.
+CLAIM_MODULES = ("core/checkout.py", "core/durability.py")
+
+
+def _catalogue(project: Project) -> Tuple[Optional[Set[str]], Optional[str], int]:
+    """Parse SITES from the project's faults.py without importing it."""
+    mod = project.find("core/faults.py", "faults.py")
+    if mod is None:
+        return None, None, 0
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign):
+            for target in node.targets:
+                if isinstance(target, ast.Name) and target.id == "SITES":
+                    try:
+                        values = ast.literal_eval(node.value)
+                    except (ValueError, SyntaxError):
+                        return None, mod.path, node.lineno
+                    return set(values), mod.path, node.lineno
+    return None, mod.path, 1
+
+
+def _fired_sites(project: Project) -> List[Tuple[str, str, int, int, ast.Call]]:
+    fired = []
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or call_name(node) not in FIRE_FUNCS:
+                continue
+            if not node.args:
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                fired.append((arg.value, mod.path, node.lineno, node.col_offset, node))
+    return fired
+
+
+def _containing_stmt(mod_tree: ast.AST, call: ast.Call):
+    """(statement list, index) of the innermost statement holding call.
+
+    Every ancestor compound statement also "contains" the call; the
+    innermost direct statement is the one with the smallest line span.
+    """
+    best = None
+    for block in statement_lists(mod_tree):
+        for i, stmt in enumerate(block):
+            if any(child is call for child in ast.walk(stmt)):
+                span = (stmt.end_lineno or stmt.lineno) - stmt.lineno
+                if best is None or span < best[2]:
+                    best = (block, i, span)
+    if best is None:
+        return None, None
+    return best[0], best[1]
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    catalogue, faults_path, sites_line = _catalogue(project)
+    fired = _fired_sites(project)
+
+    if catalogue is None:
+        if faults_path is not None:
+            findings.append(
+                Finding(RULE, faults_path, sites_line, 0, "SITES catalogue is not a parseable literal tuple")
+            )
+        # Without a catalogue the sync checks are vacuous; still run the
+        # fire-before-mutation rule below.
+    else:
+        used_names = {site for site, *_ in fired}
+        for site, path, line, col, _ in fired:
+            if "fault" in path.replace("\\", "/").rsplit("/", 1)[-1]:
+                continue  # the catalogue module's own plumbing
+            if site not in catalogue:
+                findings.append(
+                    Finding(RULE, path, line, col, f"fault site '{site}' is not in core/faults.py SITES")
+                )
+        for site in sorted(catalogue - used_names):
+            findings.append(
+                Finding(
+                    RULE,
+                    faults_path,
+                    sites_line,
+                    0,
+                    f"catalogued fault site '{site}' never fires anywhere in the tree",
+                )
+            )
+
+        for suffix in CLAIM_MODULES:
+            mod = project.find(suffix)
+            if mod is None:
+                continue
+            doc = ast.get_docstring(mod.tree) or ""
+            match = CLAIM_RE.search(doc)
+            if match is None:
+                findings.append(
+                    Finding(
+                        RULE,
+                        mod.path,
+                        1,
+                        0,
+                        "module docstring states no fault-catalogue count "
+                        f"(expected '{len(catalogue)} catalogued fault sites')",
+                    )
+                )
+            elif int(match.group(1)) != len(catalogue):
+                findings.append(
+                    Finding(
+                        RULE,
+                        mod.path,
+                        1,
+                        0,
+                        f"docstring claims {match.group(1)} catalogued fault sites "
+                        f"but len(SITES) == {len(catalogue)}",
+                    )
+                )
+
+    # Fire-before-mutation: within its statement block, no store mutation
+    # may lexically precede the fault_point call.
+    for site, path, line, col, call in fired:
+        if call_name(call) != "fault_point":
+            continue  # _guard wrappers delegate; checked at the wrapper
+        mod = next(m for m in project.modules if m.path == path)
+        if mod is project.find("core/faults.py", "faults.py"):
+            continue
+        block, idx = _containing_stmt(mod.tree, call)
+        if block is None:
+            continue
+        func = enclosing_function(mod.tree, call)
+        params = func_params(func) if func is not None else set()
+        for prior in block[:idx]:
+            if is_store_mutation(prior, params):
+                findings.append(
+                    Finding(
+                        RULE,
+                        path,
+                        line,
+                        col,
+                        f"fault_point('{site}') fires after a store mutation in its block "
+                        f"(line {prior.lineno}) — must fire before any mutation",
+                    )
+                )
+                break
+    return findings

@@ -1,0 +1,276 @@
+"""REPRO002 — lock-discipline race detector.
+
+For every class that creates ``threading.Lock/RLock/Condition``
+attributes in ``__init__``, infer which ``self._*`` attributes are
+written under which ``with self.<lock>:`` guards, propagating guard
+contexts interprocedurally through ``self.<method>()`` calls (so a
+``*_locked`` helper called only under ``_lock`` counts as guarded).
+
+Findings:
+
+* **mixed-guard write** — an attribute whose write sites have no lock
+  in common while at least one site holds a lock (a consistently
+  unguarded single-writer counter is exempt; so is ``__init__``);
+* **acquisition-order inversion** — taking ``_store_lock`` while
+  ``_lock`` is already held (the admission plane must never reach into
+  the store plane), or any observed A->B / B->A cycle;
+* **blocking call under the store lock** — ``.result()``, ``.join()``,
+  ``.wait()``, ``time.sleep`` etc. while a ``*store_lock*`` is held:
+  wave delivery must join futures outside the dispatch plane.
+"""
+
+from __future__ import annotations
+
+import ast
+from collections import defaultdict
+from typing import Dict, FrozenSet, List, Set, Tuple
+
+from tools.analyze.astutil import FuncDef, dotted_name, iter_classes, with_lock_names
+from tools.analyze.engine import Finding, Project
+
+RULE = "REPRO002"
+
+LOCK_FACTORIES = {"Lock", "RLock", "Condition"}
+BLOCKING_NAMES = {"result", "join", "wait", "as_completed", "sleep", "deliver"}
+
+
+def _lock_attrs(cls: ast.ClassDef) -> Set[str]:
+    attrs = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Call):
+            continue
+        name = dotted_name(node.value.func) or ""
+        if name.rsplit(".", 1)[-1] not in LOCK_FACTORIES:
+            continue
+        for target in node.targets:
+            if (
+                isinstance(target, ast.Attribute)
+                and isinstance(target.value, ast.Name)
+                and target.value.id == "self"
+            ):
+                attrs.add(target.attr)
+    return attrs
+
+
+class _MethodFacts:
+    def __init__(self):
+        # (attr, local_held, lineno, col)
+        self.writes: List[Tuple[str, FrozenSet[str], int, int]] = []
+        # (callee, local_held)
+        self.calls: List[Tuple[str, FrozenSet[str]]] = []
+        # (local_held_before, lock, lineno, col)
+        self.acquires: List[Tuple[FrozenSet[str], str, int, int]] = []
+        # (terminal_name, local_held, lineno, col)
+        self.blocking: List[Tuple[str, FrozenSet[str], int, int]] = []
+
+
+def _self_attr(node: ast.AST) -> str:
+    """'X' if node is self.X or self.X[...] (write target forms)."""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return ""
+
+
+def _collect(method: ast.AST, locks: Set[str]) -> _MethodFacts:
+    facts = _MethodFacts()
+
+    def scan_expr(node: ast.AST, held: FrozenSet[str]) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn = sub.func
+            if (
+                isinstance(fn, ast.Attribute)
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "self"
+            ):
+                facts.calls.append((fn.attr, held))
+            terminal = fn.attr if isinstance(fn, ast.Attribute) else None
+            if terminal in BLOCKING_NAMES:
+                facts.blocking.append((terminal, held, sub.lineno, sub.col_offset))
+
+    def visit(stmt: ast.stmt, held: FrozenSet[str]) -> None:
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            acquired = with_lock_names(stmt) & locks
+            for item in stmt.items:
+                scan_expr(item.context_expr, held)
+            for lock in sorted(acquired):
+                facts.acquires.append((held, lock, stmt.lineno, stmt.col_offset))
+            inner = held | acquired
+            for s in stmt.body:
+                visit(s, inner)
+            return
+        if isinstance(stmt, FuncDef):
+            # Nested closures run later, typically without the lock:
+            # analyze their bodies with an empty held set.
+            for s in stmt.body:
+                visit(s, frozenset())
+            return
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+            for t in targets:
+                elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+                for elt in elts:
+                    attr = _self_attr(elt)
+                    if attr and attr not in locks:
+                        facts.writes.append((attr, held, stmt.lineno, stmt.col_offset))
+            if getattr(stmt, "value", None) is not None:
+                scan_expr(stmt.value, held)
+            return
+        # Generic compound statement: scan its expressions, recurse blocks.
+        for field in ("test", "iter", "value", "exc"):
+            sub = getattr(stmt, field, None)
+            if sub is not None and isinstance(sub, ast.AST):
+                scan_expr(sub, held)
+        for field in ("body", "orelse", "finalbody"):
+            block = getattr(stmt, field, None)
+            if isinstance(block, list):
+                for s in block:
+                    if isinstance(s, ast.stmt):
+                        visit(s, held)
+        for handler in getattr(stmt, "handlers", []) or []:
+            for s in handler.body:
+                visit(s, held)
+
+    for s in method.body:
+        visit(s, frozenset())
+    return facts
+
+
+def _entry_contexts(
+    methods: Dict[str, ast.AST], facts: Dict[str, _MethodFacts]
+) -> Dict[str, Set[FrozenSet[str]]]:
+    """Fixpoint over the self-call graph: held sets at method entry."""
+    entry: Dict[str, Set[FrozenSet[str]]] = {m: set() for m in methods}
+    called = {callee for f in facts.values() for callee, _ in f.calls}
+    for name in methods:
+        if not name.startswith("_") or name not in called:
+            entry[name].add(frozenset())
+    changed = True
+    while changed:
+        changed = False
+        for caller, f in facts.items():
+            for callee, local in f.calls:
+                if callee not in entry:
+                    continue
+                # No fallback here: a caller with no contexts yet simply
+                # contributes nothing this round (monotone fixpoint).
+                for ctx in entry[caller]:
+                    eff = ctx | local
+                    if eff not in entry[callee]:
+                        entry[callee].add(eff)
+                        changed = True
+    return entry
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        for cls in iter_classes(mod.tree):
+            locks = _lock_attrs(cls)
+            if not locks:
+                continue
+            methods = {
+                node.name: node for node in cls.body if isinstance(node, FuncDef)
+            }
+            facts = {
+                name: _collect(m, locks)
+                for name, m in methods.items()
+                if name != "__init__"
+            }
+            entry = _entry_contexts(methods, facts)
+
+            # --- mixed-guard writes -----------------------------------
+            per_attr: Dict[str, List[Tuple[FrozenSet[str], str, int, int]]] = defaultdict(list)
+            for name, f in facts.items():
+                contexts = entry.get(name) or {frozenset()}
+                for attr, local, line, col in f.writes:
+                    for ctx in contexts:
+                        per_attr[attr].append((ctx | local, name, line, col))
+            for attr, sites in sorted(per_attr.items()):
+                guard_sets = [s for s, *_ in sites]
+                common = frozenset.intersection(*guard_sets)
+                if common or not any(guard_sets):
+                    continue
+                unguarded = sorted(
+                    {(line, col, name) for s, name, line, col in sites if not s}
+                )
+                majority = max(
+                    (lock for s in guard_sets for lock in s),
+                    key=lambda k: sum(1 for s in guard_sets if k in s),
+                )
+                line, col, where = unguarded[0] if unguarded else sorted(
+                    (line, col, name)
+                    for s, name, line, col in sites
+                    if majority not in s
+                )[0]
+                findings.append(
+                    Finding(
+                        RULE,
+                        mod.path,
+                        line,
+                        col,
+                        f"{cls.name}.{attr} written under inconsistent guards "
+                        f"(mostly '{majority}', but not in {where}()) — racy mixed-guard write",
+                    )
+                )
+
+            # --- acquisition order ------------------------------------
+            order_edges: Dict[Tuple[str, str], Tuple[int, int]] = {}
+            for name, f in facts.items():
+                contexts = entry.get(name) or {frozenset()}
+                for local, lock, line, col in f.acquires:
+                    for ctx in contexts:
+                        for held in ctx | local:
+                            if held != lock:
+                                order_edges.setdefault((held, lock), (line, col))
+            for (a, b), (line, col) in sorted(order_edges.items()):
+                if "store" in b and "store" not in a:
+                    findings.append(
+                        Finding(
+                            RULE,
+                            mod.path,
+                            line,
+                            col,
+                            f"{cls.name}: acquires '{b}' while holding '{a}' — "
+                            "the admission lock must never wrap the store lock",
+                        )
+                    )
+                elif (b, a) in order_edges:
+                    findings.append(
+                        Finding(
+                            RULE,
+                            mod.path,
+                            line,
+                            col,
+                            f"{cls.name}: lock-order cycle '{a}' -> '{b}' also "
+                            f"acquired as '{b}' -> '{a}' — deadlock risk",
+                        )
+                    )
+
+            # --- blocking calls under the store lock ------------------
+            seen_block = set()
+            for name, f in facts.items():
+                contexts = entry.get(name) or {frozenset()}
+                for terminal, local, line, col in f.blocking:
+                    for ctx in contexts:
+                        held = ctx | local
+                        if any("store_lock" in lock for lock in held) and (line, col) not in seen_block:
+                            seen_block.add((line, col))
+                            findings.append(
+                                Finding(
+                                    RULE,
+                                    mod.path,
+                                    line,
+                                    col,
+                                    f"{cls.name}.{name}: blocking call .{terminal}() "
+                                    "while holding the store lock — dispatch plane must not wait",
+                                )
+                            )
+    return findings

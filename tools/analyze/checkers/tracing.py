@@ -1,0 +1,194 @@
+"""REPRO005 — Pallas kernel tracing safety.
+
+Inside a kernel body (a function with ``*_ref`` parameters or one
+passed to ``pl.pallas_call``), values loaded from refs or derived from
+``pl.program_id`` are *traced*: they have no concrete value at trace
+time.  The checker taints such values and flags
+
+* Python-level ``if``/``while`` (or ``range()`` loop bounds) on a
+  traced value — use ``pl.when`` / ``jnp.where`` instead;
+* ``float()`` / ``int()`` / ``bool()`` / ``.item()`` on a traced value
+  — concretization errors under jit;
+* a traced operand in the *size* position of ``pl.ds`` /
+  ``dynamic_slice`` / ``dynamic_slice_in_dim`` — slice sizes must be
+  static.
+
+Scope: modules that import pallas (``jax.experimental.pallas``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.analyze.astutil import FuncDef, call_name
+from tools.analyze.engine import Finding, Project
+
+RULE = "REPRO005"
+
+CONCRETIZERS = {"float", "int", "bool"}
+# call name -> index of the static-size operand
+SIZE_ARG = {"ds": 1, "dslice": 1, "dynamic_slice": 2, "dynamic_slice_in_dim": 2}
+
+
+def _imports_pallas(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            module = getattr(node, "module", None) or ""
+            if "pallas" in module:
+                return True
+            if any("pallas" in alias.name for alias in node.names):
+                return True
+    return False
+
+
+def _kernel_functions(tree: ast.Module) -> List[ast.AST]:
+    by_name = {}
+    kernels = []
+    for node in ast.walk(tree):
+        if isinstance(node, FuncDef):
+            by_name[node.name] = node
+            ref_params = [
+                p.arg
+                for p in list(node.args.posonlyargs) + list(node.args.args)
+                if p.arg.endswith("_ref") or p.arg == "sems"
+            ]
+            if sum(1 for p in ref_params if p.endswith("_ref")) >= 2:
+                kernels.append(node)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and call_name(node) == "pallas_call" and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Call):  # functools.partial(kernel, ...)
+                target = target.args[0] if target.args else target
+            if isinstance(target, ast.Name) and target.id in by_name:
+                fn = by_name[target.id]
+                if fn not in kernels:
+                    kernels.append(fn)
+    return kernels
+
+
+def _ref_names(func: ast.AST) -> Set[str]:
+    names = set()
+    for group in (func.args.posonlyargs, func.args.args, func.args.kwonlyargs):
+        names.update(p.arg for p in group if p.arg.endswith("_ref"))
+    return names
+
+
+def _is_seed(node: ast.AST, refs: Set[str]) -> bool:
+    """Expression that produces a traced value directly."""
+    if isinstance(node, ast.Subscript):
+        root = node.value
+        while isinstance(root, ast.Attribute):
+            root = root.value
+        if isinstance(root, ast.Name) and root.id in refs:
+            return True
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name in ("program_id", "load", "num_programs"):
+            return True
+    return False
+
+
+def _tainted(node: ast.AST, refs: Set[str], taint: Set[str]) -> bool:
+    for sub in ast.walk(node):
+        if _is_seed(sub, refs):
+            return True
+        if isinstance(sub, ast.Name) and sub.id in taint:
+            return True
+    return False
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        if not _imports_pallas(mod.tree):
+            continue
+        for kernel in _kernel_functions(mod.tree):
+            refs = _ref_names(kernel)
+            taint: Set[str] = set()
+            # Two passes: taint can flow through later-defined helpers.
+            for _ in range(2):
+                for node in ast.walk(kernel):
+                    if isinstance(node, ast.Assign):
+                        if _tainted(node.value, refs, taint):
+                            for t in node.targets:
+                                for elt in t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]:
+                                    if isinstance(elt, ast.Name):
+                                        taint.add(elt.id)
+                    elif isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Name):
+                        if _tainted(node.value, refs, taint):
+                            taint.add(node.target.id)
+
+            for node in ast.walk(kernel):
+                if isinstance(node, (ast.If, ast.While)):
+                    if _tainted(node.test, refs, taint):
+                        kw = "while" if isinstance(node, ast.While) else "if"
+                        findings.append(
+                            Finding(
+                                RULE,
+                                mod.path,
+                                node.lineno,
+                                node.col_offset,
+                                f"Python `{kw}` on a traced value in kernel "
+                                f"{kernel.name}() — use pl.when / jnp.where",
+                            )
+                        )
+                elif isinstance(node, (ast.For, ast.AsyncFor)):
+                    it = node.iter
+                    if (
+                        isinstance(it, ast.Call)
+                        and call_name(it) == "range"
+                        and any(_tainted(a, refs, taint) for a in it.args)
+                    ):
+                        findings.append(
+                            Finding(
+                                RULE,
+                                mod.path,
+                                node.lineno,
+                                node.col_offset,
+                                f"Python loop bound traced in kernel {kernel.name}() — "
+                                "loop ranges must be static",
+                            )
+                        )
+                elif isinstance(node, ast.Call):
+                    fn_name = call_name(node)
+                    if (
+                        isinstance(node.func, ast.Name)
+                        and fn_name in CONCRETIZERS
+                        and any(_tainted(a, refs, taint) for a in node.args)
+                    ):
+                        findings.append(
+                            Finding(
+                                RULE,
+                                mod.path,
+                                node.lineno,
+                                node.col_offset,
+                                f"{fn_name}() concretizes a traced value in kernel "
+                                f"{kernel.name}()",
+                            )
+                        )
+                    elif fn_name == "item" and isinstance(node.func, ast.Attribute):
+                        findings.append(
+                            Finding(
+                                RULE,
+                                mod.path,
+                                node.lineno,
+                                node.col_offset,
+                                f".item() inside kernel {kernel.name}() — "
+                                "traced arrays have no concrete value",
+                            )
+                        )
+                    elif fn_name in SIZE_ARG:
+                        idx = SIZE_ARG[fn_name]
+                        if len(node.args) > idx and _tainted(node.args[idx], refs, taint):
+                            findings.append(
+                                Finding(
+                                    RULE,
+                                    mod.path,
+                                    node.lineno,
+                                    node.col_offset,
+                                    f"non-static size passed to {fn_name}() in kernel "
+                                    f"{kernel.name}() — slice sizes must be static",
+                                )
+                            )
+    return findings

@@ -1,0 +1,106 @@
+"""REPRO003 — write-ahead ordering for journaled store mutations.
+
+Contract (PR 8): in ``core/journal.py`` / ``core/partition.py`` /
+``core/version_graph.py``, a journal append of a DATA-kind record
+(``DATA_KINDS`` parsed from journal.py — commits, migration commits,
+repartitions) must be fsynced (``sync=True``) and must lexically
+precede every in-memory store swap in the mutating function: stage into
+locals, append+fsync, then swap fields.  A ``self.X = ...`` (or
+parameter-rooted) mutation before the DATA append means a crash between
+the two loses an acknowledged state change — RPO is no longer zero.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Sequence, Set
+
+from tools.analyze.astutil import (
+    call_name,
+    enclosing_function,
+    func_params,
+    is_store_mutation,
+    iter_functions,
+)
+from tools.analyze.engine import Finding, Project
+
+RULE = "REPRO003"
+
+SCOPED_FILES = ("journal.py", "partition.py", "version_graph.py")
+
+DEFAULT_DATA_KINDS = ("commit", "commit.batch", "migration.commit", "repartition")
+
+
+def _data_kinds(project: Project) -> Set[str]:
+    mod = project.find("core/journal.py", "journal.py")
+    if mod is not None:
+        for node in mod.tree.body:
+            if isinstance(node, ast.Assign):
+                for target in node.targets:
+                    if isinstance(target, ast.Name) and target.id == "DATA_KINDS":
+                        try:
+                            return set(ast.literal_eval(node.value))
+                        except (ValueError, SyntaxError):
+                            pass
+    return set(DEFAULT_DATA_KINDS)
+
+
+def _data_appends(func: ast.AST, kinds: Set[str]) -> Sequence[ast.Call]:
+    calls = []
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Call) or call_name(node) != "append":
+            continue
+        if not node.args:
+            continue
+        kind = node.args[0]
+        if isinstance(kind, ast.Constant) and kind.value in kinds:
+            calls.append(node)
+    return calls
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    kinds = _data_kinds(project)
+    for mod in project.modules:
+        name = mod.path.replace("\\", "/").rsplit("/", 1)[-1]
+        if name not in SCOPED_FILES:
+            continue
+        for func in iter_functions(mod.tree):
+            appends = _data_appends(func, kinds)
+            if not appends:
+                continue
+            params = func_params(func)
+            for call in appends:
+                kind = call.args[0].value
+                sync = next((kw.value for kw in call.keywords if kw.arg == "sync"), None)
+                if not (isinstance(sync, ast.Constant) and sync.value is True):
+                    findings.append(
+                        Finding(
+                            RULE,
+                            mod.path,
+                            call.lineno,
+                            call.col_offset,
+                            f"DATA-kind journal append('{kind}') without sync=True — "
+                            "the record may not be durable before the in-memory swap",
+                        )
+                    )
+            first_append = min(c.lineno for c in appends)
+            for node in ast.walk(func):
+                if not isinstance(node, ast.stmt) or node.lineno >= first_append:
+                    continue
+                if enclosing_function(mod.tree, node) is not func:
+                    continue  # statement belongs to a nested closure
+                if is_store_mutation(node, params):
+                    findings.append(
+                        Finding(
+                            RULE,
+                            mod.path,
+                            node.lineno,
+                            node.col_offset,
+                            "store mutation precedes the DATA-kind journal append "
+                            f"at line {first_append} — stage into locals, append+fsync, "
+                            "then swap",
+                        )
+                    )
+                    break
+    return findings

@@ -1,0 +1,216 @@
+"""repro-analyze engine: file loading, suppression, baseline, reporting.
+
+The engine walks the given paths, parses every ``.py`` file once, hands
+the parsed project to each registered checker, then filters the raw
+findings through per-line ``# noqa: REPRO0xx`` suppressions and the
+committed baseline before reporting.
+
+Baseline entries match on ``(rule, path, message)`` — checker messages
+are written line-free so a finding survives unrelated edits above it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import re
+import sys
+from dataclasses import dataclass, asdict
+from typing import Dict, Iterable, List, Optional, Sequence
+
+_NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9_,\s]+))?", re.IGNORECASE)
+
+# Directories never scanned: unused seed modules + caches (satellite:
+# dead seed code must not mask real findings, so it is out of scope).
+EXCLUDE_DIRS = {"models", "configs", "data", "__pycache__", ".git"}
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def key(self):
+        return (self.rule, self.path, self.message)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclass
+class Module:
+    path: str
+    source: str
+    tree: ast.Module
+    lines: List[str]
+
+
+class Project:
+    """Parsed view of the analyzed tree."""
+
+    def __init__(self, modules: Sequence[Module]):
+        self.modules = list(modules)
+
+    def find(self, *suffixes: str) -> Optional[Module]:
+        """First module whose normalized path ends with any suffix."""
+        for suffix in suffixes:
+            norm = suffix.replace("\\", "/")
+            for mod in self.modules:
+                if mod.path.replace("\\", "/").endswith(norm):
+                    return mod
+        return None
+
+    def matching(self, fragment: str) -> List[Module]:
+        frag = fragment.replace("\\", "/")
+        return [m for m in self.modules if frag in m.path.replace("\\", "/")]
+
+
+def _iter_py_files(paths: Iterable[str]) -> Iterable[str]:
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py"):
+                yield path
+            continue
+        for dirpath, dirnames, filenames in os.walk(path):
+            dirnames[:] = sorted(d for d in dirnames if d not in EXCLUDE_DIRS)
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def load_project(paths: Sequence[str]) -> Project:
+    modules = []
+    for path in _iter_py_files(paths):
+        with open(path, "r", encoding="utf-8") as f:
+            source = f.read()
+        rel = os.path.relpath(path) if os.path.isabs(path) else path
+        try:
+            tree = ast.parse(source, filename=rel)
+        except SyntaxError as exc:  # pragma: no cover - tree is expected valid
+            raise SystemExit(f"repro-analyze: cannot parse {rel}: {exc}")
+        modules.append(Module(path=rel, source=source, tree=tree, lines=source.splitlines()))
+    return Project(modules)
+
+
+def _suppressed(finding: Finding, project: Project) -> bool:
+    mod = None
+    for m in project.modules:
+        if m.path == finding.path:
+            mod = m
+            break
+    if mod is None or not (1 <= finding.line <= len(mod.lines)):
+        return False
+    match = _NOQA_RE.search(mod.lines[finding.line - 1])
+    if not match:
+        return False
+    codes = match.group("codes")
+    if codes is None:
+        return True  # bare `# noqa` silences everything on the line
+    wanted = {c.strip().upper() for c in codes.split(",") if c.strip()}
+    return finding.rule.upper() in wanted
+
+
+def load_baseline(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise SystemExit(f"repro-analyze: baseline {path} must be a JSON list")
+    return data
+
+
+def run(
+    paths: Sequence[str],
+    rules: Optional[Sequence[str]] = None,
+    baseline_path: Optional[str] = DEFAULT_BASELINE,
+) -> Dict[str, object]:
+    """Run all (or selected) checkers; return a machine-readable report."""
+    from tools.analyze.checkers import REGISTRY
+
+    project = load_project(paths)
+    selected = {r.upper() for r in rules} if rules else None
+    raw: List[Finding] = []
+    ran: List[str] = []
+    for rule_id, checker in sorted(REGISTRY.items()):
+        if selected is not None and rule_id not in selected:
+            continue
+        ran.append(rule_id)
+        raw.extend(checker(project))
+    raw.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+
+    suppressed = [f for f in raw if _suppressed(f, project)]
+    active = [f for f in raw if not _suppressed(f, project)]
+
+    baseline_keys = set()
+    if baseline_path:
+        for entry in load_baseline(baseline_path):
+            baseline_keys.add((entry.get("rule"), entry.get("path"), entry.get("message")))
+    baselined = [f for f in active if f.key() in baseline_keys]
+    new = [f for f in active if f.key() not in baseline_keys]
+
+    return {
+        "version": 1,
+        "rules": ran,
+        "findings": [asdict(f) for f in new],
+        "baselined": [asdict(f) for f in baselined],
+        "counts": {
+            "total": len(raw),
+            "suppressed": len(suppressed),
+            "baselined": len(baselined),
+            "new": len(new),
+        },
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="repro-analyze: AST invariant lint suite (REPRO001-REPRO006)",
+    )
+    parser.add_argument("paths", nargs="+", help="files or directories to analyze")
+    parser.add_argument("--json", action="store_true", help="emit machine-readable JSON")
+    parser.add_argument(
+        "--rules",
+        help="comma-separated rule IDs to run (default: all)",
+    )
+    parser.add_argument(
+        "--baseline",
+        default=DEFAULT_BASELINE,
+        help="baseline JSON path (default: tools/analyze/baseline.json)",
+    )
+    parser.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="ignore the baseline: report every unsuppressed finding",
+    )
+    args = parser.parse_args(argv)
+
+    rules = [r.strip() for r in args.rules.split(",")] if args.rules else None
+    baseline = None if args.no_baseline else args.baseline
+    report = run(args.paths, rules=rules, baseline_path=baseline)
+
+    if args.json:
+        json.dump(report, sys.stdout, indent=2)
+        sys.stdout.write("\n")
+    else:
+        for entry in report["findings"]:
+            print(Finding(**entry).render())
+        counts = report["counts"]
+        print(
+            f"repro-analyze: {counts['new']} finding(s) "
+            f"({counts['suppressed']} suppressed, {counts['baselined']} baselined) "
+            f"across {len(report['rules'])} rule(s)"
+        )
+    return 1 if report["findings"] else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(main())
